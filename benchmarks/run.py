@@ -1,0 +1,299 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+  * fig2_convex      : estimation error, PDSGD vs conventional DSGD
+  * fig3_nonconvex   : decentralized digits training accuracy parity
+  * fig5_dlg         : DLG attacker MSE, conventional vs PDSGD
+  * table1_dp        : DP-noise baseline accuracy/DLG-error trade-off
+  * remark5_entropy  : Thm 5 privacy bound (numeric vs closed form)
+  * kernel_*         : Pallas kernel (interpret) vs jnp-oracle timing
+"""
+from __future__ import annotations
+
+import sys
+import os
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+ROWS = []
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    row = f"{name},{us_per_call:.1f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+def _timeit(fn, n=5):
+    fn()  # warmup/compile
+    t0 = time.perf_counter()
+    for _ in range(n):
+        jax.block_until_ready(fn())
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+# ---------------------------------------------------------------------------
+
+def fig2_convex(iters=1200, runs=3):
+    from repro.core import init_state, make_decentralized_step, make_topology
+    from repro.core.schedules import paper_experiment
+    from repro.data import estimation_problem
+
+    top = make_topology("paper_fig1", 5)
+    prob = estimation_problem(5, d=2, s=3, n_per_agent=100, seed=0)
+    Z, M = jnp.asarray(prob["Z"]), jnp.asarray(prob["M"])
+
+    def loss_fn(p, batch):
+        z, Mi = batch
+        return jnp.mean(jnp.sum((z - p @ Mi.T) ** 2, -1))
+
+    def run(algo, seed):
+        step = make_decentralized_step(loss_fn, top, paper_experiment(0.05),
+                                       algorithm=algo)
+        state = init_state(jnp.zeros((2,)), 5)
+        key = jax.random.key(seed)
+        t0 = time.perf_counter()
+        for k in range(iters):
+            key, sk, bk = jax.random.split(key, 3)
+            idx = jax.random.randint(bk, (5, 8), 0, 100)
+            state, aux = step(state, (Z[jnp.arange(5)[:, None], idx], M), sk)
+        dt = (time.perf_counter() - t0) / iters * 1e6
+        xbar = np.asarray(jax.tree.leaves(state.params)[0]).mean(0)
+        return np.linalg.norm(xbar - prob["theta_opt"]), dt
+
+    for algo in ("pdsgd", "dsgd"):
+        errs, dts = zip(*[run(algo, s) for s in range(runs)])
+        emit(f"fig2_convex_{algo}", float(np.mean(dts)),
+             f"final_err={np.mean(errs):.5f}")
+
+
+def fig3_nonconvex(steps=400):
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
+                                    "examples"))
+    import decentralized_learning as DL
+    from repro.core import init_state, make_decentralized_step, make_topology
+    from repro.core.schedules import warmup_harmonic
+    from repro.data import noniid_partition, synthetic_digits
+
+    m = 5
+    top = make_topology("paper_fig1", m)
+    x, y = synthetic_digits(3000, seed=0, size=8, classes=10)
+    xv, yv = synthetic_digits(600, seed=1, size=8, classes=10)
+    parts = noniid_partition(y, m, alpha=1.0, seed=0)
+    for algo in ("pdsgd", "dsgd"):
+        step = make_decentralized_step(DL.loss_fn, top,
+                                       warmup_harmonic(0.5, hold=100),
+                                       algorithm=algo)
+        state = init_state(DL.conv_net_init(jax.random.key(0)), m)
+        key = jax.random.key(1)
+        rng = np.random.default_rng(0)
+        t0 = time.perf_counter()
+        for k in range(steps):
+            key, sk = jax.random.split(key)
+            idxs = [rng.choice(p_, 16) for p_ in parts]
+            bx = np.stack([x[i] for i in idxs])
+            by = np.stack([y[i] for i in idxs])
+            state, aux = step(state, (jnp.asarray(bx), jnp.asarray(by)), sk)
+        dt = (time.perf_counter() - t0) / steps * 1e6
+        va = DL.accuracy(state.params, jnp.asarray(xv), jnp.asarray(yv))
+        emit(f"fig3_nonconvex_{algo}", dt, f"val_acc={va:.3f}")
+
+
+def _dlg_setup():
+    from repro.data import synthetic_digits
+    rng = np.random.default_rng(0)
+    params = {
+        "w1": jnp.asarray(rng.normal(size=(64, 32)).astype(np.float32) * 0.2),
+        "b1": jnp.zeros((32,)),
+        "w2": jnp.asarray(rng.normal(size=(32, 10)).astype(np.float32) * 0.2),
+        "b2": jnp.zeros((10,)),
+    }
+
+    def loss(params, x, soft):
+        h = jnp.tanh(x.reshape(x.shape[0], -1) @ params["w1"] + params["b1"])
+        logits = h @ params["w2"] + params["b2"]
+        return -jnp.mean(jnp.sum(soft * jax.nn.log_softmax(logits), -1))
+
+    x, y = synthetic_digits(1, seed=7, size=8, classes=10)
+    x = jnp.asarray(x)
+    soft = jax.nn.one_hot(jnp.asarray(y), 10)
+    g = jax.grad(loss)(params, x, soft)
+    return params, loss, x, soft, g
+
+
+def fig5_dlg(steps=500):
+    from repro.core.attacks import dlg_attack
+    from repro.core.privacy import obfuscated_gradient
+    params, loss, x, soft, g = _dlg_setup()
+    t0 = time.perf_counter()
+    res = dlg_attack(loss, params, g, x.shape, 10, key=jax.random.key(0),
+                     steps=steps, lr=0.1, true_x=x)
+    dt = (time.perf_counter() - t0) / steps * 1e6
+    mse_conv = float(jnp.mean((res.recon_x - x) ** 2))
+    emit("fig5_dlg_conventional", dt, f"attacker_mse={mse_conv:.5f}")
+    obs = obfuscated_gradient(jax.random.key(9), g, jnp.float32(0.05))
+    res2 = dlg_attack(loss, params, obs, x.shape, 10, key=jax.random.key(0),
+                      steps=steps, lr=0.1, true_x=x)
+    mse_ours = float(jnp.mean((res2.recon_x - x) ** 2))
+    emit("fig5_dlg_pdsgd", dt,
+         f"attacker_mse={mse_ours:.5f};degradation={mse_ours/max(mse_conv,1e-9):.1f}x")
+
+
+def table1_dp(steps=500):
+    """DP baseline: additive Gaussian noise trades DLG error for gradient
+    distortion (accuracy); PDSGD (fig3/fig5 rows) needs no such trade."""
+    from repro.core.attacks import dlg_attack
+    params, loss, x, soft, g = _dlg_setup()
+    for sigma in (0.0, 1e-3, 1e-2, 1e-1):
+        noisy = jax.tree.map(
+            lambda a: a + sigma * jax.random.normal(jax.random.key(5),
+                                                    a.shape), g)
+        t0 = time.perf_counter()
+        res = dlg_attack(loss, params, noisy, x.shape, 10,
+                         key=jax.random.key(0), steps=steps, lr=0.1, true_x=x)
+        dt = (time.perf_counter() - t0) / steps * 1e6
+        mse = float(jnp.mean((res.recon_x - x) ** 2))
+        gn = float(sum(jnp.sum(a ** 2) for a in jax.tree.leaves(g))) ** 0.5
+        nn = float(sum(jnp.sum((a - b) ** 2) for a, b in
+                       zip(jax.tree.leaves(noisy), jax.tree.leaves(g)))) ** 0.5
+        emit(f"table1_dp_sigma{sigma:g}", dt,
+             f"attacker_mse={mse:.5f};grad_distortion={nn/gn:.3f}")
+
+
+def remark5_entropy():
+    from repro.core import entropy as E
+    for kappa in (1.0, 5.0, 20.0):
+        t0 = time.perf_counter()
+        th_num = E.theta_numeric(0.01, kappa)
+        dt = (time.perf_counter() - t0) * 1e6
+        th_cl = E.theta_closed(0.01, kappa)
+        emit(f"remark5_entropy_k{kappa:g}", dt,
+             f"theta_num={th_num:.4f};theta_closed={th_cl:.4f};"
+             f"mse_bound={E.mse_lower_bound(th_cl):.4f}")
+
+
+def comm_cost(iters=1200, runs=2):
+    """Sec. I claim: gradient-tracking methods [49,50] must share TWO
+    variables (x and the tracker y) per iteration; PDSGD shares ONE mixed
+    v_ij.  Row reports bytes/edge/iteration (d floats each) + final error
+    of DSGT on the fig2 estimation problem for accuracy context."""
+    import numpy as np_
+    from repro.core import make_topology
+    from repro.core.pdsgd import dsgt_update
+    from repro.data import estimation_problem
+
+    top = make_topology("paper_fig1", 5)
+    prob = estimation_problem(5, d=2, s=3, n_per_agent=100, seed=0)
+    Z, M = jnp.asarray(prob["Z"]), jnp.asarray(prob["M"])
+    W = jnp.asarray(top.weights, jnp.float32)
+    d = 2
+
+    def grad(p, idx):  # stochastic gradient of the per-agent quadratic
+        z = Z[jnp.arange(5)[:, None], idx]
+        def g1(pi, zi, Mi):
+            return jax.grad(lambda p_: jnp.mean(
+                jnp.sum((zi - p_ @ Mi.T) ** 2, -1)))(pi)
+        return jax.vmap(g1)(p, z, M)
+
+    errs = []
+    for seed in range(runs):
+        rng = np_.random.default_rng(seed)
+        x = jnp.zeros((5, d))
+        idx = jnp.asarray(rng.integers(0, 100, (5, 8)))
+        g = grad(x, idx)
+        y = g
+        t0 = time.perf_counter()
+        for k in range(iters):
+            lam = jnp.float32(0.05 / (k + 1.0))
+            x_n, _ = dsgt_update(x, y, g, g, W=W, lam=lam)
+            idx = jnp.asarray(rng.integers(0, 100, (5, 8)))
+            g_n = grad(x_n, idx)
+            _, y = dsgt_update(x, y, g_n, g, W=W, lam=lam)
+            x, g = x_n, g_n
+        dt = (time.perf_counter() - t0) / iters * 1e6
+        xbar = np_.asarray(x).mean(0)
+        errs.append(np_.linalg.norm(xbar - prob["theta_opt"]))
+    emit("comm_cost_dsgt", dt,
+         f"final_err={np_.mean(errs):.5f};bytes_per_edge_iter={2*d*4}")
+    emit("comm_cost_pdsgd", 0.0,
+         f"bytes_per_edge_iter={d*4};half_of_dsgt=True")
+
+
+def remark7_lambda_ablation(steps=300):
+    """Beyond-paper ablation (Remark 7): empirical DLG error vs lam_bar.
+    Theory (our closed form, DESIGN.md §1): h(g|λg) = log κ − γ_EM is
+    *independent* of lam_bar — the protection comes from the multiplicative
+    structure, not the stepsize magnitude.  The DLG attacker's empirical
+    error should therefore stay high across lam_bar scales."""
+    from repro.core.attacks import dlg_attack
+    from repro.core.privacy import obfuscated_gradient
+    params, loss, x, soft, g = _dlg_setup()
+    for lam in (0.005, 0.05, 0.5):
+        obs = obfuscated_gradient(jax.random.key(9), g, jnp.float32(lam))
+        t0 = time.perf_counter()
+        res = dlg_attack(loss, params, obs, x.shape, 10,
+                         key=jax.random.key(0), steps=steps, lr=0.1,
+                         true_x=x)
+        dt = (time.perf_counter() - t0) / steps * 1e6
+        mse = float(jnp.mean((res.recon_x - x) ** 2))
+        emit(f"remark7_lambda{lam:g}", dt, f"attacker_mse={mse:.5f}")
+
+
+def kernel_benches():
+    from repro.kernels import (flash_attention, gossip_update,
+                               obfuscate_update, ssd_intra_chunk)
+    from repro.kernels import ref
+    rng = np.random.default_rng(0)
+
+    q = jnp.asarray(rng.normal(size=(2, 256, 4, 64)).astype(np.float32))
+    us_k = _timeit(lambda: flash_attention(q, q, q, causal=True, bq=64,
+                                           bk=64), n=3)
+    us_r = _timeit(lambda: ref.flash_attention_ref(q, q, q, causal=True), n=3)
+    emit("kernel_flash_attention", us_k, f"ref_us={us_r:.1f};interpret=True")
+
+    W = jnp.asarray(rng.dirichlet(np.ones(16), 16).T.astype(np.float32))
+    X = jnp.asarray(rng.normal(size=(16, 65536)).astype(np.float32))
+    us_k = _timeit(lambda: gossip_update(W, W, X, X), n=3)
+    us_r = _timeit(lambda: ref.gossip_ref(W, W, X, X), n=3)
+    emit("kernel_gossip", us_k, f"ref_us={us_r:.1f}")
+
+    x = jnp.asarray(rng.normal(size=(16, 4096)).astype(np.float32))
+    bits = jax.random.bits(jax.random.key(0), x.shape, dtype=jnp.uint32)
+    us_k = _timeit(lambda: obfuscate_update(x, x, bits, 0.1, 0.5, 0.3,
+                                            block=(16, 512)), n=3)
+    us_r = _timeit(lambda: ref.obfuscate_ref(x, x, bits, 0.1, 0.5, 0.3), n=3)
+    emit("kernel_obfuscate", us_k, f"ref_us={us_r:.1f}")
+
+    xs = jnp.asarray(rng.normal(size=(4, 64, 2, 8)).astype(np.float32))
+    dt_ = jnp.abs(jnp.asarray(rng.normal(size=(4, 64, 2)).astype(np.float32)))
+    acum = jnp.cumsum(dt_ * -0.5, axis=1)
+    Bm = jnp.asarray(rng.normal(size=(4, 64, 16)).astype(np.float32))
+    us_k = _timeit(lambda: ssd_intra_chunk(xs, dt_, acum, Bm, Bm), n=3)
+    us_r = _timeit(lambda: ref.ssd_intra_chunk_ref(xs, dt_, acum, Bm, Bm), n=3)
+    emit("kernel_ssd_chunk", us_k, f"ref_us={us_r:.1f}")
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    remark5_entropy()
+    fig2_convex()
+    fig5_dlg()
+    table1_dp()
+    remark7_lambda_ablation()
+    comm_cost()
+    kernel_benches()
+    fig3_nonconvex()
+    out = os.path.join(os.path.dirname(__file__), "results",
+                       "bench_results.csv")
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        f.write("name,us_per_call,derived\n" + "\n".join(ROWS) + "\n")
+
+
+if __name__ == '__main__':
+    main()

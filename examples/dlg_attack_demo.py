@@ -1,0 +1,68 @@
+"""Sec. VII-B privacy evaluation (Fig. 4/5): the DLG gradient-inversion
+attacker [Zhu et al. '19] eavesdrops shared updates.  Against conventional
+DSGD it reconstructs the training image; against PDSGD's obfuscated
+updates its error stays high.
+
+  PYTHONPATH=src python examples/dlg_attack_demo.py [--steps 800]
+"""
+import argparse
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.attacks import dlg_attack
+from repro.core.privacy import obfuscated_gradient
+from repro.data import synthetic_digits
+
+SIZE, CLASSES = 8, 10
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--steps", type=int, default=800)
+    p.add_argument("--lam-bar", type=float, default=0.05)
+    args = p.parse_args()
+
+    rng = np.random.default_rng(0)
+    params = {
+        "w1": jnp.asarray(rng.normal(size=(SIZE * SIZE, 32)).astype(np.float32) * 0.2),
+        "b1": jnp.zeros((32,)),
+        "w2": jnp.asarray(rng.normal(size=(32, CLASSES)).astype(np.float32) * 0.2),
+        "b2": jnp.zeros((CLASSES,)),
+    }
+
+    def loss(params, x, soft):
+        h = jnp.tanh(x.reshape(x.shape[0], -1) @ params["w1"] + params["b1"])
+        logits = h @ params["w2"] + params["b2"]
+        return -jnp.mean(jnp.sum(soft * jax.nn.log_softmax(logits), -1))
+
+    x, y = synthetic_digits(1, seed=7, size=SIZE, classes=CLASSES)
+    x = jnp.asarray(x)
+    soft = jax.nn.one_hot(jnp.asarray(y), CLASSES)
+    g = jax.grad(loss)(params, x, soft)
+
+    print("# attack on CONVENTIONAL DSGD (adversary recovers exact gradient"
+          " from shared x and public W, lambda):")
+    res = dlg_attack(loss, params, g, x.shape, CLASSES,
+                     key=jax.random.key(0), steps=args.steps, lr=0.1, true_x=x)
+    mse_conv = float(jnp.mean((res.recon_x - x) ** 2))
+    print(f"  reconstruction MSE: {mse_conv:.5f}  "
+          f"(label recovered: {int(jnp.argmax(res.recon_label_logits)) == int(y[0])})")
+
+    print("# attack on PDSGD (adversary sees Lambda ∘ g, Lambda private"
+          f" U[0, {2*args.lam_bar}] per element):")
+    obs = obfuscated_gradient(jax.random.key(9), g, jnp.float32(args.lam_bar))
+    res2 = dlg_attack(loss, params, obs, x.shape, CLASSES,
+                      key=jax.random.key(0), steps=args.steps, lr=0.1,
+                      true_x=x)
+    mse_ours = float(jnp.mean((res2.recon_x - x) ** 2))
+    print(f"  reconstruction MSE: {mse_ours:.5f}")
+    print(f"# degradation factor: {mse_ours / max(mse_conv, 1e-9):.1f}x "
+          f"(paper Fig. 5: attacker error stays large under PDSGD)")
+
+
+if __name__ == "__main__":
+    main()

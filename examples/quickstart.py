@@ -1,0 +1,69 @@
+"""Quickstart: the paper's Sec. VII-A decentralized estimation problem
+(Fig. 2) — 5 sensors on the Fig. 1 graph estimate an unknown parameter
+with inherently privacy-preserving decentralized SGD, compared against
+conventional DSGD [Lian et al. '17].
+
+  PYTHONPATH=src python examples/quickstart.py [--iters 2000] [--runs 8]
+"""
+import argparse
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import init_state, make_decentralized_step, make_topology
+from repro.core.schedules import paper_experiment
+from repro.data import estimation_problem
+
+
+def run(algorithm, prob, top, iters, seed):
+    Z, M = jnp.asarray(prob["Z"]), jnp.asarray(prob["M"])
+    d = M.shape[-1]
+
+    def loss_fn(p, batch):
+        z, Mi = batch
+        return jnp.mean(jnp.sum((z - p @ Mi.T) ** 2, -1))
+
+    step = make_decentralized_step(loss_fn, top, paper_experiment(0.05),
+                                   algorithm=algorithm)
+    state = init_state(jnp.zeros((d,)), top.num_agents)
+    key = jax.random.key(seed)
+    errs = []
+    for k in range(iters):
+        key, sk, bk = jax.random.split(key, 3)
+        idx = jax.random.randint(bk, (top.num_agents, 8), 0, Z.shape[1])
+        batch = (Z[jnp.arange(top.num_agents)[:, None], idx], M)
+        state, aux = step(state, batch, sk)
+        if k % 50 == 0 or k == iters - 1:
+            xbar = np.asarray(jax.tree.leaves(state.params)[0]).mean(0)
+            errs.append((k, float(np.linalg.norm(xbar - prob["theta_opt"]))))
+    return errs
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--iters", type=int, default=2000)
+    p.add_argument("--runs", type=int, default=4)
+    args = p.parse_args()
+
+    top = make_topology("paper_fig1", 5)
+    print(f"# 5 agents on the paper's Fig.1 graph, rho={top.rho:.4f}")
+    print("# iter, err(PDSGD ours), err(conventional DSGD)")
+    acc = {}
+    for algo in ("pdsgd", "dsgd"):
+        runs = []
+        for s in range(args.runs):
+            prob = estimation_problem(5, d=2, s=3, n_per_agent=100, seed=0)
+            runs.append(run(algo, prob, top, args.iters, seed=s))
+        acc[algo] = np.mean([[e for _, e in r] for r in runs], axis=0)
+    iters = [k for k, _ in runs[0]]
+    for i, k in enumerate(iters):
+        print(f"{k:6d}, {acc['pdsgd'][i]:.5f}, {acc['dsgd'][i]:.5f}")
+    print(f"# final: PDSGD={acc['pdsgd'][-1]:.5f} DSGD={acc['dsgd'][-1]:.5f} "
+          f"-> privacy at NO accuracy cost (paper Fig. 2)")
+
+
+if __name__ == "__main__":
+    main()

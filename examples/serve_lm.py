@@ -1,0 +1,13 @@
+"""Batched serving example: prefill + KV-cache decode on the granite-8b
+family (reduced preset on CPU).
+
+  PYTHONPATH=src python examples/serve_lm.py
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch import serve
+
+if __name__ == "__main__":
+    raise SystemExit(serve.main(["--arch", "granite-8b-smoke", "--batch", "2",
+                                 "--prompt-len", "32", "--gen-tokens", "16"]))

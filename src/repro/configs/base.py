@@ -1,0 +1,121 @@
+"""Architecture + input-shape configuration system.
+
+Every assigned architecture gets a module ``configs/<id>.py`` exporting
+``CONFIG`` (exact assigned hyperparameters, source cited) and the registry
+here resolves names, reduced smoke variants, and the four input shapes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+__all__ = ["ArchConfig", "InputShape", "INPUT_SHAPES", "reduced_variant"]
+
+Family = Literal["dense", "moe", "ssm_mamba2", "hybrid", "xlstm", "encdec",
+                 "vlm", "audio"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: Family
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 128
+    # --- attention flavour ---
+    rotary_frac: float = 1.0          # partial rotary (stablelm .25, chatglm .5)
+    rope_theta: float = 10000.0
+    attn_window: int | None = None    # sliding-window (set for long_500k)
+    long_context_mode: Literal["window", "full_kv"] = "window"
+    attn_impl: Literal["naive", "chunked"] = "naive"  # §Perf: blocked flash
+    attn_chunk: int = 4096            # q/kv block for attn_impl="chunked"
+    # §Perf: "full" remat recomputes the whole layer in bwd (recomputing the
+    # TP all-reduces); "save_collectives" checkpoints the post-all-reduce
+    # attn/ffn outputs so each fwd collective runs once.
+    remat_policy: Literal["full", "save_collectives"] = "full"
+    norm: Literal["rmsnorm", "layernorm"] = "rmsnorm"
+    mlp: Literal["swiglu", "gelu"] = "swiglu"
+    tie_embeddings: bool = True
+    # --- MoE ---
+    num_experts: int = 0
+    num_experts_per_tok: int = 0
+    capacity_factor: float = 1.25
+    moe_impl: Literal["allreduce", "deferred"] = "allreduce"  # §Perf knob
+    # --- SSM / hybrid (mamba2) ---
+    ssm_state: int = 0
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    hybrid_attn_every: int = 6        # zamba2: shared attn block cadence
+    hybrid_num_shared: int = 2        # zamba2: alternating shared blocks
+    # --- enc-dec (audio) ---
+    num_encoder_layers: int = 0
+    cross_attn_window: int | None = None  # local cross-attn for long ctx
+    # --- vlm/audio stub frontend ---
+    num_prefix_embeds: int = 0        # image/audio tokens provided as embeds
+    # --- xlstm ---
+    slstm_every: int = 2              # every Nth block is sLSTM
+    # --- numerics / source ---
+    dtype: str = "bfloat16"
+    source: str = ""
+
+    @property
+    def d_inner(self) -> int:  # mamba2 inner width
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: Literal["train", "prefill", "decode"]
+
+
+INPUT_SHAPES: dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+def reduced_variant(cfg: ArchConfig) -> ArchConfig:
+    """Reduced same-family variant for CPU smoke tests:
+    2 layers, d_model <= 512, <= 4 experts, small vocab."""
+    d_model = min(cfg.d_model, 256)
+    head_dim = 32
+    heads = max(2, min(cfg.num_heads, d_model // head_dim))
+    kv = max(1, min(cfg.num_kv_heads, heads))
+    while heads % kv:
+        kv -= 1
+    return dataclasses.replace(
+        cfg,
+        name=cfg.name + "-smoke",
+        num_layers=2,
+        d_model=d_model,
+        num_heads=heads,
+        num_kv_heads=kv,
+        head_dim=head_dim,
+        d_ff=min(cfg.d_ff, 512) if cfg.d_ff else 0,
+        vocab_size=min(cfg.vocab_size, 1024),
+        num_experts=min(cfg.num_experts, 4) if cfg.num_experts else 0,
+        num_experts_per_tok=min(cfg.num_experts_per_tok, 2)
+        if cfg.num_experts_per_tok else 0,
+        ssm_state=min(cfg.ssm_state, 16) if cfg.ssm_state else 0,
+        ssm_head_dim=32 if cfg.ssm_state else cfg.ssm_head_dim,
+        num_encoder_layers=min(cfg.num_encoder_layers, 2)
+        if cfg.num_encoder_layers else 0,
+        hybrid_attn_every=2,
+        num_prefix_embeds=min(cfg.num_prefix_embeds, 16)
+        if cfg.num_prefix_embeds else 0,
+        dtype="float32",
+    )

@@ -1,0 +1,10 @@
+"""granite-8b [arXiv:2405.04324]: llama-arch code model, 36L d_model=4096
+32H (GQA kv=8) d_ff=14336 vocab=49152."""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="granite-8b", family="dense",
+    num_layers=36, d_model=4096, num_heads=32, num_kv_heads=8,
+    d_ff=14336, vocab_size=49152, head_dim=128,
+    source="arXiv:2405.04324",
+)

@@ -1,0 +1,13 @@
+"""mistral-nemo-12b [hf:mistralai/Mistral-Nemo-Base-2407]: dense decoder,
+40L d_model=5120 32H (GQA kv=8) d_ff=14336 vocab=131072, 128k context.
+long_500k uses the FULL sharded-KV flash-decode path (the arch is the
+assigned long-context representative), not the sliding window."""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="mistral-nemo-12b", family="dense",
+    num_layers=40, d_model=5120, num_heads=32, num_kv_heads=8,
+    d_ff=14336, vocab_size=131072, head_dim=128,
+    rope_theta=1_000_000.0, long_context_mode="full_kv",
+    source="hf:mistralai/Mistral-Nemo-Base-2407",
+)

@@ -1,0 +1,34 @@
+"""Core: the paper's inherently privacy-preserving decentralized SGD."""
+from .topology import Topology, make_topology, metropolis_weights, spectral_gap
+from .schedules import Schedule, harmonic, paper_experiment, polynomial, check_conditions
+from .privacy import sample_B, sample_lambda_tree, obfuscated_gradient, agent_key
+from .pdsgd import (
+    DecentralizedState,
+    make_decentralized_step,
+    pdsgd_update,
+    dsgd_update,
+    dp_dsgd_update,
+    gossip_mix,
+    consensus_error,
+    init_state,
+    replicate_params,
+)
+from .entropy import (
+    theta_closed,
+    theta_numeric,
+    mse_lower_bound,
+    conditional_entropy_closed,
+)
+from .attacks import dlg_attack, DLGResult
+
+__all__ = [
+    "Topology", "make_topology", "metropolis_weights", "spectral_gap",
+    "Schedule", "harmonic", "paper_experiment", "polynomial", "check_conditions",
+    "sample_B", "sample_lambda_tree", "obfuscated_gradient", "agent_key",
+    "DecentralizedState", "make_decentralized_step", "pdsgd_update",
+    "dsgd_update", "dp_dsgd_update", "gossip_mix", "consensus_error",
+    "init_state", "replicate_params",
+    "theta_closed", "theta_numeric", "mse_lower_bound",
+    "conditional_entropy_closed",
+    "dlg_attack", "DLGResult",
+]

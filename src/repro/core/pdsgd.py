@@ -1,0 +1,221 @@
+"""The paper's inherently privacy-preserving decentralized SGD (Eq. 3/4),
+plus the two comparison baselines it is evaluated against:
+
+  * ``pdsgd``        : x^{k+1} = W x^k - B^k (Lambda^k ∘ g^k)       (ours/paper)
+  * ``dsgd``         : x^{k+1} = W x^k - lam^k g^k                  (Lian et al. [19])
+  * ``dp_dsgd``      : dsgd with N(0, sigma_DP^2) noise added to g  (Table I baseline)
+
+All steps are pure functions over pytrees whose leaves carry a leading agent
+axis ``(m, ...)``.  On a production mesh that axis is sharded over
+("pod","data") and the einsums below lower to GSPMD collectives; the
+communication-optimal ring path lives in ``repro.dist.collectives``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Literal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .privacy import agent_key, obfuscated_gradient, sample_B
+from .schedules import Schedule
+from .topology import Topology
+
+__all__ = [
+    "Algorithm",
+    "DecentralizedState",
+    "gossip_mix",
+    "pdsgd_update",
+    "dsgd_update",
+    "dsgt_update",
+    "dp_dsgd_update",
+    "make_decentralized_step",
+    "consensus_error",
+    "replicate_params",
+]
+
+Pytree = Any
+Algorithm = Literal["pdsgd", "dsgd", "dp_dsgd"]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class DecentralizedState:
+    """Training state: per-agent parameters and the iteration counter."""
+
+    params: Pytree  # leaves (m, ...)
+    step: jax.Array  # scalar int32
+
+    @property
+    def num_agents(self) -> int:
+        return jax.tree.leaves(self.params)[0].shape[0]
+
+
+def replicate_params(params: Pytree, m: int) -> Pytree:
+    """Broadcast a single parameter pytree to m identical agent copies."""
+    return jax.tree.map(lambda p: jnp.broadcast_to(p[None], (m,) + p.shape), params)
+
+
+def consensus_error(params: Pytree) -> jax.Array:
+    """sum_i ||x_i - x_bar||^2 — the disagreement Lyapunov term of Thm 1."""
+    def leaf(p):
+        mean = p.mean(axis=0, keepdims=True)
+        return jnp.sum((p - mean) ** 2)
+
+    return sum(jax.tree.leaves(jax.tree.map(leaf, params)))
+
+
+def gossip_mix(mat: jax.Array, params: Pytree) -> Pytree:
+    """y_i = sum_j mat[i, j] * x_j over the leading agent axis of each leaf."""
+
+    def leaf(p):
+        y = jnp.einsum("ij,j...->i...", mat.astype(p.dtype), p,
+                       preferred_element_type=jnp.float32)
+        return y.astype(p.dtype)
+
+    return jax.tree.map(leaf, params)
+
+
+def _per_agent_obfuscated(key: jax.Array, step: jax.Array, grads: Pytree,
+                          lam_bar: jax.Array) -> Pytree:
+    """u_j = Lambda_j^k ∘ g_j with an independent private key per agent."""
+    m = jax.tree.leaves(grads)[0].shape[0]
+    keys = jax.vmap(lambda a: agent_key(key, step, a))(jnp.arange(m))
+    return jax.vmap(lambda k, g: obfuscated_gradient(k, g, lam_bar))(keys, grads)
+
+
+def pdsgd_update(
+    params: Pytree,
+    grads: Pytree,
+    *,
+    key: jax.Array,
+    step: jax.Array,
+    W: jax.Array,
+    support: jax.Array,
+    lam_bar: jax.Array,
+) -> Pytree:
+    """One iteration of Eq. (4): x^{k+1} = W x^k - B^k Lambda^k g^k."""
+    u = _per_agent_obfuscated(jax.random.fold_in(key, 1), step, grads, lam_bar)
+    B = sample_B(agent_key(jax.random.fold_in(key, 2), step, 0), support)
+    mixed = gossip_mix(W, params)
+    descent = gossip_mix(B, u)
+    return jax.tree.map(lambda a, b: a - b, mixed, descent)
+
+
+def dsgd_update(
+    params: Pytree,
+    grads: Pytree,
+    *,
+    W: jax.Array,
+    lam: jax.Array,
+) -> Pytree:
+    """Conventional decentralized SGD [19]: x^{k+1} = W x^k - lam g^k."""
+    mixed = gossip_mix(W, params)
+    return jax.tree.map(lambda a, g: a - lam * g.astype(a.dtype), mixed, grads)
+
+
+def dsgt_update(
+    params: Pytree,
+    tracker: Pytree,
+    grads: Pytree,
+    prev_grads: Pytree,
+    *,
+    W: jax.Array,
+    lam: jax.Array,
+) -> tuple[Pytree, Pytree]:
+    """Gradient-tracking DSGT ([49],[50]; Pu & Nedić):
+
+        x^{k+1} = W x^k − lam y^k
+        y^{k+1} = W y^k + g^{k+1} − g^k
+
+    Included as the communication baseline the paper positions against:
+    DSGT must share BOTH x and the tracker y every iteration — 2× the
+    message volume of PDSGD, which shares only the single mixed variable
+    v_ij (see the Sec. I discussion and `benchmarks.run::comm_cost`).
+    """
+    new_params = jax.tree.map(
+        lambda x, y: x - lam * y.astype(x.dtype),
+        gossip_mix(W, params), tracker)
+    new_tracker = jax.tree.map(
+        lambda y, g, gp: y + g - gp,
+        gossip_mix(W, tracker), grads, prev_grads)
+    return new_params, new_tracker
+
+
+def dp_dsgd_update(
+    params: Pytree,
+    grads: Pytree,
+    *,
+    key: jax.Array,
+    W: jax.Array,
+    lam: jax.Array,
+    sigma_dp: float,
+) -> Pytree:
+    """Differential-privacy baseline: Gaussian noise added to the gradient
+    before the conventional update (Table I of the paper)."""
+    leaves, treedef = jax.tree.flatten(grads)
+    keys = jax.random.split(key, len(leaves))
+    noisy = [
+        g + sigma_dp * jax.random.normal(k, g.shape, dtype=g.dtype)
+        for k, g in zip(keys, leaves)
+    ]
+    return dsgd_update(params, jax.tree.unflatten(treedef, noisy), W=W, lam=lam)
+
+
+def make_decentralized_step(
+    loss_fn: Callable[[Pytree, Any], jax.Array],
+    topology: Topology,
+    schedule: Schedule,
+    algorithm: Algorithm = "pdsgd",
+    sigma_dp: float = 0.0,
+    donate: bool = True,
+):
+    """Build a jitted decentralized training step.
+
+    loss_fn(params_i, batch_i) -> scalar loss for ONE agent; it is vmapped
+    over the agent axis.  Returns ``step(state, batch, key) -> (state, aux)``
+    where batch leaves have a leading (m, ...) axis.
+    """
+    W = jnp.asarray(topology.weights, dtype=jnp.float32)
+    support = jnp.asarray(topology.adjacency, dtype=jnp.float32)
+
+    grad_fn = jax.vmap(jax.value_and_grad(loss_fn))
+
+    def step_fn(state: DecentralizedState, batch, key: jax.Array, lam_bar):
+        losses, grads = grad_fn(state.params, batch)
+        if algorithm == "pdsgd":
+            new_params = pdsgd_update(
+                state.params, grads, key=key, step=state.step, W=W,
+                support=support, lam_bar=lam_bar)
+        elif algorithm == "dsgd":
+            new_params = dsgd_update(state.params, grads, W=W, lam=lam_bar)
+        elif algorithm == "dp_dsgd":
+            new_params = dp_dsgd_update(
+                state.params, grads, key=jax.random.fold_in(key, 3), W=W,
+                lam=lam_bar, sigma_dp=sigma_dp)
+        else:
+            raise ValueError(f"unknown algorithm {algorithm!r}")
+        aux = {
+            "loss": losses.mean(),
+            "consensus_error": consensus_error(new_params),
+        }
+        return DecentralizedState(params=new_params, step=state.step + 1), aux
+
+    jitted = jax.jit(step_fn, donate_argnums=(0,) if donate else ())
+
+    def step(state: DecentralizedState, batch, key: jax.Array):
+        # The schedule is evaluated on host at the current iterate (static
+        # under jit via a traced scalar argument).
+        lam_bar = jnp.asarray(
+            schedule(np.asarray(int(state.step)), 0), dtype=jnp.float32)
+        return jitted(state, batch, key, lam_bar)
+
+    return step
+
+
+def init_state(params: Pytree, m: int) -> DecentralizedState:
+    return DecentralizedState(params=replicate_params(params, m),
+                              step=jnp.asarray(0, dtype=jnp.int32))

@@ -1,0 +1,82 @@
+"""Privacy randomness of the paper: random diagonal stepsizes and the
+column-stochastic mixing coefficients B^k.
+
+Everything here runs inside jit; per-agent privacy is modeled by deriving an
+independent PRNG key per (agent, step) via fold_in, which in a real
+multi-controller deployment lives on the agent's own host (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "agent_key",
+    "sample_lambda_tree",
+    "obfuscated_gradient",
+    "sample_B",
+    "lambda_stats",
+]
+
+Pytree = Any
+
+
+def agent_key(key: jax.Array, step: jax.Array | int, agent: jax.Array | int) -> jax.Array:
+    """Derive the private key of `agent` at `step`."""
+    return jax.random.fold_in(jax.random.fold_in(key, step), agent)
+
+
+def _uniform_like(key: jax.Array, x: jax.Array, lam_bar: jax.Array) -> jax.Array:
+    """lambda ~ U[0, 2*lam_bar] elementwise, matching x's shape.
+
+    Mean lam_bar, std lam_bar/sqrt(3) — the paper's Sec. VI reference
+    distribution.  Computed in f32 regardless of param dtype.
+    """
+    u = jax.random.uniform(key, x.shape, dtype=jnp.float32)
+    return (2.0 * lam_bar) * u
+
+
+def sample_lambda_tree(key: jax.Array, grads: Pytree, lam_bar: jax.Array) -> Pytree:
+    """Sample the diagonal of Lambda_j^k for every gradient leaf."""
+    leaves, treedef = jax.tree.flatten(grads)
+    keys = jax.random.split(key, len(leaves))
+    lams = [_uniform_like(k, g, lam_bar) for k, g in zip(keys, leaves)]
+    return jax.tree.unflatten(treedef, lams)
+
+
+def obfuscated_gradient(key: jax.Array, grads: Pytree, lam_bar: jax.Array) -> Pytree:
+    """u_j = Lambda_j^k ∘ g_j — the quantity the paper shares (scaled by b_ij).
+
+    Fuses sampling and scaling per leaf (the Pallas kernel in
+    kernels/obfuscate.py implements the same contraction tiled for VMEM).
+    """
+    leaves, treedef = jax.tree.flatten(grads)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for k, g in zip(keys, leaves):
+        lam = _uniform_like(k, g, lam_bar)
+        out.append((lam * g.astype(jnp.float32)).astype(g.dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+def sample_B(key: jax.Array, support: jax.Array) -> jax.Array:
+    """Sample a random column-stochastic B^k on the sparsity `support` of W.
+
+    Column j is chosen by agent j: positive weights on N_j, summing to one
+    (Sec. III). We draw Exp(1) variables on the support and normalize per
+    column, i.e. a Dirichlet(1,..,1) over each neighbor set.
+    """
+    support = support.astype(jnp.float32)
+    e = jax.random.exponential(key, support.shape, dtype=jnp.float32)
+    e = e * support
+    col_sums = e.sum(axis=0, keepdims=True)
+    return e / jnp.maximum(col_sums, 1e-30)
+
+
+def lambda_stats(lam_bar: float) -> dict:
+    """Mean/std of the U[0,2 lam_bar] stepsize (used in tests/docs)."""
+    return {"mean": lam_bar, "std": lam_bar / np.sqrt(3.0), "var": lam_bar**2 / 3.0}

@@ -1,0 +1,149 @@
+"""Stepsize schedules satisfying the paper's convergence conditions.
+
+Theorem 2/3 require, for every agent i:
+  (9)  sum_k lam_i^k = inf,  sum_k (lam_i^k)^2 < inf,  sum_k (sig_i^k)^2 < inf
+  (10) sum_k sum_{i!=j} |lam_i^k - lam_j^k| < inf      (heterogeneity summable)
+
+Under the reference Uniform[0, 2*lam] stepsize distribution the std is
+sig = lam/sqrt(3), so (9)'s last condition follows from the second.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import numpy as np
+
+__all__ = [
+    "Schedule",
+    "harmonic",
+    "paper_experiment",
+    "polynomial",
+    "warmup_harmonic",
+    "deviating",
+    "check_conditions",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Schedule:
+    """Mean stepsize schedule lam_bar(k, agent). k is 0-based internally;
+    the paper's 1/k schedules are evaluated at k+1."""
+
+    name: str
+    fn: Callable[[np.ndarray, np.ndarray], np.ndarray]  # (k, agent) -> lam_bar
+
+    def __call__(self, k, agent=0):
+        k = np.asarray(k, dtype=np.float64)
+        agent = np.asarray(agent, dtype=np.float64)
+        return self.fn(k, agent)
+
+
+def harmonic(base: float = 1.0) -> Schedule:
+    """lam_bar^k = base / (k+1): the paper's canonical choice (Remark 1).
+    Identical across agents => heterogeneity condition (10) trivially holds;
+    privacy comes from the *realized* random draws, which stay private."""
+    return Schedule("harmonic", lambda k, a: base / (k + 1.0))
+
+
+def paper_experiment(base: float = 1.0) -> Schedule:
+    """The *mean* of the paper's Sec. VII stepsize lam_i^k=(1-rho_i^k/k)/k with
+    rho ~ U[0,1]:  E[lam^k] = (1 - 1/(2k))/k, evaluated at k+1."""
+
+    def fn(k, a):
+        kk = k + 1.0
+        return base * (1.0 - 1.0 / (2.0 * kk)) / kk
+
+    return Schedule("paper_experiment", fn)
+
+
+def polynomial(base: float = 1.0, power: float = 0.75) -> Schedule:
+    """base/(k+1)^power; satisfies (9) for power in (0.5, 1]."""
+    if not (0.5 < power <= 1.0):
+        raise ValueError("power must be in (0.5, 1] for square-summability")
+    return Schedule(f"poly{power}", lambda k, a: base / (k + 1.0) ** power)
+
+
+def warmup_harmonic(base: float = 1.0, hold: int = 100) -> Schedule:
+    """Linear ramp 0→`base` over `hold` steps, then harmonic decay
+    (continuous at k=hold) — the practical deep-learning shape; still
+    satisfies (9): the finite warmup prefix changes neither non-summability
+    nor square-summability of the harmonic tail."""
+
+    def fn(k, a):
+        return np.where(k < hold, base * (k + 1.0) / (hold + 1.0),
+                        base * (hold + 1.0) / (k + 1.0))
+
+    return Schedule("warmup_harmonic", fn)
+
+
+def deviating(base_schedule: Schedule, num_agents: int,
+              num_deviations: int = 20, max_factor: float = 3.0,
+              seed: int = 0) -> Schedule:
+    """Remark 1: agents may *privately deviate* their expected stepsize from
+    the common baseline in a finite set of iterations (indices private to
+    each agent) — the heterogeneity condition (10) still holds because each
+    deviation is finite and there are finitely many of them.
+
+    Agent i multiplies lam_bar by a private factor in U[1/max_factor,
+    max_factor] at `num_deviations` private iteration indices.
+    """
+    rng = np.random.default_rng(seed)
+    # private per-agent deviation tables (in deployment each agent draws its
+    # own; here one seed generates all for the simulation)
+    idx = {}
+    fac = {}
+    for a in range(num_agents):
+        idx[a] = rng.choice(10_000, size=num_deviations, replace=False)
+        fac[a] = rng.uniform(1.0 / max_factor, max_factor,
+                             size=num_deviations)
+
+    def fn(k, a):
+        lam = base_schedule.fn(k, a)
+        ai = int(np.asarray(a).reshape(-1)[0])
+        table_i, table_f = idx.get(ai), fac.get(ai)
+        if table_i is None:
+            return lam
+        kk = np.asarray(k)
+        mult = np.ones_like(np.asarray(lam, dtype=np.float64))
+        for i, f in zip(table_i, table_f):
+            mult = np.where(kk == i, f, mult)
+        return lam * mult
+
+    return Schedule(f"deviating({base_schedule.name})", fn)
+
+
+def check_conditions(
+    schedule: Schedule,
+    num_agents: int,
+    horizon: int = 200_000,
+    sigma_of_lam: Callable[[np.ndarray], np.ndarray] | None = None,
+) -> dict:
+    """Numerically sanity-check (9) and (10) over a long horizon.
+
+    Returns partial sums plus simple divergence/convergence verdicts. A true
+    proof is analytic; this catches mis-specified schedules in tests.
+    """
+    if sigma_of_lam is None:
+        sigma_of_lam = lambda lam: lam / np.sqrt(3.0)  # Uniform[0, 2 lam]
+    k = np.arange(horizon, dtype=np.float64)
+    lam = np.stack([schedule(k, i) for i in range(num_agents)])  # (m, K)
+    s1 = lam.sum(axis=1)
+    s2 = (lam**2).sum(axis=1)
+    s3 = (sigma_of_lam(lam) ** 2).sum(axis=1)
+    het = 0.0
+    for i in range(num_agents):
+        for j in range(num_agents):
+            if i != j:
+                het += np.abs(lam[i] - lam[j]).sum()
+    # Divergence heuristic: the tail half still contributes a large share.
+    tail_share = lam[:, horizon // 2 :].sum(axis=1) / np.maximum(s1, 1e-30)
+    return {
+        "sum_lam": s1,
+        "sum_lam_sq": s2,
+        "sum_sigma_sq": s3,
+        "heterogeneity": het,
+        "tail_share": tail_share,
+        "nonsummable_ok": bool(np.all(tail_share > 0.05)),
+        "square_summable_ok": bool(np.all(s2 < np.inf) and np.all(s2 < 1e6)),
+    }

@@ -1,0 +1,187 @@
+"""Communication topologies and doubly-stochastic mixing matrices.
+
+The paper (Assumption 2) requires a doubly-stochastic coupling matrix W with
+w_ii > 0 and spectral radius rho = ||W - 11^T/m|| < 1.  We build W from an
+undirected graph adjacency with Metropolis-Hastings weights, which are
+doubly stochastic by construction for any connected undirected graph.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+__all__ = [
+    "Topology",
+    "ring",
+    "torus2d",
+    "complete",
+    "star",
+    "erdos_renyi",
+    "paper_fig1",
+    "metropolis_weights",
+    "spectral_gap",
+    "make_topology",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Topology:
+    """A communication graph plus its doubly-stochastic mixing matrix."""
+
+    name: str
+    adjacency: np.ndarray  # (m, m) bool, symmetric, True diagonal
+    weights: np.ndarray  # (m, m) float64 doubly-stochastic, support == adjacency
+
+    @property
+    def num_agents(self) -> int:
+        return int(self.adjacency.shape[0])
+
+    @property
+    def rho(self) -> float:
+        return spectral_gap(self.weights)
+
+    def neighbors(self, i: int) -> np.ndarray:
+        """Neighbor set N_i (always includes i, per the paper)."""
+        return np.flatnonzero(self.adjacency[i])
+
+    def validate(self) -> None:
+        w = self.weights
+        m = self.num_agents
+        if not np.allclose(w.sum(0), 1.0, atol=1e-12):
+            raise ValueError(f"{self.name}: W not column-stochastic")
+        if not np.allclose(w.sum(1), 1.0, atol=1e-12):
+            raise ValueError(f"{self.name}: W not row-stochastic")
+        if np.any(np.diag(w) <= 0):
+            raise ValueError(f"{self.name}: requires w_ii > 0")
+        if np.any((w > 0) != self.adjacency):
+            raise ValueError(f"{self.name}: W support differs from adjacency")
+        if self.rho >= 1.0:
+            raise ValueError(f"{self.name}: rho={self.rho} >= 1 (disconnected?)")
+
+
+def _with_self_loops(adj: np.ndarray) -> np.ndarray:
+    adj = adj.astype(bool)
+    adj |= adj.T
+    np.fill_diagonal(adj, True)
+    return adj
+
+
+def metropolis_weights(adjacency: np.ndarray) -> np.ndarray:
+    """Metropolis-Hastings doubly-stochastic weights on an undirected graph.
+
+    w_ij = 1 / (1 + max(deg_i, deg_j)) for i != j adjacent, w_ii = 1 - sum_j w_ij.
+    Doubly stochastic and symmetric for any undirected graph.
+    """
+    adj = _with_self_loops(adjacency)
+    m = adj.shape[0]
+    deg = adj.sum(1) - 1  # exclude self-loop
+    w = np.zeros((m, m), dtype=np.float64)
+    for i in range(m):
+        for j in range(m):
+            if i != j and adj[i, j]:
+                w[i, j] = 1.0 / (1.0 + max(deg[i], deg[j]))
+        w[i, i] = 1.0 - w[i].sum()
+    return w
+
+
+def spectral_gap(w: np.ndarray) -> float:
+    """rho = ||W - 11^T/m||_2 (Assumption 2)."""
+    m = w.shape[0]
+    dev = w - np.ones((m, m)) / m
+    return float(np.linalg.norm(dev, 2))
+
+
+def ring(m: int) -> np.ndarray:
+    """Ring lattice: each agent talks to left/right neighbor (and itself)."""
+    if m < 2:
+        return np.ones((1, 1), dtype=bool)
+    adj = np.zeros((m, m), dtype=bool)
+    idx = np.arange(m)
+    adj[idx, (idx + 1) % m] = True
+    adj[idx, (idx - 1) % m] = True
+    return _with_self_loops(adj)
+
+
+def torus2d(rows: int, cols: int) -> np.ndarray:
+    """2D torus of rows*cols agents — the natural multi-pod agent graph
+    (pod axis x data axis). Degenerates gracefully when rows == 1."""
+    m = rows * cols
+    adj = np.zeros((m, m), dtype=bool)
+    for r in range(rows):
+        for c in range(cols):
+            i = r * cols + c
+            if cols > 1:
+                adj[i, r * cols + (c + 1) % cols] = True
+                adj[i, r * cols + (c - 1) % cols] = True
+            if rows > 1:
+                adj[i, ((r + 1) % rows) * cols + c] = True
+                adj[i, ((r - 1) % rows) * cols + c] = True
+    return _with_self_loops(adj)
+
+
+def complete(m: int) -> np.ndarray:
+    return np.ones((m, m), dtype=bool)
+
+
+def star(m: int) -> np.ndarray:
+    adj = np.zeros((m, m), dtype=bool)
+    adj[0, :] = True
+    adj[:, 0] = True
+    return _with_self_loops(adj)
+
+
+def erdos_renyi(m: int, p: float, seed: int = 0) -> np.ndarray:
+    """Random connected graph (resamples until connected)."""
+    rng = np.random.default_rng(seed)
+    for _ in range(1000):
+        upper = rng.random((m, m)) < p
+        adj = np.triu(upper, 1)
+        adj = _with_self_loops(adj)
+        if _connected(adj):
+            return adj
+    raise RuntimeError("could not sample a connected Erdos-Renyi graph")
+
+
+def paper_fig1() -> np.ndarray:
+    """The 5-agent interaction topology of the paper's Fig. 1.
+
+    The figure shows a connected 5-agent graph; we use the cycle C5 plus the
+    chord (0,2), a standard rendering of that figure.
+    """
+    adj = ring(5)
+    adj[0, 2] = adj[2, 0] = True
+    return _with_self_loops(adj)
+
+
+def _connected(adj: np.ndarray) -> bool:
+    m = adj.shape[0]
+    seen = {0}
+    frontier = [0]
+    while frontier:
+        i = frontier.pop()
+        for j in np.flatnonzero(adj[i]):
+            if j not in seen:
+                seen.add(int(j))
+                frontier.append(int(j))
+    return len(seen) == m
+
+
+_BUILDERS = {
+    "ring": lambda m, **kw: ring(m),
+    "complete": lambda m, **kw: complete(m),
+    "star": lambda m, **kw: star(m),
+    "erdos": lambda m, **kw: erdos_renyi(m, kw.get("p", 0.4), kw.get("seed", 0)),
+    "paper_fig1": lambda m, **kw: paper_fig1(),
+    "torus": lambda m, **kw: torus2d(kw["rows"], m // kw["rows"]),
+}
+
+
+def make_topology(name: str, m: int, **kwargs) -> Topology:
+    if name not in _BUILDERS:
+        raise KeyError(f"unknown topology {name!r}; have {sorted(_BUILDERS)}")
+    adj = _BUILDERS[name](m, **kwargs)
+    top = Topology(name=name, adjacency=adj, weights=metropolis_weights(adj))
+    top.validate()
+    return top

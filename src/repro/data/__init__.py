@@ -1,0 +1,16 @@
+from .synthetic import (
+    SyntheticLMDataset,
+    synthetic_digits,
+    estimation_problem,
+    noniid_partition,
+)
+from .pipeline import DataPipeline, make_lm_pipeline
+
+__all__ = [
+    "SyntheticLMDataset",
+    "synthetic_digits",
+    "estimation_problem",
+    "noniid_partition",
+    "DataPipeline",
+    "make_lm_pipeline",
+]

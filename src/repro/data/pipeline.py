@@ -1,0 +1,52 @@
+"""Host-side data pipeline: deterministic, shardable, agent-aware.
+
+Produces numpy batches shaped (agents, per_agent_batch, seq) for training or
+(batch, seq) for serving; the launcher places them onto the mesh with the
+matching NamedSharding.  Deterministic per (seed, step) so every host in a
+multi-controller deployment computes its own slice without coordination.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator
+
+import numpy as np
+
+from .synthetic import SyntheticLMDataset
+
+__all__ = ["DataPipeline", "make_lm_pipeline"]
+
+
+@dataclasses.dataclass
+class DataPipeline:
+    dataset: SyntheticLMDataset
+    num_agents: int
+    per_agent_batch: int
+    seq_len: int
+    seed: int = 0
+
+    def batch_at(self, step: int) -> dict:
+        """Batch for a given step — random-access so resume is trivial."""
+        rng = np.random.default_rng((self.seed, step))
+        tokens = self.dataset.batch(
+            rng, self.num_agents * self.per_agent_batch, self.seq_len + 1)
+        tokens = tokens.reshape(self.num_agents, self.per_agent_batch,
+                                self.seq_len + 1)
+        return {"tokens": tokens[..., :-1], "labels": tokens[..., 1:]}
+
+    def __iter__(self) -> Iterator[dict]:
+        step = 0
+        while True:
+            yield self.batch_at(step)
+            step += 1
+
+
+def make_lm_pipeline(vocab_size: int, num_agents: int, per_agent_batch: int,
+                     seq_len: int, seed: int = 0) -> DataPipeline:
+    return DataPipeline(
+        dataset=SyntheticLMDataset(vocab_size=vocab_size, seed=seed),
+        num_agents=num_agents,
+        per_agent_batch=per_agent_batch,
+        seq_len=seq_len,
+        seed=seed,
+    )

@@ -1,0 +1,5 @@
+from .ops import (flash_attention, gossip_update, obfuscate_update,
+                  ssd_intra_chunk, obfuscate_tree, gossip_tree)
+
+__all__ = ["flash_attention", "gossip_update", "obfuscate_update",
+           "ssd_intra_chunk", "obfuscate_tree", "gossip_tree"]

@@ -1,0 +1,101 @@
+"""Flash-attention forward kernel (causal / sliding-window), MXU-tiled.
+
+Grid: (batch*heads, num_q_blocks); the kernel loops over KV blocks with the
+online-softmax recurrence, so the (S, S) logits matrix never exists — the
+VMEM working set is (bq, hd) + (bk, hd) + (bq, bk).  Block sizes default to
+(128, 128): MXU-aligned and ≤ ~1 MB of VMEM at hd=128/bf16.
+
+Sliding-window support prunes KV blocks entirely outside the window, which
+is what makes long_500k-with-window O(S·w) instead of O(S²).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BQ = 128
+DEFAULT_BK = 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, bq: int, bk: int,
+                  seq: int, causal: bool, window: int | None, scale: float):
+    qi = pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32) * scale  # (bq, hd)
+    q_offset = qi * bq
+
+    m = jnp.full((bq,), NEG_INF, jnp.float32)
+    l = jnp.zeros((bq,), jnp.float32)
+    acc = jnp.zeros((bq, q.shape[-1]), jnp.float32)
+
+    num_kv = seq // bk
+
+    def body(kj, carry):
+        m, l, acc = carry
+        k = k_ref[0, kj].astype(jnp.float32)  # (bk, hd)
+        v = v_ref[0, kj].astype(jnp.float32)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # (bq, bk)
+        qpos = q_offset + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = kj * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = jnp.ones((bq, bk), bool)
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m - m_new)
+        l_new = alpha * l + p.sum(axis=1)
+        acc_new = alpha[:, None] * acc + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        return m_new, l_new, acc_new
+
+    # prune KV blocks entirely outside the (causal, windowed) span
+    lo = jnp.int32(0)
+    if window is not None:
+        lo = jnp.maximum(lo, (q_offset - window + 1) // bk).astype(jnp.int32)
+    hi = jnp.int32(num_kv)
+    if causal:
+        hi = jnp.minimum(hi, (q_offset + bq + bk - 1) // bk).astype(jnp.int32)
+    m, l, acc = jax.lax.fori_loop(lo, hi, body, (m, l, acc))
+    out = acc / jnp.maximum(l, 1e-30)[:, None]
+    o_ref[0] = out.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "bq", "bk",
+                                             "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int | None = None,
+                    bq: int = DEFAULT_BQ, bk: int = DEFAULT_BK,
+                    interpret: bool = True) -> jax.Array:
+    """q/k/v: (B, S, H, hd) with equal head counts.  Returns (B, S, H, hd)."""
+    B, S, H, hd = q.shape
+    bq_ = min(bq, S)
+    bk_ = min(bk, S)
+    assert S % bq_ == 0 and S % bk_ == 0, (S, bq_, bk_)
+    scale = 1.0 / math.sqrt(hd)
+    # (B, S, H, hd) -> (B*H, S, hd) so each program owns one (batch, head)
+    qt = q.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    kt = k.transpose(0, 2, 1, 3).reshape(B * H, S // bk_, bk_, hd)
+    vt = v.transpose(0, 2, 1, 3).reshape(B * H, S // bk_, bk_, hd)
+
+    kernel = functools.partial(_flash_kernel, bq=bq_, bk=bk_, seq=S,
+                               causal=causal, window=window, scale=scale)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * H, S // bq_),
+        in_specs=[
+            pl.BlockSpec((1, bq_, hd), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, S // bk_, bk_, hd), lambda b, i: (b, 0, 0, 0)),
+            pl.BlockSpec((1, S // bk_, bk_, hd), lambda b, i: (b, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq_, hd), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, S, hd), q.dtype),
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out.reshape(B, H, S, hd).transpose(0, 2, 1, 3)

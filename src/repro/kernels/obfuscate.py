@@ -1,0 +1,74 @@
+"""Fused gradient-obfuscation kernel — the paper's privacy hot loop.
+
+Computes the self-term of Eq. (3) in one VMEM pass per tile:
+
+    v = w_self * x - b_self * (lambda ∘ g),   lambda = 2*lam_bar*U(bits)
+
+Without fusion the update reads/writes d-sized arrays four times
+(materialize lambda, materialize u = lambda*g, mix, subtract); fused it is
+one read of (x, g, bits) + one write of v — a ~3x HBM-traffic cut on an
+op that runs on every parameter, every step (d up to 34B here vs the
+paper's 1.7M).  Tiles are (8k, 128)-aligned for the VPU lanes.
+
+On a real TPU the `bits` input disappears: `pltpu.prng_seed` +
+`pltpu.prng_random_bits` generate the randomness in-kernel (zero HBM
+traffic for lambda).  The CPU interpreter has no PRNG primitive, so the
+portable kernel takes counter-based bits from jax.random outside —
+correctness-identical, and validated against ref.obfuscate_ref.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = (256, 256)
+
+
+def _obfuscate_kernel(x_ref, g_ref, bits_ref, scal_ref, o_ref):
+    """scal_ref: (3,) = [lam_bar, w_self, b_self] in SMEM-like VMEM."""
+    lam_bar = scal_ref[0]
+    w_self = scal_ref[1]
+    b_self = scal_ref[2]
+    bits = bits_ref[...]
+    # uint32 -> U[0,1): stuff the top 23 bits into the mantissa of 1.xxx
+    f = (bits >> 9) | jnp.uint32(0x3F800000)
+    u01 = jax.lax.bitcast_convert_type(f, jnp.float32) - 1.0
+    lam = (2.0 * lam_bar) * u01
+    g = g_ref[...].astype(jnp.float32)
+    x = x_ref[...].astype(jnp.float32)
+    o_ref[...] = (w_self * x - b_self * (lam * g)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def obfuscate_update(x: jax.Array, g: jax.Array, bits: jax.Array,
+                     lam_bar, w_self, b_self,
+                     block: tuple[int, int] = DEFAULT_BLOCK,
+                     interpret: bool = True) -> jax.Array:
+    """x, g: (R, C) same shape; bits: (R, C) uint32.  Returns v same shape.
+
+    R/C are padded to the block grid by the caller (ops.py handles pytrees
+    and arbitrary shapes by flattening + padding).
+    """
+    R, C = x.shape
+    br, bc = min(block[0], R), min(block[1], C)
+    assert R % br == 0 and C % bc == 0, (x.shape, block)
+    scal = jnp.stack([jnp.asarray(lam_bar, jnp.float32),
+                      jnp.asarray(w_self, jnp.float32),
+                      jnp.asarray(b_self, jnp.float32)])
+    grid = (R // br, C // bc)
+    return pl.pallas_call(
+        _obfuscate_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+            pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+            pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+            pl.BlockSpec((3,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((R, C), x.dtype),
+        interpret=interpret,
+    )(x, g, bits, scal)

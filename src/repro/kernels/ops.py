@@ -1,0 +1,74 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+``interpret`` defaults to True everywhere: this container is CPU-only, so
+kernels execute through the Pallas interpreter for correctness validation;
+on TPU hardware the same calls run compiled (interpret=False).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention
+from .gossip import gossip_update
+from .obfuscate import obfuscate_update
+from .ssm_scan import ssd_intra_chunk
+
+Pytree = Any
+
+__all__ = ["flash_attention", "gossip_update", "obfuscate_update",
+           "ssd_intra_chunk", "obfuscate_tree", "gossip_tree"]
+
+
+def _flatten_concat(tree: Pytree):
+    leaves = jax.tree.leaves(tree)
+    flat = [l.reshape(l.shape[0], -1) for l in leaves]
+    sizes = [f.shape[1] for f in flat]
+    return jnp.concatenate(flat, axis=1), sizes, leaves
+
+
+def _unflatten(buf: jax.Array, sizes, leaves, treedef_tree):
+    parts = []
+    off = 0
+    for s, l in zip(sizes, leaves):
+        parts.append(buf[:, off:off + s].reshape(l.shape).astype(l.dtype))
+        off += s
+    return jax.tree.unflatten(jax.tree.structure(treedef_tree), parts)
+
+
+def _pad_cols(x: jax.Array, multiple: int):
+    pad = (-x.shape[1]) % multiple
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad)))
+    return x, pad
+
+
+def obfuscate_tree(key: jax.Array, x_tree: Pytree, g_tree: Pytree,
+                   lam_bar, w_self, b_self, interpret: bool = True) -> Pytree:
+    """Apply the fused obfuscation kernel leaf-wise across a parameter
+    pytree with leading agent dim (m, ...)."""
+    x_flat, sizes, leaves = _flatten_concat(x_tree)
+    g_flat, _, _ = _flatten_concat(g_tree)
+    x_flat, pad = _pad_cols(x_flat, 256)
+    g_flat, _ = _pad_cols(g_flat, 256)
+    bits = jax.random.bits(key, x_flat.shape, dtype=jnp.uint32)
+    out = obfuscate_update(x_flat, g_flat, bits, lam_bar, w_self, b_self,
+                           block=(x_flat.shape[0], 256), interpret=interpret)
+    if pad:
+        out = out[:, :-pad]
+    return _unflatten(out, sizes, leaves, x_tree)
+
+
+def gossip_tree(W: jax.Array, B: jax.Array, x_tree: Pytree, u_tree: Pytree,
+                interpret: bool = True) -> Pytree:
+    """x' = W X - B U across a parameter pytree with leading agent dim."""
+    x_flat, sizes, leaves = _flatten_concat(x_tree)
+    u_flat, _, _ = _flatten_concat(u_tree)
+    x_flat, pad = _pad_cols(x_flat, 512)
+    u_flat, _ = _pad_cols(u_flat, 512)
+    out = gossip_update(W, B, x_flat, u_flat, interpret=interpret)
+    if pad:
+        out = out[:, :-pad]
+    return _unflatten(out, sizes, leaves, x_tree)

@@ -1,0 +1,73 @@
+"""Mamba2 SSD intra-chunk kernel.
+
+Grid: one program per (group-of-chunks) tile; each program computes, for its
+chunk, the intra-chunk output y_intra = ((C B^T) ∘ L) (dt ∘ x) and the
+chunk's state contribution S_c = Σ_j decay_j dt_j B_j ⊗ x_j — the two
+MXU-heavy pieces of models/ssm.ssd_chunked.  The tiny inter-chunk
+recurrence stays outside (it is O(B·H·P·N) elementwise per chunk and
+bandwidth-trivial).
+
+VMEM working set per program: Q·(H·P + H + N) inputs + Q² decay tile —
+with Q=64, H·P=d_inner/16 per shard, comfortably inside 16 MB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_chunk_kernel(x_ref, dt_ref, acum_ref, b_ref, c_ref, y_ref, s_ref):
+    x = x_ref[0].astype(jnp.float32)        # (Q, H, P)
+    dt = dt_ref[0].astype(jnp.float32)      # (Q, H)
+    a_cum = acum_ref[0].astype(jnp.float32)  # (Q, H)
+    Bm = b_ref[0].astype(jnp.float32)       # (Q, N)
+    Cm = c_ref[0].astype(jnp.float32)       # (Q, N)
+    Q = x.shape[0]
+
+    scores = jnp.dot(Cm, Bm.T, preferred_element_type=jnp.float32)  # (Q,Q)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    diff = a_cum[:, None, :] - a_cum[None, :, :]  # (Q,Q,H)
+    Lmat = jnp.exp(jnp.where((jj <= ii)[..., None], diff, -jnp.inf))
+    w = scores[..., None] * Lmat * dt[None, :, :]  # (Q,Q,H)
+    y = jnp.einsum("ijh,jhp->ihp", w, x)
+
+    decay_to_end = jnp.exp(a_cum[-1:, :] - a_cum)  # (Q,H)
+    wx = x * (dt * decay_to_end)[..., None]        # (Q,H,P)
+    state = jnp.einsum("qn,qhp->hpn", Bm, wx)
+
+    y_ref[0] = y.astype(y_ref.dtype)
+    s_ref[0] = state.astype(s_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_intra_chunk(x: jax.Array, dt: jax.Array, a_cum: jax.Array,
+                    Bm: jax.Array, Cm: jax.Array,
+                    interpret: bool = True):
+    """x: (G, Q, H, P); dt/a_cum: (G, Q, H); Bm/Cm: (G, Q, N).
+    Returns (y_intra (G,Q,H,P) dtype-of-x, states (G,H,P,N) f32)."""
+    G, Q, H, P = x.shape
+    N = Bm.shape[-1]
+    return pl.pallas_call(
+        _ssd_chunk_kernel,
+        grid=(G,),
+        in_specs=[
+            pl.BlockSpec((1, Q, H, P), lambda g: (g, 0, 0, 0)),
+            pl.BlockSpec((1, Q, H), lambda g: (g, 0, 0)),
+            pl.BlockSpec((1, Q, H), lambda g: (g, 0, 0)),
+            pl.BlockSpec((1, Q, N), lambda g: (g, 0, 0)),
+            pl.BlockSpec((1, Q, N), lambda g: (g, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Q, H, P), lambda g: (g, 0, 0, 0)),
+            pl.BlockSpec((1, H, P, N), lambda g: (g, 0, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((G, Q, H, P), x.dtype),
+            jax.ShapeDtypeStruct((G, H, P, N), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, dt, a_cum, Bm, Cm)

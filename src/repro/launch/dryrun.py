@@ -1,0 +1,229 @@
+"""Multi-pod AOT dry-run: lower + compile every (arch x input-shape x mesh)
+against the production mesh with 512 placeholder host devices, then extract
+the roofline terms from the compiled artifact.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch granite-8b \
+      --shape train_4k [--multi-pod] [--gossip dense|ring] [--out out.json]
+
+Nothing is allocated: inputs are ShapeDtypeStructs; the compile itself is
+the test.  memory_analysis() proves the footprint, cost_analysis() gives
+per-device FLOPs/bytes, and the SPMD HLO text is parsed for per-device
+collective bytes (all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute).
+"""
+from __future__ import annotations
+
+import os
+# MUST precede any jax import/init: the dry-run (and only the dry-run)
+# needs 512 placeholder host devices for the production mesh.
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+import argparse
+import json
+import re
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import INPUT_SHAPES, config_for_shape, get_config
+from ..models import build_model
+from . import specs as S
+from .mesh import make_production_mesh, num_agents
+from .steps import make_decode_step, make_prefill_step, make_train_step
+
+COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+                "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+                "f64": 8, "c64": 8, "c128": 16}
+
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*\(?([a-z0-9]+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w\.\-]+\s*=\s*[^=]*?\b"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(([^)]*)\)")
+_OPERAND_RE = re.compile(r"%?([\w\.\-]+)")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device bytes moved by collectives: sum of operand sizes per kind.
+    async -start/-done pairs are counted once (on the -start)."""
+    defs: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if m:
+            name, dtype, dims = m.groups()
+            if dtype in _DTYPE_BYTES:
+                defs[name] = _shape_bytes(dtype, dims)
+    out = {k: 0 for k in COLLECTIVE_KINDS}
+    counts = {k: 0 for k in COLLECTIVE_KINDS}
+    for line in hlo_text.splitlines():
+        if "-done(" in line:
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        kind, operands = m.groups()
+        total = 0
+        for om in _OPERAND_RE.finditer(operands):
+            total += defs.get(om.group(1), 0)
+        out[kind] += total
+        counts[kind] += 1
+    return {"bytes": out, "counts": counts,
+            "total_bytes": sum(out.values())}
+
+
+def count_params(bundle) -> dict:
+    import numpy as np
+    leaves = jax.tree.leaves(bundle.abstract())
+    total = int(sum(np.prod(l.shape) for l in leaves))
+    cfg = bundle.cfg
+    active = total
+    if cfg.num_experts:
+        # expert weights: only k/E of them fire per token
+        expert = 3 * cfg.num_experts * cfg.d_model * cfg.d_ff * cfg.num_layers
+        active = total - expert + expert * cfg.num_experts_per_tok // cfg.num_experts
+    return {"total": total, "active": active}
+
+
+def build_lowered(arch: str, shape_name: str, multi_pod: bool,
+                  gossip: str = "dense", attn: str = "naive",
+                  moe: str = "allreduce", attn_chunk: int = 4096,
+                  decode_rules: str = "serve", remat: str = "full"):
+    import dataclasses
+    shape = INPUT_SHAPES[shape_name]
+    cfg = config_for_shape(get_config(arch), shape)
+    cfg = dataclasses.replace(cfg, attn_impl=attn, moe_impl=moe,
+                              attn_chunk=attn_chunk, remat_policy=remat)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    bundle = build_model(cfg, mesh=mesh)
+
+    if shape.kind == "train":
+        m = num_agents(mesh)
+        params_abs, params_sh, batch_abs, batch_sh = S.train_specs(
+            bundle, shape, mesh, m)
+        step = make_train_step(bundle, mesh, gossip=gossip)
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        scalar_sh = NamedSharding(mesh, P())
+        with mesh:
+            jitted = jax.jit(
+                step,
+                in_shardings=(params_sh, batch_sh, scalar_sh, scalar_sh),
+                out_shardings=(params_sh, scalar_sh),
+                donate_argnums=(0,))
+            lowered = jitted.lower(
+                params_abs, batch_abs,
+                jax.ShapeDtypeStruct((), jnp.uint32),
+                jax.ShapeDtypeStruct((), jnp.int32))
+    elif shape.kind == "prefill":
+        params_abs, params_sh, batch_abs, batch_sh = S.prefill_specs(
+            bundle, shape, mesh)
+        step = make_prefill_step(bundle)
+        with mesh:
+            jitted = jax.jit(step, in_shardings=(params_sh, batch_sh))
+            lowered = jitted.lower(params_abs, batch_abs)
+    else:  # decode
+        from ..dist.sharding import DECODE_RULES
+        rules = DECODE_RULES if decode_rules == "decode" else None
+        (params_abs, params_sh, token_abs, token_sh, cache_abs, cache_sh,
+         pos_abs, pos_sh) = S.decode_specs(bundle, shape, mesh, rules=rules)
+        step = make_decode_step(bundle)
+        with mesh:
+            jitted = jax.jit(
+                step,
+                in_shardings=(params_sh, token_sh, cache_sh, pos_sh),
+                donate_argnums=(2,))
+            lowered = jitted.lower(params_abs, token_abs, cache_abs, pos_abs)
+    return lowered, bundle, mesh, shape
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool,
+            gossip: str = "dense", want_hlo: bool = True,
+            attn: str = "naive", moe: str = "allreduce",
+            attn_chunk: int = 4096, decode_rules: str = "serve",
+            remat: str = "full") -> dict:
+    t0 = time.time()
+    lowered, bundle, mesh, shape = build_lowered(
+        arch, shape_name, multi_pod, gossip, attn, moe, attn_chunk,
+        decode_rules, remat)
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+
+    ca = compiled.cost_analysis() or {}
+    ma = compiled.memory_analysis()
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "gossip": gossip,
+        "attn": attn,
+        "moe_impl": moe,
+        "decode_rules": decode_rules,
+        "chips": 512 if multi_pod else 256,
+        "lower_s": round(t1 - t0, 2),
+        "compile_s": round(t2 - t1, 2),
+        "flops_per_device": ca.get("flops"),
+        "bytes_per_device": ca.get("bytes accessed"),
+        "transcendentals": ca.get("transcendentals"),
+        "memory": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+        },
+        "params": count_params(bundle),
+        "tokens": (shape.global_batch * shape.seq_len
+                   if shape.kind != "decode" else shape.global_batch),
+        "kind": shape.kind,
+    }
+    if want_hlo:
+        hlo = compiled.as_text()
+        result["collectives"] = collective_bytes(hlo)
+        result["hlo_chars"] = len(hlo)
+        del hlo
+    return result
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", required=True)
+    p.add_argument("--shape", required=True, choices=sorted(INPUT_SHAPES))
+    p.add_argument("--multi-pod", action="store_true")
+    p.add_argument("--gossip", default="dense", choices=["dense", "ring"])
+    p.add_argument("--attn", default="naive", choices=["naive", "chunked"])
+    p.add_argument("--attn-chunk", type=int, default=4096)
+    p.add_argument("--moe", default="allreduce",
+                   choices=["allreduce", "deferred"])
+    p.add_argument("--decode-rules", default="serve",
+                   choices=["serve", "decode"])
+    p.add_argument("--remat", default="full",
+                   choices=["full", "save_collectives"])
+    p.add_argument("--out", default=None)
+    args = p.parse_args(argv)
+
+    result = run_one(args.arch, args.shape, args.multi_pod, args.gossip,
+                     attn=args.attn, moe=args.moe, attn_chunk=args.attn_chunk,
+                     decode_rules=args.decode_rules, remat=args.remat)
+    print(json.dumps(result, indent=2))
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(result, f, indent=2)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,27 @@
+"""Production mesh builders (functions, never module-level constants, so
+importing this module never touches jax device state)."""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "agent_axes", "num_agents"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 256 chips (16 data x 16 model).  Multi-pod: 2 pods = 512
+    chips with a leading "pod" axis."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def agent_axes(mesh) -> tuple[str, ...]:
+    """Mesh axes that host the decentralized agents (paper's m)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def num_agents(mesh) -> int:
+    n = 1
+    for a in agent_axes(mesh):
+        n *= mesh.shape[a]
+    return n

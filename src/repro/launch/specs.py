@@ -1,0 +1,124 @@
+"""ShapeDtypeStruct input specs + sharding trees for every
+(arch x input-shape x mode) — the dry-run never allocates real arrays."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import ArchConfig, InputShape, config_for_shape
+from ..dist.sharding import (TRAIN_RULES, SERVE_RULES, DECODE_RULES,
+                             logical_spec)
+from ..models import build_model
+from ..models.build import ModelBundle
+
+Pytree = Any
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def _sharding_tree(mesh, abstract: Pytree, logical: Pytree, table) -> Pytree:
+    return jax.tree.map(
+        lambda a, log: NamedSharding(mesh, logical_spec(mesh, a.shape, log,
+                                                        table)),
+        abstract, logical)
+
+
+def with_agent_axis(abstract: Pytree, logical: Pytree, m: int):
+    """Prepend the decentralized agent dimension to every param leaf."""
+    abs_m = jax.tree.map(lambda a: _sds((m,) + a.shape, a.dtype), abstract)
+    log_m = jax.tree.map(lambda l: ("agents",) + tuple(l), logical,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return abs_m, log_m
+
+
+def train_specs(bundle: ModelBundle, shape: InputShape, mesh, m: int):
+    """(params_abs, batch_abs, shardings...) for the decentralized train step."""
+    cfg = bundle.cfg
+    assert shape.global_batch % m == 0, (shape.global_batch, m)
+    per_agent = shape.global_batch // m
+    S = shape.seq_len
+
+    params_abs, params_log = with_agent_axis(bundle.abstract(),
+                                             bundle.logical_axes(), m)
+    params_sh = _sharding_tree(mesh, params_abs, params_log, TRAIN_RULES)
+
+    batch_abs = {
+        "tokens": _sds((m, per_agent, S), jnp.int32),
+        "labels": _sds((m, per_agent, S), jnp.int32),
+    }
+    batch_log = {
+        "tokens": ("agents", "batch", "seq"),
+        "labels": ("agents", "batch", "seq"),
+    }
+    if cfg.family == "audio":
+        batch_abs["frames"] = _sds((m, per_agent, S, cfg.d_model), bundle.dtype)
+        batch_log["frames"] = ("agents", "batch", "seq", "embed")
+    if cfg.num_prefix_embeds:
+        batch_abs["prefix_embeds"] = _sds(
+            (m, per_agent, cfg.num_prefix_embeds, cfg.d_model), bundle.dtype)
+        batch_log["prefix_embeds"] = ("agents", "batch", "seq", "embed")
+    batch_sh = jax.tree.map(
+        lambda a, log: NamedSharding(mesh, logical_spec(mesh, a.shape, log,
+                                                        TRAIN_RULES)),
+        batch_abs, batch_log)
+    return params_abs, params_sh, batch_abs, batch_sh
+
+
+def serve_params_specs(bundle: ModelBundle, mesh):
+    params_abs = bundle.abstract()
+    params_sh = _sharding_tree(mesh, params_abs, bundle.logical_axes(),
+                               SERVE_RULES)
+    return params_abs, params_sh
+
+
+def prefill_specs(bundle: ModelBundle, shape: InputShape, mesh):
+    cfg = bundle.cfg
+    B, S = shape.global_batch, shape.seq_len
+    params_abs, params_sh = serve_params_specs(bundle, mesh)
+    batch_abs = {"tokens": _sds((B, S), jnp.int32)}
+    batch_log = {"tokens": ("batch", "seq")}
+    if cfg.family == "audio":
+        batch_abs["frames"] = _sds((B, S, cfg.d_model), bundle.dtype)
+        batch_log["frames"] = ("batch", "seq", "embed")
+    if cfg.num_prefix_embeds:
+        batch_abs["prefix_embeds"] = _sds(
+            (B, cfg.num_prefix_embeds, cfg.d_model), bundle.dtype)
+        batch_log["prefix_embeds"] = ("batch", "seq", "embed")
+    batch_sh = jax.tree.map(
+        lambda a, log: NamedSharding(mesh, logical_spec(mesh, a.shape, log,
+                                                        SERVE_RULES)),
+        batch_abs, batch_log)
+    return params_abs, params_sh, batch_abs, batch_sh
+
+
+def decode_specs(bundle: ModelBundle, shape: InputShape, mesh,
+                 rules=None):
+    """serve_step inputs: params, token (B,), cache(seq_len), pos.
+
+    ``rules`` defaults to SERVE_RULES; pass DECODE_RULES for the §Perf
+    head_dim-fallback layout (shards attn weights when heads %% model != 0)."""
+    cfg = bundle.cfg
+    table = rules if rules is not None else SERVE_RULES
+    B, S = shape.global_batch, shape.seq_len
+    params_abs = bundle.abstract()
+    params_sh = _sharding_tree(mesh, params_abs, bundle.logical_axes(), table)
+    spec = bundle.cache_spec(B, S)
+    cache_abs, cache_sh = {}, {}
+    for name, entry in spec.items():
+        shp, log, dt = (entry if len(entry) == 3 else (*entry, None))
+        dt = dt or bundle.dtype
+        cache_abs[name] = _sds(shp, dt)
+        cache_sh[name] = NamedSharding(
+            mesh, logical_spec(mesh, shp, log, table))
+    token_abs = _sds((B,), jnp.int32)
+    token_sh = NamedSharding(
+        mesh, logical_spec(mesh, (B,), ("batch",), table))
+    pos_abs = _sds((), jnp.int32)
+    pos_sh = NamedSharding(mesh, P())
+    return (params_abs, params_sh, token_abs, token_sh, cache_abs, cache_sh,
+            pos_abs, pos_sh)

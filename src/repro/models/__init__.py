@@ -1,0 +1,5 @@
+from .build import build_model, ModelBundle
+from .common import ArrayDef, init_params, logical_axes_of
+
+__all__ = ["build_model", "ModelBundle", "ArrayDef", "init_params",
+           "logical_axes_of"]

@@ -1,0 +1,68 @@
+"""Family dispatch: ArchConfig -> ModelBundle of functional entry points."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from . import encdec, hybrid, transformer, xlstm
+from .common import abstract_params, init_params, logical_axes_of
+
+Pytree = Any
+
+_FAMILIES = {
+    "dense": transformer,
+    "moe": transformer,
+    "vlm": transformer,
+    "hybrid": hybrid,
+    "xlstm": xlstm,
+    "audio": encdec,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelBundle:
+    cfg: ArchConfig
+    param_defs: Pytree
+    loss_fn: Callable          # (params, batch) -> scalar
+    prefill_fn: Callable       # (params, batch) -> {logits, cache, pos}
+    decode_fn: Callable        # (params, token, cache, pos) -> {...}
+    cache_spec: Callable       # (batch, seq_len) -> {name: (shape, logical, dtype)}
+
+    def init(self, key: jax.Array) -> Pytree:
+        return init_params(key, self.param_defs, self.dtype)
+
+    def abstract(self) -> Pytree:
+        return abstract_params(self.param_defs, self.dtype)
+
+    def logical_axes(self) -> Pytree:
+        return logical_axes_of(self.param_defs)
+
+    @property
+    def dtype(self):
+        return jnp.dtype(self.cfg.dtype)
+
+
+def build_model(cfg: ArchConfig, mesh=None) -> ModelBundle:
+    """`mesh` is only needed by shard_map-based §Perf paths (e.g.
+    moe_impl="deferred"); single-device/smoke use leaves it None."""
+    if cfg.family not in _FAMILIES:
+        raise KeyError(f"unknown family {cfg.family!r}")
+    mod = _FAMILIES[cfg.family]
+    if cfg.family in ("dense", "moe", "vlm"):
+        prefill = lambda params, batch: mod.forward_prefill(params, batch,
+                                                            cfg, mesh=mesh)
+    else:
+        prefill = lambda params, batch: mod.forward_prefill(params, batch, cfg)
+    return ModelBundle(
+        cfg=cfg,
+        param_defs=mod.param_defs(cfg),
+        loss_fn=lambda params, batch: mod.loss_fn(params, batch, cfg),
+        prefill_fn=prefill,
+        decode_fn=lambda params, token, cache, pos: mod.forward_decode(
+            params, token, cache, pos, cfg),
+        cache_spec=lambda batch, seq_len: mod.cache_spec(cfg, batch, seq_len),
+    )

@@ -1,0 +1,286 @@
+"""Shared model machinery: parameter definitions with logical sharding axes,
+norms, rotary embeddings, and GQA attention (full / causal / sliding-window),
+with KV-cache prefill and ring-buffer decode.
+
+All modules are functional: ``param_defs(cfg)`` returns a pytree of ArrayDef;
+``init_params`` materializes it; forward functions take the params pytree.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Pytree = Any
+
+DEFAULT_DTYPE = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class ArrayDef:
+    """Declarative parameter: shape + logical axis names + initializer."""
+
+    shape: tuple[int, ...]
+    logical: tuple[str | None, ...]
+    init: str = "normal"  # normal | zeros | ones
+    scale: float | None = None  # stddev for normal; default 1/sqrt(fan_in)
+    dtype: Any = None
+
+    def materialize(self, key, default_dtype):
+        dtype = self.dtype or default_dtype
+        if self.init == "zeros":
+            return jnp.zeros(self.shape, dtype)
+        if self.init == "ones":
+            return jnp.ones(self.shape, dtype)
+        fan_in = self.shape[-2] if len(self.shape) >= 2 else self.shape[-1]
+        scale = self.scale if self.scale is not None else 1.0 / math.sqrt(fan_in)
+        return (scale * jax.random.normal(key, self.shape, jnp.float32)
+                ).astype(dtype)
+
+
+def init_params(key: jax.Array, defs: Pytree, dtype=DEFAULT_DTYPE) -> Pytree:
+    leaves, treedef = jax.tree.flatten(
+        defs, is_leaf=lambda x: isinstance(x, ArrayDef))
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree.unflatten(
+        treedef, [d.materialize(k, dtype) for k, d in zip(keys, leaves)])
+
+
+def abstract_params(defs: Pytree, dtype=DEFAULT_DTYPE) -> Pytree:
+    """ShapeDtypeStruct pytree (for AOT dry-runs — no allocation)."""
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype or dtype),
+        defs, is_leaf=lambda x: isinstance(x, ArrayDef))
+
+
+def logical_axes_of(defs: Pytree) -> Pytree:
+    return jax.tree.map(lambda d: d.logical, defs,
+                        is_leaf=lambda x: isinstance(x, ArrayDef))
+
+
+# ---------------------------------------------------------------------------
+# Normalization
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, gamma: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * gamma.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def layer_norm(x: jax.Array, gamma: jax.Array, beta: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mean = xf.mean(axis=-1, keepdims=True)
+    var = xf.var(axis=-1, keepdims=True)
+    out = (xf - mean) * jax.lax.rsqrt(var + eps)
+    out = out * gamma.astype(jnp.float32) + beta.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, rotary_frac: float, theta: float) -> np.ndarray:
+    rot_dim = int(head_dim * rotary_frac) // 2 * 2
+    inv = 1.0 / (theta ** (np.arange(0, rot_dim, 2, dtype=np.float64) / rot_dim))
+    return inv.astype(np.float32)  # (rot_dim/2,)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, rotary_frac: float = 1.0,
+               theta: float = 10000.0) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq) int32.
+
+    Supports partial rotary (stablelm 25%, chatglm3's 2D/half RoPE = 50%):
+    only the first rot_dim channels are rotated, the rest pass through.
+    """
+    head_dim = x.shape[-1]
+    inv = jnp.asarray(rope_freqs(head_dim, rotary_frac, theta))
+    rot_dim = inv.shape[0] * 2
+    if rot_dim == 0:
+        return x
+    ang = positions[..., None].astype(jnp.float32) * inv  # (..., seq, rot/2)
+    cos = jnp.cos(ang)[..., None, :]  # (..., seq, 1, rot/2)
+    sin = jnp.sin(ang)[..., None, :]
+    xr = x[..., :rot_dim].astype(jnp.float32)
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    r1 = x1 * cos - x2 * sin
+    r2 = x2 * cos + x1 * sin
+    rotated = jnp.stack([r1, r2], axis=-1).reshape(xr.shape)
+    return jnp.concatenate([rotated.astype(x.dtype), x[..., rot_dim:]], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              causal: bool = True, window: int | None = None,
+              q_offset: int | jax.Array = 0,
+              kv_offset: int | jax.Array = 0) -> jax.Array:
+    """Batched grouped-query attention (never materializes repeated KV).
+
+    q: (B, Sq, H, hd); k/v: (B, Sk, KV, hd).  q position i is absolute
+    position q_offset + i; k position j is kv_offset + j.  `window` masks
+    keys more than `window` positions behind the query.
+    """
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, hd)
+    scale = 1.0 / math.sqrt(hd)
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qg, k).astype(jnp.float32) * scale
+    qpos = q_offset + jnp.arange(Sq)[:, None]  # (Sq, 1)
+    kpos = kv_offset + jnp.arange(k.shape[1])[None, :]  # (1, Sk)
+    mask = jnp.ones((Sq, k.shape[1]), dtype=bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
+    return out.reshape(B, Sq, H, hd)
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      causal: bool = True, window: int | None = None,
+                      chunk: int = 4096) -> jax.Array:
+    """Flash-style blocked GQA: same math as ``attention`` but never
+    materializes the (Sq, Sk) score matrix — query chunks stream over key
+    chunks with an online-softmax accumulator (beyond-paper §Perf path).
+
+    Chunks strictly above the causal diagonal (and, with ``window``, chunks
+    entirely behind the window) are *skipped*, so HLO FLOPs drop to the
+    ~triangle/band actually needed — the naive einsum always pays full Sq*Sk.
+    Loops are unrolled Python (not lax.scan) so ``cost_analysis()`` stays
+    faithful (a while-loop body is counted once).
+    """
+    B, Sq, H, hd = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = 1.0 / math.sqrt(hd)
+    c = min(chunk, Sq, Sk)
+    pad_q, pad_k = (-Sq) % c, (-Sk) % c
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    nq, nk = (Sq + pad_q) // c, (Sk + pad_k) // c
+    qg = q.reshape(B, nq, c, KV, G, hd)
+    outs = []
+    for qi in range(nq):
+        q_blk = qg[:, qi]                       # (B, c, KV, G, hd)
+        q0 = qi * c
+        acc = jnp.zeros((B, KV, G, c, hd), jnp.float32)
+        m = jnp.full((B, KV, G, c, 1), -jnp.inf, jnp.float32)
+        l = jnp.zeros((B, KV, G, c, 1), jnp.float32)
+        for ki in range(nk):
+            k0 = ki * c
+            if causal and k0 > q0 + c - 1:
+                continue                         # above the diagonal
+            if window is not None and k0 + c - 1 <= q0 - window:
+                continue                         # entirely behind the window
+            k_blk, v_blk = k[:, k0:k0 + c], v[:, k0:k0 + c]
+            s = jnp.einsum("bqkgd,bskd->bkgqs", q_blk,
+                           k_blk).astype(jnp.float32) * scale
+            qpos = q0 + jnp.arange(c)[:, None]
+            kpos = k0 + jnp.arange(c)[None, :]
+            mask = kpos < Sk                     # padded keys are invalid
+            if causal:
+                mask &= kpos <= qpos
+            if window is not None:
+                mask &= kpos > qpos - window
+            s = jnp.where(mask, s, -jnp.inf)
+            m_new = jnp.maximum(m, s.max(-1, keepdims=True))
+            # fully-masked rows keep m = -inf; keep alpha finite there
+            m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            alpha = jnp.exp(jnp.where(jnp.isfinite(m), m - m_safe, -jnp.inf))
+            p = jnp.exp(s - m_safe)
+            l = alpha * l + p.sum(-1, keepdims=True)
+            acc = alpha * acc + jnp.einsum(
+                "bkgqs,bskd->bkgqd", p.astype(v.dtype), v_blk
+            ).astype(jnp.float32)
+            m = m_new
+        out = (acc / jnp.maximum(l, 1e-30)).astype(q.dtype)  # (B,KV,G,c,hd)
+        outs.append(jnp.moveaxis(out, 3, 1).reshape(B, c, H, hd))
+    o = jnp.concatenate(outs, axis=1)
+    return o[:, :Sq]
+
+
+def decode_attention(q: jax.Array, k_new: jax.Array, v_new: jax.Array,
+                     k_cache: jax.Array, v_cache: jax.Array,
+                     cache_valid: jax.Array) -> jax.Array:
+    """One-token grouped attention against a (ring-buffer) KV cache.
+
+    q: (B, 1, H, hd); k_new/v_new: (B, 1, KV, hd); caches: (B, C, KV, hd);
+    cache_valid: (C,) or (B, C) bool.  The new token always attends to itself.
+    """
+    B, _, H, hd = q.shape
+    KV = k_cache.shape[2]
+    G = H // KV
+    qg = q.reshape(B, 1, KV, G, hd)
+    scale = 1.0 / math.sqrt(hd)
+    lc = jnp.einsum("bqkgd,bskd->bkgqs", qg, k_cache).astype(jnp.float32) * scale
+    if cache_valid.ndim == 1:
+        valid = cache_valid[None, None, None, None, :]
+    else:
+        valid = cache_valid[:, None, None, None, :]
+    lc = jnp.where(valid, lc, -1e30)
+    ls = jnp.einsum("bqkgd,bskd->bkgqs", qg, k_new).astype(jnp.float32) * scale
+    logits = jnp.concatenate([lc, ls], axis=-1)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    pc, ps = probs[..., :-1], probs[..., -1:]
+    out = jnp.einsum("bkgqs,bskd->bqkgd", pc, v_cache)
+    out = out + jnp.einsum("bkgqs,bskd->bqkgd", ps, v_new)
+    return out.reshape(B, 1, H, hd)
+
+
+def ring_buffer_write(cache: jax.Array, new: jax.Array,
+                      pos: jax.Array) -> jax.Array:
+    """Write (B, 1, ...) `new` into slot pos % C of (B, C, ...) `cache`."""
+    C = cache.shape[1]
+    slot = jnp.asarray(pos % C, dtype=jnp.int32)
+    return jax.lax.dynamic_update_slice_in_dim(
+        cache, new.astype(cache.dtype), slot, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+           w_down: jax.Array) -> jax.Array:
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    return jnp.einsum("...f,fd->...d", jax.nn.silu(g.astype(jnp.float32)
+                                                    ).astype(x.dtype) * u, w_down)
+
+
+def gelu_mlp(x: jax.Array, w_up: jax.Array, w_down: jax.Array) -> jax.Array:
+    h = jnp.einsum("...d,df->...f", x, w_up)
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    return jnp.einsum("...f,fd->...d", h, w_down)
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  vocab_size: int | None = None) -> jax.Array:
+    """Mean token cross-entropy in f32.  `vocab_size` masks padded vocab."""
+    lf = logits.astype(jnp.float32)
+    if vocab_size is not None and vocab_size < lf.shape[-1]:
+        pad = jnp.arange(lf.shape[-1]) >= vocab_size
+        lf = jnp.where(pad, -1e30, lf)
+    logz = jax.scipy.special.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def pad_vocab(vocab: int, multiple: int = 512) -> int:
+    return ((vocab + multiple - 1) // multiple) * multiple

@@ -1,0 +1,150 @@
+"""Zamba2-style hybrid: a deep Mamba2 trunk with *shared* GQA attention
+blocks applied every `hybrid_attn_every` layers, alternating between
+`hybrid_num_shared` weight-shared block instances [arXiv:2411.15242].
+
+Decode state = per-mamba-layer (ssm_state, conv_tail) + one KV cache per
+attention *application site* (weights are shared, caches are not).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .common import ArrayDef, pad_vocab, rms_norm
+from . import ssm
+from . import transformer as tfm
+
+Pytree = Any
+
+
+def _attn_sites(cfg: ArchConfig) -> list[int]:
+    """Mamba layer indices after which a shared attention block runs."""
+    return [i for i in range(cfg.num_layers)
+            if (i + 1) % cfg.hybrid_attn_every == 0]
+
+
+def param_defs(cfg: ArchConfig) -> Pytree:
+    L, d = cfg.num_layers, cfg.d_model
+    V = pad_vocab(cfg.vocab_size)
+    S = cfg.hybrid_num_shared
+    shared = {}
+    shared.update(tfm._norm_defs(S, d, cfg, "attn_norm"))
+    shared.update(tfm._norm_defs(S, d, cfg, "mlp_norm"))
+    shared.update(tfm.attn_defs(S, cfg))
+    shared.update(tfm.mlp_defs(S, cfg))
+    return {
+        "embed": ArrayDef((V, d), ("vocab", "embed"), scale=0.02),
+        "final_norm_gamma": ArrayDef((d,), ("embed",), init="ones"),
+        "mamba": ssm.mamba_defs(L, cfg),
+        "shared": shared,
+    }
+
+
+def _shared_slice(params, site_idx, cfg):
+    return jax.tree.map(lambda a: a[site_idx % cfg.hybrid_num_shared],
+                        params["shared"])
+
+
+def forward_train(params: Pytree, batch: dict, cfg: ArchConfig) -> jax.Array:
+    x = tfm.embed_tokens(params, batch, cfg)
+    sites = set(_attn_sites(cfg))
+    site_idx = 0
+    mamba_body = jax.checkpoint(
+        lambda pl, x: ssm.mamba_block_train(pl, x, cfg))
+    attn_body = jax.checkpoint(
+        lambda pl, x: tfm._layer_train(pl, x, cfg, cfg.attn_window))
+    for i in range(cfg.num_layers):
+        x = mamba_body(tfm.layer_slice(params["mamba"], i), x)
+        if i in sites:
+            x = attn_body(_shared_slice(params, site_idx, cfg), x)
+            site_idx += 1
+    x = rms_norm(x, params["final_norm_gamma"])
+    return tfm.unembed(params, x, cfg)
+
+
+def loss_fn(params: Pytree, batch: dict, cfg: ArchConfig) -> jax.Array:
+    from .common import cross_entropy
+    logits = forward_train(params, batch, cfg)
+    return cross_entropy(logits, batch["labels"], cfg.vocab_size)
+
+
+def forward_prefill(params: Pytree, batch: dict, cfg: ArchConfig) -> dict:
+    x = tfm.embed_tokens(params, batch, cfg)
+    S = x.shape[1]
+    C = tfm.cache_len_for(cfg, S)
+    sites = set(_attn_sites(cfg))
+    ssm_states, conv_tails, ks, vs = [], [], [], []
+    site_idx = 0
+    mamba_body = jax.checkpoint(
+        lambda pl, x: ssm.mamba_block_prefill(pl, x, cfg))
+    attn_body = jax.checkpoint(
+        lambda pl, x: tfm._layer_prefill(pl, x, cfg, cfg.attn_window, C))
+    for i in range(cfg.num_layers):
+        x, (h_f, tail) = mamba_body(tfm.layer_slice(params["mamba"], i), x)
+        ssm_states.append(h_f)
+        conv_tails.append(tail)
+        if i in sites:
+            x, (k_c, v_c) = attn_body(_shared_slice(params, site_idx, cfg), x)
+            ks.append(k_c)
+            vs.append(v_c)
+            site_idx += 1
+    x = rms_norm(x, params["final_norm_gamma"])
+    logits = tfm.unembed(params, x[:, -1:], cfg)
+    cache = {
+        "ssm": jnp.stack(ssm_states),
+        "conv": jnp.stack(conv_tails),
+        "k": jnp.stack(ks),
+        "v": jnp.stack(vs),
+    }
+    return {"logits": logits[:, 0], "cache": cache,
+            "pos": jnp.asarray(S, jnp.int32)}
+
+
+def forward_decode(params: Pytree, token: jax.Array, cache: dict,
+                   pos: jax.Array, cfg: ArchConfig) -> dict:
+    x = params["embed"][token][:, None, :]
+    C = cache["k"].shape[2]
+    cache_valid = jnp.arange(C) < jnp.minimum(pos, C)
+    sites = set(_attn_sites(cfg))
+    new_ssm, new_conv, new_ks, new_vs = [], [], [], []
+    site_idx = 0
+    for i in range(cfg.num_layers):
+        pl = tfm.layer_slice(params["mamba"], i)
+        x, (h_n, tail_n) = ssm.mamba_block_decode(
+            pl, x, (cache["ssm"][i], cache["conv"][i]), cfg)
+        new_ssm.append(h_n)
+        new_conv.append(tail_n)
+        if i in sites:
+            spl = _shared_slice(params, site_idx, cfg)
+            x, nk, nv = tfm._layer_decode(spl, x, cache["k"][site_idx],
+                                          cache["v"][site_idx], pos, cfg,
+                                          cache_valid)
+            new_ks.append(nk)
+            new_vs.append(nv)
+            site_idx += 1
+    x = rms_norm(x, params["final_norm_gamma"])
+    logits = tfm.unembed(params, x, cfg)
+    new_cache = {"ssm": jnp.stack(new_ssm), "conv": jnp.stack(new_conv),
+                 "k": jnp.stack(new_ks), "v": jnp.stack(new_vs)}
+    return {"logits": logits[:, 0], "cache": new_cache, "pos": pos + 1}
+
+
+def cache_spec(cfg: ArchConfig, batch: int, seq_len: int) -> dict:
+    """(shape, logical) for every cache leaf — used by launch.input_specs."""
+    C = tfm.cache_len_for(cfg, seq_len)
+    n_sites = len(_attn_sites(cfg))
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    conv_dim = cfg.d_inner + 2 * N
+    return {
+        "ssm": ((cfg.num_layers, batch, H, P, N),
+                ("layers", "batch", "ssm_heads", None, "state"), "float32"),
+        "conv": ((cfg.num_layers, batch, cfg.ssm_conv - 1, conv_dim),
+                 ("layers", "batch", "conv", "ssm_heads"), None),
+        "k": ((n_sites, batch, C, cfg.num_kv_heads, cfg.head_dim),
+              ("layers", "batch", "kv_seq", "kv_heads", "head_dim"), None),
+        "v": ((n_sites, batch, C, cfg.num_kv_heads, cfg.head_dim),
+              ("layers", "batch", "kv_seq", "kv_heads", "head_dim"), None),
+    }

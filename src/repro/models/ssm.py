@@ -1,0 +1,265 @@
+"""Mamba2 (SSD) blocks and the Zamba2-style hybrid stack.
+
+TPU adaptation (DESIGN.md §2): the CUDA Mamba2 kernel's warp-level scan is
+re-thought as the chunked SSD form — intra-chunk contributions are batched
+dense einsums over all chunks at once (MXU-friendly, counted correctly by
+cost analysis), and only the tiny inter-chunk state recurrence
+(h_c = decay_c * h_{c-1} + S_c, elementwise over (B,H,P,N)) runs in a
+lax.scan.  Chunk length 64 keeps the (B, nc, Q, Q) decay matrices inside
+VMEM-scale tiles; kernels/ssm_scan.py provides the Pallas version of the
+intra-chunk block.
+
+Decode keeps a recurrent state per layer: ssm state (B, H, P, N) + causal
+conv tail (B, K-1, conv_dim) — O(1) per token, which is what makes the
+long_500k shape native for SSM/hybrid archs.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .common import ArrayDef, rms_norm, ring_buffer_write
+from . import transformer as tfm
+
+Pytree = Any
+
+CHUNK = 64
+
+
+# ---------------------------------------------------------------------------
+# Parameter definitions
+# ---------------------------------------------------------------------------
+
+def mamba_defs(L: int, cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    din = cfg.d_inner
+    N = cfg.ssm_state
+    H = cfg.ssm_heads
+    K = cfg.ssm_conv
+    conv_dim = din + 2 * N  # x + B + C channels get the causal conv
+    return {
+        "norm_gamma": ArrayDef((L, d), ("layers", "embed"), init="ones"),
+        "w_in_x": ArrayDef((L, d, din), ("layers", "embed", "ssm_heads")),
+        "w_in_z": ArrayDef((L, d, din), ("layers", "embed", "ssm_heads")),
+        "w_in_B": ArrayDef((L, d, N), ("layers", "embed", "state")),
+        "w_in_C": ArrayDef((L, d, N), ("layers", "embed", "state")),
+        "w_in_dt": ArrayDef((L, d, H), ("layers", "embed", "ssm_heads")),
+        "dt_bias": ArrayDef((L, H), ("layers", "ssm_heads"), init="zeros"),
+        "A_log": ArrayDef((L, H), ("layers", "ssm_heads"), init="zeros"),
+        "D": ArrayDef((L, H), ("layers", "ssm_heads"), init="ones"),
+        "conv_w": ArrayDef((L, K, conv_dim), ("layers", "conv", "ssm_heads")),
+        "conv_b": ArrayDef((L, conv_dim), ("layers", "ssm_heads"), init="zeros"),
+        "w_out": ArrayDef((L, din, d), ("layers", "ssm_heads", "embed")),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Causal depthwise conv
+# ---------------------------------------------------------------------------
+
+def causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """x: (B, S, C); w: (K, C) depthwise causal conv + silu."""
+    K = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for k in range(K):  # K=4: unrolled taps keep cost analysis exact
+        # tap k sees x[t - (K-1-k)]: w[K-1] multiplies the current input,
+        # matching causal_conv_step's window layout [oldest, ..., newest].
+        out = out + pad[:, k:k + x.shape[1]] * w[k]
+    out = out + b
+    return jax.nn.silu(out.astype(jnp.float32)).astype(x.dtype)
+
+
+def causal_conv_step(x_t: jax.Array, tail: jax.Array, w: jax.Array,
+                     b: jax.Array):
+    """One-token conv: x_t (B, C), tail (B, K-1, C) = previous inputs."""
+    window = jnp.concatenate([tail, x_t[:, None]], axis=1)  # (B, K, C)
+    out = jnp.einsum("bkc,kc->bc", window, w) + b
+    new_tail = window[:, 1:]
+    return jax.nn.silu(out.astype(jnp.float32)).astype(x_t.dtype), new_tail
+
+
+# ---------------------------------------------------------------------------
+# SSD core
+# ---------------------------------------------------------------------------
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array | None,
+                Bm: jax.Array, Cm: jax.Array, D: jax.Array | None,
+                h0: jax.Array | None = None,
+                log_decay: jax.Array | None = None):
+    """Chunked state-space-duality scan (shared by Mamba2 and mLSTM).
+
+    x: (B, S, H, P); dt: (B, S, H) input-gate scale (post-softplus dt for
+    Mamba2, exp input gate for mLSTM); per-step log-decay is ``dt*A``
+    (Mamba2, pass A (H,)) or ``log_decay`` (B,S,H) directly (mLSTM log f).
+    Bm/Cm: (B, S, N) shared across heads (Mamba2) or (B, S, H, N) per-head
+    (mLSTM k/q).  D: (H,) skip or None.  Returns y (B,S,H,P) and final
+    state (B,H,P,N) in f32.
+    """
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    per_head = Bm.ndim == 4
+    Q = min(CHUNK, S)
+    if S % Q:
+        # pad with dt=0 steps: decay exp(0)=1, zero state contribution —
+        # exactly a no-op suffix; outputs are cropped back below.
+        pad = Q - S % Q
+        padded = ssd_chunked(
+            jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0))),
+            jnp.pad(dt, ((0, 0), (0, pad), (0, 0))),
+            A,
+            jnp.pad(Bm, [(0, 0), (0, pad)] + [(0, 0)] * (Bm.ndim - 2)),
+            jnp.pad(Cm, [(0, 0), (0, pad)] + [(0, 0)] * (Cm.ndim - 2)),
+            D, h0,
+            log_decay=None if log_decay is None else jnp.pad(
+                log_decay, ((0, 0), (0, pad), (0, 0))))
+        y_p, h_p = padded
+        return y_p[:, :S], h_p
+    nc = S // Q
+
+    xc = x.reshape(B, nc, Q, H, P)
+    dtc = dt.reshape(B, nc, Q, H)
+    Bc = Bm.reshape((B, nc, Q, H, N) if per_head else (B, nc, Q, N))
+    Cc = Cm.reshape((B, nc, Q, H, N) if per_head else (B, nc, Q, N))
+
+    if log_decay is None:
+        a = dtc * A  # (B, nc, Q, H), negative
+    else:
+        a = log_decay.reshape(B, nc, Q, H)
+    a_cum = jnp.cumsum(a, axis=2)  # within-chunk inclusive cumsum
+
+    # --- states contributed by each chunk (batched over chunks) ---
+    decay_to_end = jnp.exp(a_cum[:, :, -1:, :] - a_cum)  # (B,nc,Q,H)
+    weighted_x = xc * (dtc * decay_to_end)[..., None]  # (B,nc,Q,H,P)
+    if per_head:
+        chunk_states = jnp.einsum("bcqhn,bcqhp->bchpn", Bc, weighted_x)
+    else:
+        chunk_states = jnp.einsum("bcqn,bcqhp->bchpn", Bc, weighted_x)
+
+    # --- inter-chunk recurrence (tiny, elementwise; lax.scan) ---
+    chunk_decay = jnp.exp(a_cum[:, :, -1, :])  # (B, nc, H)
+    if h0 is None:
+        h0 = jnp.zeros((B, H, P, N), jnp.float32)
+
+    def scan_body(h, inp):
+        dec, s = inp  # dec (B,H), s (B,H,P,N)
+        h_new = dec[..., None, None] * h + s.astype(jnp.float32)
+        return h_new, h
+
+    (h_final, h_prevs) = jax.lax.scan(
+        scan_body,
+        h0,
+        (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(chunk_states, 1, 0)))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)  # (B,nc,H,P,N) state BEFORE chunk
+
+    # --- inter-chunk output: y_inter[i] = C_i . (decay(0..i) * h_prev) ---
+    decay_from_start = jnp.exp(a_cum)  # (B,nc,Q,H)
+    if per_head:
+        y_inter = jnp.einsum("bcqhn,bchpn->bcqhp", Cc,
+                             h_prevs.astype(x.dtype))
+    else:
+        y_inter = jnp.einsum("bcqn,bchpn->bcqhp", Cc, h_prevs.astype(x.dtype))
+    y_inter = y_inter * decay_from_start[..., None]
+
+    # --- intra-chunk (quadratic within chunk, batched over chunks) ---
+    if per_head:
+        scores = jnp.einsum("bcihn,bcjhn->bcijh", Cc, Bc)  # (B,nc,Q,Q,H)
+    else:
+        scores = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)[..., None]
+    li = a_cum[:, :, :, None, :]  # (B,nc,Q,1,H)
+    lj = a_cum[:, :, None, :, :]  # (B,nc,1,Q,H)
+    causal = jnp.tril(jnp.ones((Q, Q), bool))[None, None, :, :, None]
+    # mask INSIDE the exp: the anti-causal exponents are positive and can
+    # overflow, and inf*0 in the cotangent would poison the backward pass
+    Lmat = jnp.exp(jnp.where(causal, li - lj, -jnp.inf))  # decay j->i
+    w_ij = scores * Lmat * dtc[:, :, None, :, :]  # (B,nc,Q,Q,H)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", w_ij.astype(x.dtype), xc)
+
+    y = y_inter + y_intra
+    if D is not None:
+        y = y + D[:, None] * xc
+    return y.reshape(B, S, H, P), h_final
+
+
+def ssd_step(x_t, dt_t, A, B_t, C_t, D, h):
+    """Single-token SSD recurrence.  x_t: (B,H,P); dt_t: (B,H);
+    B_t/C_t: (B,N); h: (B,H,P,N)."""
+    decay = jnp.exp(dt_t * A)  # (B,H)
+    upd = jnp.einsum("bhp,bn->bhpn", x_t * dt_t[..., None], B_t)
+    h_new = decay[..., None, None] * h + upd.astype(h.dtype)
+    y = jnp.einsum("bhpn,bn->bhp", h_new.astype(x_t.dtype), C_t)
+    return y + D[:, None] * x_t, h_new
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block
+# ---------------------------------------------------------------------------
+
+def _in_proj(pl, h):
+    xz = jnp.einsum("bsd,de->bse", h, pl["w_in_x"])
+    z = jnp.einsum("bsd,de->bse", h, pl["w_in_z"])
+    Bm = jnp.einsum("bsd,dn->bsn", h, pl["w_in_B"])
+    Cm = jnp.einsum("bsd,dn->bsn", h, pl["w_in_C"])
+    dt = jnp.einsum("bsd,dh->bsh", h, pl["w_in_dt"])
+    return xz, z, Bm, Cm, dt
+
+
+def mamba_block_train(pl: Pytree, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    B, S, d = x.shape
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    h = rms_norm(x, pl["norm_gamma"])
+    xz, z, Bm, Cm, dt = _in_proj(pl, h)
+    conv_in = jnp.concatenate([xz, Bm, Cm], axis=-1)
+    conv_out = causal_conv(conv_in, pl["conv_w"], pl["conv_b"])
+    xz, Bm, Cm = jnp.split(conv_out, [cfg.d_inner, cfg.d_inner + N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + pl["dt_bias"])
+    A = -jnp.exp(pl["A_log"].astype(jnp.float32))
+    y, _ = ssd_chunked(xz.reshape(B, S, H, P), dt, A, Bm, Cm,
+                       pl["D"].astype(jnp.float32), None)
+    y = y.reshape(B, S, cfg.d_inner)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    return x + jnp.einsum("bse,ed->bsd", y, pl["w_out"])
+
+
+def mamba_block_prefill(pl, x, cfg):
+    """Train pass that also returns the final (ssm_state, conv_tail)."""
+    B, S, d = x.shape
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    h = rms_norm(x, pl["norm_gamma"])
+    xz, z, Bm, Cm, dt = _in_proj(pl, h)
+    conv_in = jnp.concatenate([xz, Bm, Cm], axis=-1)
+    conv_tail = conv_in[:, -(cfg.ssm_conv - 1):]
+    conv_out = causal_conv(conv_in, pl["conv_w"], pl["conv_b"])
+    xz, Bm, Cm = jnp.split(conv_out, [cfg.d_inner, cfg.d_inner + N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + pl["dt_bias"])
+    A = -jnp.exp(pl["A_log"].astype(jnp.float32))
+    y, h_final = ssd_chunked(xz.reshape(B, S, H, P), dt, A, Bm, Cm,
+                             pl["D"].astype(jnp.float32), None)
+    y = y.reshape(B, S, cfg.d_inner)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    return x + jnp.einsum("bse,ed->bsd", y, pl["w_out"]), (h_final, conv_tail)
+
+
+def mamba_block_decode(pl, x, state, cfg):
+    """x: (B, 1, d); state = (ssm_state (B,H,P,N) f32, conv_tail (B,K-1,C))."""
+    B = x.shape[0]
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    ssm_h, conv_tail = state
+    h = rms_norm(x, pl["norm_gamma"])
+    xz, z, Bm, Cm, dt = _in_proj(pl, h)
+    conv_in = jnp.concatenate([xz, Bm, Cm], axis=-1)[:, 0]  # (B, C)
+    conv_out, new_tail = causal_conv_step(conv_in, conv_tail, pl["conv_w"],
+                                          pl["conv_b"])
+    xz_c = conv_out[:, :cfg.d_inner]
+    Bm_c = conv_out[:, cfg.d_inner:cfg.d_inner + N]
+    Cm_c = conv_out[:, cfg.d_inner + N:]
+    dt_s = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + pl["dt_bias"])
+    A = -jnp.exp(pl["A_log"].astype(jnp.float32))
+    y, new_h = ssd_step(xz_c.reshape(B, H, P), dt_s, A, Bm_c, Cm_c,
+                        pl["D"].astype(jnp.float32), ssm_h)
+    y = y.reshape(B, 1, cfg.d_inner)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    return x + jnp.einsum("bse,ed->bsd", y, pl["w_out"]), (new_h, new_tail)

@@ -1,0 +1,288 @@
+"""xLSTM-125M [arXiv:2405.04517]: alternating mLSTM / sLSTM blocks.
+
+mLSTM (matrix memory, parallelizable): exactly a per-head-decay SSD — we
+reuse ``ssm.ssd_chunked`` with log-decay = log sigmoid(f̃) and input gate
+i = exp(min(ĩ, cap)); the normalizer n_t is the same recurrence with P=1.
+(The official stabilizer state m_t is replaced by input-gate capping +
+a +1-bounded denominator — numerically safe, documented in DESIGN.md.)
+
+sLSTM (scalar memory, inherently sequential): per-head block-diagonal
+recurrent gates, lax.scan over time.  Its per-token FLOPs are undercounted
+by XLA's while-loop cost analysis; benchmarks/roofline.py adds the analytic
+correction ``slstm_flops_correction``.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .common import ArrayDef, pad_vocab, rms_norm, ring_buffer_write
+from .ssm import ssd_chunked
+from . import transformer as tfm
+
+Pytree = Any
+
+ICAP = 8.0  # input-gate exp cap
+
+
+def _dims(cfg: ArchConfig):
+    din = 2 * cfg.d_model          # mLSTM up-projection factor 2
+    H = cfg.num_heads
+    return din, H, din // H
+
+
+def _is_slstm(cfg: ArchConfig, i: int) -> bool:
+    return i % cfg.slstm_every == 1  # blocks 1, 3, 5, ... are sLSTM
+
+
+def mlstm_defs(L: int, cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    din, H, Ph = _dims(cfg)
+    return {
+        "norm_gamma": ArrayDef((L, d), ("layers", "embed"), init="ones"),
+        "w_gate": ArrayDef((L, d, din), ("layers", "embed", "ssm_heads")),
+        "w_q": ArrayDef((L, d, din), ("layers", "embed", "ssm_heads")),
+        "w_k": ArrayDef((L, d, din), ("layers", "embed", "ssm_heads")),
+        "w_v": ArrayDef((L, d, din), ("layers", "embed", "ssm_heads")),
+        "w_i": ArrayDef((L, d, H), ("layers", "embed", "heads")),
+        "w_f": ArrayDef((L, d, H), ("layers", "embed", "heads")),
+        "b_f": ArrayDef((L, H), ("layers", "heads"), init="ones"),
+        "out_norm": ArrayDef((L, din), ("layers", "ssm_heads"), init="ones"),
+        "w_down": ArrayDef((L, din, d), ("layers", "ssm_heads", "embed")),
+    }
+
+
+def slstm_defs(L: int, cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    H = cfg.num_heads
+    Ph = d // H
+    return {
+        "norm_gamma": ArrayDef((L, d), ("layers", "embed"), init="ones"),
+        "w_gates": ArrayDef((L, d, 4 * d), ("layers", "embed", "mlp")),
+        "r_gates": ArrayDef((L, H, Ph, 4 * Ph), ("layers", "heads", None, None),
+                            scale=0.05),
+        "b_gates": ArrayDef((L, 4 * d), ("layers", "mlp"), init="zeros"),
+        "w_down": ArrayDef((L, d, d), ("layers", "mlp", "embed")),
+    }
+
+
+def param_defs(cfg: ArchConfig) -> Pytree:
+    L, d = cfg.num_layers, cfg.d_model
+    V = pad_vocab(cfg.vocab_size)
+    n_m = sum(1 for i in range(L) if not _is_slstm(cfg, i))
+    n_s = L - n_m
+    return {
+        "embed": ArrayDef((V, d), ("vocab", "embed"), scale=0.02),
+        "final_norm_gamma": ArrayDef((d,), ("embed",), init="ones"),
+        "mlstm": mlstm_defs(n_m, cfg),
+        "slstm": slstm_defs(max(n_s, 1), cfg),
+    }
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def _mlstm_gates(pl, h):
+    q = jnp.einsum("bsd,de->bse", h, pl["w_q"])
+    k = jnp.einsum("bsd,de->bse", h, pl["w_k"])
+    v = jnp.einsum("bsd,de->bse", h, pl["w_v"])
+    gate = jnp.einsum("bsd,de->bse", h, pl["w_gate"])
+    i_pre = jnp.einsum("bsd,dh->bsh", h, pl["w_i"]).astype(jnp.float32)
+    f_pre = (jnp.einsum("bsd,dh->bsh", h, pl["w_f"]).astype(jnp.float32)
+             + pl["b_f"].astype(jnp.float32))
+    i_gate = jnp.exp(jnp.minimum(i_pre, ICAP))
+    log_f = jax.nn.log_sigmoid(f_pre)
+    return q, k, v, gate, i_gate, log_f
+
+
+def mlstm_block(pl: Pytree, x: jax.Array, cfg: ArchConfig,
+                state=None, return_state: bool = False):
+    """state = (C (B,H,P,N) f32, n (B,H,1,N) f32) or None."""
+    B, S, d = x.shape
+    din, H, Ph = _dims(cfg)
+    h = rms_norm(x, pl["norm_gamma"])
+    q, k, v, gate, i_gate, log_f = _mlstm_gates(pl, h)
+    qh = q.reshape(B, S, H, Ph)
+    kh = k.reshape(B, S, H, Ph) / (Ph ** 0.5)
+    vh = v.reshape(B, S, H, Ph)
+    C0, n0 = state if state is not None else (None, None)
+    y, C_f = ssd_chunked(vh, i_gate, None, kh, qh, None, C0, log_decay=log_f)
+    ones = jnp.ones((B, S, H, 1), vh.dtype)
+    nrm, n_f = ssd_chunked(ones, i_gate, None, kh, qh, None, n0,
+                           log_decay=log_f)
+    y = y / (jnp.abs(nrm) + 1.0)
+    y = y.reshape(B, S, din)
+    y = rms_norm(y, pl["out_norm"])
+    y = y * jax.nn.silu(gate.astype(jnp.float32)).astype(y.dtype)
+    out = x + jnp.einsum("bse,ed->bsd", y, pl["w_down"])
+    if return_state:
+        return out, (C_f, n_f)
+    return out
+
+
+def mlstm_block_decode(pl, x, state, cfg):
+    """Single token via the same ssd path with S=1 (CHUNK=min(64,1))."""
+    out, new_state = mlstm_block(pl, x, cfg, state=state, return_state=True)
+    return out, new_state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_cell_step(r_gates, wx_t, hc):
+    """One step.  wx_t: (B, 4, H, Ph) input contribution; hc = (h, c, n, m)
+    each (B, H, Ph) f32."""
+    h, c, n, m = hc
+    rec = jnp.einsum("bhp,hpq->bhq", h, r_gates).reshape(
+        h.shape[0], h.shape[1], 4, -1)  # (B,H,4,Ph)
+    pre = wx_t.astype(jnp.float32) + jnp.moveaxis(rec, 2, 1)  # (B,4,H,Ph)
+    z_pre, i_pre, f_pre, o_pre = pre[:, 0], pre[:, 1], pre[:, 2], pre[:, 3]
+    z = jnp.tanh(z_pre)
+    o = jax.nn.sigmoid(o_pre)
+    # stabilized exponential gating
+    m_new = jnp.maximum(jax.nn.log_sigmoid(f_pre) + m, i_pre)
+    i = jnp.exp(i_pre - m_new)
+    f = jnp.exp(jax.nn.log_sigmoid(f_pre) + m - m_new)
+    c_new = f * c + i * z
+    n_new = f * n + i
+    h_new = o * c_new / jnp.maximum(jnp.abs(n_new), 1.0)
+    return (h_new, c_new, n_new, m_new)
+
+
+def slstm_block(pl: Pytree, x: jax.Array, cfg: ArchConfig,
+                state=None, return_state: bool = False):
+    B, S, d = x.shape
+    H = cfg.num_heads
+    Ph = d // H
+    hin = rms_norm(x, pl["norm_gamma"])
+    wx = (jnp.einsum("bsd,de->bse", hin, pl["w_gates"])
+          + pl["b_gates"]).reshape(B, S, 4, H, Ph)
+    if state is None:
+        zeros = jnp.zeros((B, H, Ph), jnp.float32)
+        state = (zeros, zeros, zeros, zeros - 10.0)
+
+    def body(hc, wx_t):
+        new = slstm_cell_step(pl["r_gates"].astype(jnp.float32), wx_t, hc)
+        return new, new[0]
+
+    final, hs = jax.lax.scan(body, state, jnp.moveaxis(wx, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1).reshape(B, S, d).astype(x.dtype)
+    out = x + jnp.einsum("bsd,de->bse", y, pl["w_down"])
+    if return_state:
+        return out, final
+    return out
+
+
+def slstm_block_decode(pl, x, state, cfg):
+    out, new_state = slstm_block(pl, x, cfg, state=state, return_state=True)
+    return out, new_state
+
+
+def slstm_flops_correction(cfg: ArchConfig, batch: int, seq: int) -> float:
+    """Analytic FLOPs hidden inside the sLSTM time-scan (per device-agnostic
+    global count): recurrent einsum (B,H,Ph)x(H,Ph,4Ph) per step."""
+    H = cfg.num_heads
+    Ph = cfg.d_model // H
+    n_s = sum(1 for i in range(cfg.num_layers) if _is_slstm(cfg, i))
+    per_step = 2 * batch * H * Ph * 4 * Ph
+    return float(n_s * seq * per_step)
+
+
+# ---------------------------------------------------------------------------
+# Full model
+# ---------------------------------------------------------------------------
+
+def _block_index(cfg, i):
+    """(kind, index-within-kind) for block i."""
+    kind = "slstm" if _is_slstm(cfg, i) else "mlstm"
+    idx = sum(1 for j in range(i) if _is_slstm(cfg, j) == (kind == "slstm"))
+    return kind, idx
+
+
+def forward_train(params: Pytree, batch: dict, cfg: ArchConfig) -> jax.Array:
+    x = tfm.embed_tokens(params, batch, cfg)
+    for i in range(cfg.num_layers):
+        kind, idx = _block_index(cfg, i)
+        pl = tfm.layer_slice(params[kind], idx)
+        if kind == "mlstm":
+            x = jax.checkpoint(lambda p, x: mlstm_block(p, x, cfg))(pl, x)
+        else:
+            x = jax.checkpoint(lambda p, x: slstm_block(p, x, cfg))(pl, x)
+    x = rms_norm(x, params["final_norm_gamma"])
+    return tfm.unembed(params, x, cfg)
+
+
+def loss_fn(params, batch, cfg):
+    from .common import cross_entropy
+    return cross_entropy(forward_train(params, batch, cfg), batch["labels"],
+                         cfg.vocab_size)
+
+
+def forward_prefill(params: Pytree, batch: dict, cfg: ArchConfig) -> dict:
+    x = tfm.embed_tokens(params, batch, cfg)
+    m_states, s_states = [], []
+    for i in range(cfg.num_layers):
+        kind, idx = _block_index(cfg, i)
+        pl = tfm.layer_slice(params[kind], idx)
+        if kind == "mlstm":
+            x, st = mlstm_block(pl, x, cfg, return_state=True)
+            m_states.append(st)
+        else:
+            x, st = slstm_block(pl, x, cfg, return_state=True)
+            s_states.append(st)
+    x = rms_norm(x, params["final_norm_gamma"])
+    logits = tfm.unembed(params, x[:, -1:], cfg)
+    cache = {
+        "mlstm_C": jnp.stack([s[0] for s in m_states]),
+        "mlstm_n": jnp.stack([s[1] for s in m_states]),
+        "slstm": jnp.stack([jnp.stack(s) for s in s_states]) if s_states
+        else jnp.zeros((0,)),
+    }
+    return {"logits": logits[:, 0], "cache": cache,
+            "pos": jnp.asarray(x.shape[1], jnp.int32)}
+
+
+def forward_decode(params: Pytree, token: jax.Array, cache: dict,
+                   pos: jax.Array, cfg: ArchConfig) -> dict:
+    x = params["embed"][token][:, None, :]
+    new_m_C, new_m_n, new_s = [], [], []
+    for i in range(cfg.num_layers):
+        kind, idx = _block_index(cfg, i)
+        pl = tfm.layer_slice(params[kind], idx)
+        if kind == "mlstm":
+            st = (cache["mlstm_C"][idx], cache["mlstm_n"][idx])
+            x, (C_n, n_n) = mlstm_block_decode(pl, x, st, cfg)
+            new_m_C.append(C_n)
+            new_m_n.append(n_n)
+        else:
+            st = tuple(cache["slstm"][idx])
+            x, st_n = slstm_block_decode(pl, x, st, cfg)
+            new_s.append(jnp.stack(st_n))
+    x = rms_norm(x, params["final_norm_gamma"])
+    logits = tfm.unembed(params, x, cfg)
+    new_cache = {
+        "mlstm_C": jnp.stack(new_m_C),
+        "mlstm_n": jnp.stack(new_m_n),
+        "slstm": jnp.stack(new_s) if new_s else cache["slstm"],
+    }
+    return {"logits": logits[:, 0], "cache": new_cache, "pos": pos + 1}
+
+
+def cache_spec(cfg: ArchConfig, batch: int, seq_len: int) -> dict:
+    din, H, Ph = _dims(cfg)
+    Ph_s = cfg.d_model // H
+    n_m = sum(1 for i in range(cfg.num_layers) if not _is_slstm(cfg, i))
+    n_s = cfg.num_layers - n_m
+    return {
+        "mlstm_C": ((n_m, batch, H, Ph, Ph), ("layers", "batch", "heads",
+                                              None, None), "float32"),
+        "mlstm_n": ((n_m, batch, H, 1, Ph), ("layers", "batch", "heads",
+                                             None, None), "float32"),
+        "slstm": ((n_s, 4, batch, H, Ph_s), ("layers", None, "batch",
+                                             "heads", None), "float32"),
+    }

@@ -1,0 +1,5 @@
+from .sgd import sgd, momentum
+from .adam import adam
+from .base import Optimizer, OptState, apply_updates
+
+__all__ = ["sgd", "momentum", "adam", "Optimizer", "OptState", "apply_updates"]

@@ -1,0 +1,53 @@
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .base import Optimizer
+
+__all__ = ["adam"]
+
+
+class AdamState(NamedTuple):
+    mu: object
+    nu: object
+    count: jax.Array
+
+
+def adam(lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+         weight_decay: float = 0.0) -> Optimizer:
+    """AdamW (beyond-paper option; the paper's algorithm is plain SGD)."""
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, dtype=jnp.float32)
+        return AdamState(
+            mu=jax.tree.map(zeros, params),
+            nu=jax.tree.map(zeros, params),
+            count=jnp.zeros((), jnp.int32),
+        )
+
+    def update(grads, state, params=None):
+        count = state.count + 1
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                          state.mu, grads)
+        nu = jax.tree.map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state.nu, grads)
+        c1 = 1 - b1 ** count.astype(jnp.float32)
+        c2 = 1 - b2 ** count.astype(jnp.float32)
+
+        def upd(m, v, p):
+            step = -lr * (m / c1) / (jnp.sqrt(v / c2) + eps)
+            if weight_decay and p is not None:
+                step = step - lr * weight_decay * p.astype(jnp.float32)
+            return step
+
+        if params is None:
+            updates = jax.tree.map(lambda m, v: upd(m, v, None), mu, nu)
+        else:
+            updates = jax.tree.map(upd, mu, nu, params)
+        return updates, AdamState(mu=mu, nu=nu, count=count)
+
+    return Optimizer(init, update)

@@ -1,0 +1,27 @@
+"""Minimal optax-style functional optimizers (optax is not available offline).
+
+An Optimizer is (init(params) -> state, update(grads, state, params) ->
+(updates, state)); ``apply_updates`` adds updates to params.  All transforms
+are agent-axis agnostic: they treat the leading (m, ...) agent dimension as
+just another batch dimension, which is exactly the decentralized semantics
+(each agent keeps its own optimizer state slice).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+OptState = Any
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Pytree], OptState]
+    update: Callable[[Pytree, OptState, Pytree], tuple[Pytree, OptState]]
+
+
+def apply_updates(params: Pytree, updates: Pytree) -> Pytree:
+    return jax.tree.map(lambda p, u: (p + u.astype(p.dtype)), params, updates)

@@ -1,0 +1,35 @@
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .base import Optimizer
+
+__all__ = ["sgd", "momentum"]
+
+
+def sgd(lr: float) -> Optimizer:
+    """Plain SGD — the paper's algorithm uses no optimizer state at all."""
+
+    def init(params):
+        return ()
+
+    def update(grads, state, params=None):
+        return jax.tree.map(lambda g: -lr * g, grads), state
+
+    return Optimizer(init, update)
+
+
+def momentum(lr: float, beta: float = 0.9, nesterov: bool = False) -> Optimizer:
+    def init(params):
+        return jax.tree.map(jnp.zeros_like, params)
+
+    def update(grads, state, params=None):
+        new_m = jax.tree.map(lambda m, g: beta * m + g, state, grads)
+        if nesterov:
+            upd = jax.tree.map(lambda m, g: -lr * (beta * m + g), new_m, grads)
+        else:
+            upd = jax.tree.map(lambda m: -lr * m, new_m)
+        return upd, new_m
+
+    return Optimizer(init, update)

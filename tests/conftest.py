@@ -1,0 +1,6 @@
+import os
+import sys
+
+# Smoke tests and benches must see exactly ONE device — the 512-device flag
+# is set only inside launch/dryrun.py (and subprocess-based dist tests).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

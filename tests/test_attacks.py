@@ -1,0 +1,111 @@
+"""DLG gradient-inversion attack (Sec. VII privacy evaluation, Fig. 4/5):
+under conventional DSGD the adversary reconstructs training data from the
+observable gradient; under PDSGD the observation Lambda∘g defeats it."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.attacks import dlg_attack
+from repro.core.privacy import obfuscated_gradient
+from repro.data import synthetic_digits
+
+CLASSES = 4
+SIZE = 6
+
+
+def _tiny_model():
+    def apply(params, x):
+        h = jnp.tanh(x.reshape(x.shape[0], -1) @ params["w1"] + params["b1"])
+        return h @ params["w2"] + params["b2"]
+
+    def loss(params, x, soft_label):
+        logits = apply(params, x)
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.mean(jnp.sum(soft_label * logp, -1))
+
+    rng = np.random.default_rng(0)
+    params = {
+        "w1": jnp.asarray(rng.normal(size=(SIZE * SIZE, 24)).astype(np.float32) * 0.3),
+        "b1": jnp.zeros((24,)),
+        "w2": jnp.asarray(rng.normal(size=(24, CLASSES)).astype(np.float32) * 0.3),
+        "b2": jnp.zeros((CLASSES,)),
+    }
+    return params, loss
+
+
+@pytest.fixture(scope="module")
+def attack_setup():
+    params, loss = _tiny_model()
+    x, y = synthetic_digits(1, seed=3, size=SIZE, classes=CLASSES)
+    x = jnp.asarray(x)
+    soft = jax.nn.one_hot(jnp.asarray(y), CLASSES)
+    true_grad = jax.grad(loss)(params, x, soft)
+    return params, loss, x, soft, true_grad
+
+
+def test_dlg_recovers_data_from_exact_gradient(attack_setup):
+    params, loss, x, soft, true_grad = attack_setup
+    res = dlg_attack(loss, params, true_grad, x.shape, CLASSES,
+                     key=jax.random.key(0), steps=600, lr=0.1, true_x=x)
+    mse = float(jnp.mean((res.recon_x - x) ** 2))
+    assert mse < 0.02, mse  # pixel-accurate-ish reconstruction
+    # label recovered too
+    assert int(jnp.argmax(res.recon_label_logits)) == int(jnp.argmax(soft))
+
+
+def test_dlg_degrades_against_pdsgd_obfuscation(attack_setup):
+    """The adversary sees Lambda ∘ g (random per-element stepsizes, unknown
+    to it).  At this toy scale (6x6 image, 4 classes) DLG is not fully
+    thwarted the way it is on the paper's 1.7M-param CNN, but the
+    reconstruction error must degrade by a large factor — the trend the
+    paper's Fig. 5 demonstrates (DESIGN.md §6 scale caveat)."""
+    params, loss, x, soft, true_grad = attack_setup
+    res_exact = dlg_attack(loss, params, true_grad, x.shape, CLASSES,
+                           key=jax.random.key(0), steps=600, lr=0.1, true_x=x)
+    mse_exact = float(jnp.mean((res_exact.recon_x - x) ** 2))
+    obs = obfuscated_gradient(jax.random.key(9), true_grad, jnp.float32(0.05))
+    res_obf = dlg_attack(loss, params, obs, x.shape, CLASSES,
+                         key=jax.random.key(0), steps=600, lr=0.1, true_x=x)
+    mse_obf = float(jnp.mean((res_obf.recon_x - x) ** 2))
+    assert mse_obf > 2.5 * mse_exact, (mse_exact, mse_obf)
+
+
+def test_eavesdropper_aggregate_matches_wire_messages():
+    """Sec. III: sum_{i != j} v_ij == (1-w_jj) x_j - (1-b_jj) Lambda_j g_j,
+    built from the SAME key derivations as pdsgd_update — the observation
+    model attacks are evaluated against is exactly what a wire-tapper sums."""
+    from repro.core import make_topology
+    from repro.core.attacks import eavesdropper_observation
+    from repro.core.privacy import agent_key, obfuscated_gradient, sample_B
+
+    m, j = 5, 2
+    top = make_topology("paper_fig1", m)
+    W = jnp.asarray(top.weights, jnp.float32)
+    support = jnp.asarray(top.adjacency, jnp.float32)
+    rng = np.random.default_rng(0)
+    params = {"w": jnp.asarray(rng.normal(size=(m, 4)).astype(np.float32))}
+    grads = {"w": jnp.asarray(rng.normal(size=(m, 4)).astype(np.float32))}
+    key, step, lam_bar = jax.random.key(7), jnp.int32(3), jnp.float32(0.1)
+
+    # the real per-message quantities, exactly as pdsgd_update derives them
+    k_j = agent_key(jax.random.fold_in(key, 1), step, j)
+    u_j = obfuscated_gradient(k_j, {"w": grads["w"][j]}, lam_bar)["w"]
+    B = sample_B(agent_key(jax.random.fold_in(key, 2), step, 0), support)
+    v_sum = sum(
+        float(W[i, j]) * params["w"][j] - B[i, j] * u_j
+        for i in range(m) if i != j and float(support[i, j]) > 0)
+
+    obs = eavesdropper_observation(
+        key, step, j, {"w": params["w"][j]}, {"w": grads["w"][j]},
+        W, support, lam_bar)["w"]
+    np.testing.assert_allclose(np.asarray(obs), np.asarray(v_sum),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_dlg_match_loss_decreases(attack_setup):
+    params, loss, x, soft, true_grad = attack_setup
+    res = dlg_attack(loss, params, true_grad, x.shape, CLASSES,
+                     key=jax.random.key(1), steps=200, lr=0.1)
+    hist = np.asarray(res.match_history)
+    assert hist[-1] < hist[0] * 0.1

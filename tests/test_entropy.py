@@ -1,0 +1,51 @@
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import entropy as E
+
+
+def test_paper_remark5_numbers():
+    """kappa=5: theta = 1.0322 and MSE bound 0.4614 — the paper's exact
+    Remark 5 values, which our closed form log(kappa) - gamma reproduces."""
+    th = E.theta_closed(0.0, 5.0)
+    assert abs(th - 1.0322) < 1e-4
+    assert abs(E.mse_lower_bound(th) - 0.4614) < 1e-4
+
+
+@settings(max_examples=20, deadline=None)
+@given(lam=st.floats(1e-3, 10.0), kappa=st.floats(0.1, 50.0))
+def test_numeric_integral_matches_closed_form(lam, kappa):
+    """The paper's Eq. (48)-(49) numeric bound equals log(kappa)-gamma for
+    every (lam_bar, kappa) — i.e. the bound is tight and lam_bar-free."""
+    th_num = E.theta_numeric(lam, kappa)
+    th_cl = E.theta_closed(lam, kappa)
+    assert abs(th_num - th_cl) < 5e-4
+
+
+def test_product_entropy_closed_vs_numeric():
+    for lam, kappa in [(0.5, 5.0), (0.01, 2.0), (2.0, 20.0)]:
+        h_num = E.product_entropy_numeric(lam, kappa)
+        h_cl = E.product_entropy_closed(lam, kappa)
+        assert abs(h_num - h_cl) < 5e-4
+
+
+def test_monte_carlo_estimator_respects_bound():
+    """Empirical check of Eq. (2): the best constant estimator's MSE of g
+    given y=lam*g is above the entropy bound."""
+    rng = np.random.default_rng(0)
+    kappa, lam_bar = 5.0, 0.5
+    n = 400_000
+    g = rng.uniform(-kappa, kappa, n)
+    lam = rng.uniform(0, 2 * lam_bar, n)
+    y = lam * g
+    # adversary estimator: conditional mean via binned regression on y
+    bins = np.quantile(y, np.linspace(0, 1, 201))
+    idx = np.clip(np.searchsorted(bins, y) - 1, 0, 199)
+    est = np.zeros(200)
+    for b in range(200):
+        sel = idx == b
+        est[b] = g[sel].mean() if sel.any() else 0.0
+    mse = np.mean((g - est[idx]) ** 2)
+    bound = E.mse_lower_bound(E.theta_closed(lam_bar, kappa))
+    assert mse >= bound, (mse, bound)

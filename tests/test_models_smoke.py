@@ -1,0 +1,102 @@
+"""Per-architecture smoke tests (deliverable f): REDUCED same-family
+variants (2 layers, d_model<=256, <=4 experts) run one forward/train step
+on CPU asserting output shapes + finite values, plus a decode step."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_NAMES, get_config
+from repro.models import build_model
+from repro.models.common import pad_vocab
+
+B, S = 2, 64
+
+
+def _batch(cfg, dtype):
+    batch = {
+        "tokens": jnp.full((B, S), 5, jnp.int32),
+        "labels": jnp.ones((B, S), jnp.int32),
+    }
+    if cfg.family == "audio":
+        batch["frames"] = jnp.full((B, S, cfg.d_model), 0.1, dtype)
+    if cfg.num_prefix_embeds:
+        batch["prefix_embeds"] = jnp.full(
+            (B, cfg.num_prefix_embeds, cfg.d_model), 0.1, dtype)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_reduced_train_step(arch):
+    cfg = get_config(arch + "-smoke")
+    assert cfg.num_layers == 2 and cfg.d_model <= 512
+    if cfg.num_experts:
+        assert cfg.num_experts <= 4
+    bundle = build_model(cfg)
+    params = bundle.init(jax.random.key(0))
+    batch = _batch(cfg, bundle.dtype)
+    loss, grads = jax.jit(jax.value_and_grad(bundle.loss_fn))(params, batch)
+    assert np.isfinite(float(loss))
+    for leaf in jax.tree.leaves(grads):
+        assert np.all(np.isfinite(np.asarray(leaf, np.float32)))
+    # one SGD step reduces nothing catastrophically (still finite)
+    params2 = jax.tree.map(lambda p, g: p - 0.01 * g.astype(p.dtype),
+                           params, grads)
+    loss2 = jax.jit(bundle.loss_fn)(params2, batch)
+    assert np.isfinite(float(loss2))
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_reduced_prefill_decode_shapes(arch):
+    cfg = get_config(arch + "-smoke")
+    bundle = build_model(cfg)
+    params = bundle.init(jax.random.key(1))
+    batch = _batch(cfg, bundle.dtype)
+    out = jax.jit(bundle.prefill_fn)(params, batch)
+    V = pad_vocab(cfg.vocab_size)
+    assert out["logits"].shape == (B, V)
+    assert np.all(np.isfinite(np.asarray(out["logits"], np.float32)))
+    tok = jnp.argmax(out["logits"], -1).astype(jnp.int32)
+    dec = jax.jit(bundle.decode_fn)(params, tok, out["cache"], out["pos"])
+    assert dec["logits"].shape == (B, V)
+    assert np.all(np.isfinite(np.asarray(dec["logits"], np.float32)))
+    assert int(dec["pos"]) == int(out["pos"]) + 1
+    # cache structure preserved
+    assert jax.tree.structure(dec["cache"]) == jax.tree.structure(out["cache"])
+
+
+@pytest.mark.parametrize("arch", ["granite-8b", "chatglm3-6b", "xlstm-125m",
+                                  "zamba2-7b", "olmoe-1b-7b",
+                                  "seamless-m4t-medium"])
+def test_decode_continues_prefill(arch):
+    """Decode of token S must equal prefill of S+1 tokens at the last
+    position (exactness of the KV-cache/state path)."""
+    import dataclasses
+    cfg = get_config(arch + "-smoke")
+    if cfg.num_experts:
+        # capacity drops are prefill-only (decode uses the dense mixture):
+        # make capacity effectively infinite so the paths agree exactly
+        cfg = dataclasses.replace(cfg, capacity_factor=16.0)
+    bundle = build_model(cfg)
+    params = bundle.init(jax.random.key(2))
+    toks = jax.random.randint(jax.random.key(3), (B, S + 1), 0,
+                              cfg.vocab_size)
+    b_small = {"tokens": toks[:, :S]}
+    b_full = {"tokens": toks}
+    if cfg.family == "audio":
+        frames = jax.random.normal(jax.random.key(4), (B, S, cfg.d_model),
+                                   bundle.dtype) * 0.1
+        frames_full = jnp.concatenate(
+            [frames, jnp.zeros((B, 1, cfg.d_model), bundle.dtype)], axis=1)
+        b_small["frames"] = frames
+        b_full["frames"] = frames_full
+    pre = jax.jit(bundle.prefill_fn)(params, b_small)
+    dec = jax.jit(bundle.decode_fn)(params, toks[:, S], pre["cache"],
+                                    pre["pos"])
+    full = jax.jit(bundle.prefill_fn)(params, b_full)
+    if cfg.family == "audio":
+        # encoder length differs (S vs S+1) => logits differ; skip equality
+        pytest.skip("enc-dec: encoder length changes with target length")
+    np.testing.assert_allclose(
+        np.asarray(dec["logits"], np.float32),
+        np.asarray(full["logits"], np.float32), atol=2e-4, rtol=2e-3)

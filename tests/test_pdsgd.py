@@ -1,0 +1,158 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (consensus_error, dsgd_update, gossip_mix, init_state,
+                        make_decentralized_step, pdsgd_update,
+                        replicate_params, make_topology)
+from repro.core import schedules
+
+
+def _rand_tree(key, m, shapes=((4, 3), (5,))):
+    ks = jax.random.split(key, len(shapes))
+    return {f"p{i}": jax.random.normal(k, (m,) + s)
+            for i, (k, s) in enumerate(zip(ks, shapes))}
+
+
+@settings(max_examples=15, deadline=None)
+@given(m=st.integers(2, 12), seed=st.integers(0, 1000))
+def test_mean_dynamics_invariant(m, seed):
+    """Eq. (11): x_bar^{k+1} = x_bar^k - (1/m) sum_i Lambda_i g_i.
+
+    W doubly-stochastic + B column-stochastic make the gossip exactly
+    mean-preserving; we verify the *realized* update satisfies it by
+    reconstructing the descent term from the same keys.
+    """
+    top = make_topology("ring", m)
+    W = jnp.asarray(top.weights, jnp.float32)
+    support = jnp.asarray(top.adjacency, jnp.float32)
+    key = jax.random.key(seed)
+    params = _rand_tree(jax.random.fold_in(key, 0), m)
+    grads = _rand_tree(jax.random.fold_in(key, 1), m)
+    step = jnp.asarray(3)
+    lam_bar = jnp.asarray(0.07)
+
+    new = pdsgd_update(params, grads, key=key, step=step, W=W,
+                       support=support, lam_bar=lam_bar)
+
+    # reconstruct u = Lambda ∘ g with the same derivation
+    from repro.core.pdsgd import _per_agent_obfuscated
+    u = _per_agent_obfuscated(jax.random.fold_in(key, 1), step, grads, lam_bar)
+    for name in params:
+        mean_new = np.asarray(new[name].mean(0))
+        mean_expect = np.asarray(params[name].mean(0) - u[name].mean(0))
+        np.testing.assert_allclose(mean_new, mean_expect, atol=1e-5)
+
+
+def test_gossip_mix_matches_dense_matmul():
+    m = 6
+    top = make_topology("paper_fig1", 5)
+    W = jnp.asarray(np.random.default_rng(0).dirichlet(np.ones(m), m).T,
+                    jnp.float32)
+    x = _rand_tree(jax.random.key(1), m)
+    y = gossip_mix(W, x)
+    for name in x:
+        ref = np.einsum("ij,j...->i...", np.asarray(W), np.asarray(x[name]))
+        np.testing.assert_allclose(np.asarray(y[name]), ref, atol=1e-5)
+
+
+def test_consensus_contraction():
+    """One W-mix strictly contracts disagreement (rho < 1)."""
+    top = make_topology("ring", 8)
+    W = jnp.asarray(top.weights, jnp.float32)
+    x = _rand_tree(jax.random.key(2), 8)
+    before = float(consensus_error(x))
+    after = float(consensus_error(gossip_mix(W, x)))
+    assert after < before
+
+
+def test_dsgt_tracks_average_gradient_and_converges():
+    """Gradient-tracking baseline ([49],[50]): the tracker's mean equals the
+    mean gradient at every step (tracking invariant) and x converges to the
+    quadratic optimum — validates `dsgt_update` as the 2-variable
+    communication baseline the paper positions against."""
+    from repro.core.pdsgd import dsgt_update
+
+    m, d = 4, 3
+    top = make_topology("ring", m)
+    W = jnp.asarray(top.weights, jnp.float32)
+    rng = np.random.default_rng(0)
+    targets = jnp.asarray(rng.normal(size=(m, d)).astype(np.float32))
+    grads_of = lambda x: x - targets  # f_i = ||x_i - t_i||^2 / 2
+
+    # formula check against a numpy reference (single step, exact)
+    x0 = jnp.asarray(rng.normal(size=(m, d)).astype(np.float32))
+    y0 = jnp.asarray(rng.normal(size=(m, d)).astype(np.float32))
+    g1 = jnp.asarray(rng.normal(size=(m, d)).astype(np.float32))
+    x1, y1 = dsgt_update(x0, y0, g1, grads_of(x0), W=W, lam=jnp.float32(0.2))
+    Wn = np.asarray(W)
+    np.testing.assert_allclose(
+        np.asarray(x1), Wn @ np.asarray(x0) - 0.2 * np.asarray(y0),
+        rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(y1),
+        Wn @ np.asarray(y0) + np.asarray(g1) - np.asarray(grads_of(x0)),
+        rtol=1e-5, atol=1e-5)
+
+    # convergence + mean-tracking invariant (early steps; the invariant is
+    # exact in exact arithmetic, and f32 rounding error — itself
+    # mean-preserved by the dynamics — random-walks over long horizons)
+    # lam must respect DSGT's stricter O((1-rho)^2/L) bound: 0.3 diverges on
+    # the 4-ring (rho ~ 0.8), 0.1 is stable
+    x = jnp.zeros((m, d))
+    g = grads_of(x)
+    y = g  # y^0 = g^0
+    for k in range(500):
+        x_next, _ = dsgt_update(x, y, g, g, W=W, lam=jnp.float32(0.1))
+        g_next = grads_of(x_next)
+        _, y = dsgt_update(x, y, g_next, g, W=W, lam=jnp.float32(0.1))
+        x, g = x_next, g_next
+        if k < 50:
+            np.testing.assert_allclose(np.asarray(y.mean(0)),
+                                       np.asarray(g.mean(0)), atol=1e-4)
+    opt = np.asarray(targets).mean(0)
+    assert np.linalg.norm(np.asarray(x) - opt[None]) < 1e-2
+
+
+def test_dsgd_update_formula():
+    m = 4
+    top = make_topology("ring", m)
+    W = jnp.asarray(top.weights, jnp.float32)
+    params = _rand_tree(jax.random.key(3), m)
+    grads = _rand_tree(jax.random.key(4), m)
+    new = dsgd_update(params, grads, W=W, lam=0.1)
+    for name in params:
+        ref = (np.einsum("ij,j...->i...", np.asarray(W),
+                         np.asarray(params[name]))
+               - 0.1 * np.asarray(grads[name]))
+        np.testing.assert_allclose(np.asarray(new[name]), ref, atol=1e-5)
+
+
+@pytest.mark.parametrize("algorithm", ["pdsgd", "dsgd", "dp_dsgd"])
+def test_decentralized_quadratic_converges(algorithm):
+    """All three algorithms drive a decentralized quadratic to consensus +
+    optimum; PDSGD must NOT lose accuracy vs DSGD (the paper's core claim)."""
+    m, d = 5, 3
+    top = make_topology("paper_fig1", m)
+    rng = np.random.default_rng(0)
+    targets = jnp.asarray(rng.normal(size=(m, d)).astype(np.float32))
+    theta_star = np.asarray(targets).mean(0)
+
+    def loss_fn(p, batch):
+        tgt, noise = batch
+        return jnp.sum((p - tgt + 0.01 * noise) ** 2)
+
+    sched = schedules.harmonic(base=0.3)
+    step = make_decentralized_step(loss_fn, top, sched, algorithm=algorithm,
+                                   sigma_dp=0.001)
+    state = init_state(jnp.zeros((d,)), m)
+    key = jax.random.key(0)
+    for k in range(400):
+        key, sk, nk = jax.random.split(key, 3)
+        noise = jax.random.normal(nk, (m, d))
+        state, aux = step(state, (targets, noise), sk)
+    xbar = np.asarray(jax.tree.leaves(state.params)[0].mean(0))
+    assert float(aux["consensus_error"]) < 1e-3
+    assert np.linalg.norm(xbar - theta_star) < 0.15

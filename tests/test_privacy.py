@@ -1,0 +1,50 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import privacy, topology
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=st.integers(2, 16), seed=st.integers(0, 1000))
+def test_sample_B_column_stochastic_on_support(m, seed):
+    top = topology.make_topology("ring", m)
+    support = jnp.asarray(top.adjacency, jnp.float32)
+    B = privacy.sample_B(jax.random.key(seed), support)
+    np.testing.assert_allclose(np.asarray(B.sum(0)), 1.0, atol=1e-5)
+    # zero outside support
+    assert np.all(np.asarray(B)[~top.adjacency] == 0)
+
+
+def test_lambda_distribution_matches_paper():
+    """lambda ~ U[0, 2 lam_bar]: mean lam_bar, std lam_bar/sqrt(3) (Sec. VI)."""
+    lam_bar = 0.3
+    g = jnp.ones((200_000,))
+    lam = privacy.sample_lambda_tree(jax.random.key(0), g, lam_bar)
+    assert abs(float(lam.mean()) - lam_bar) < 2e-3
+    assert abs(float(lam.std()) - lam_bar / np.sqrt(3)) < 2e-3
+    assert float(lam.min()) >= 0 and float(lam.max()) <= 2 * lam_bar
+
+
+def test_obfuscated_gradient_unbiased():
+    """E[Lambda g] = lam_bar * g — the property behind accuracy preservation."""
+    g = {"w": jnp.asarray(np.random.default_rng(0).normal(size=(64, 64))
+                          .astype(np.float32))}
+    lam_bar = 0.05
+    acc = jnp.zeros_like(g["w"])
+    n = 300
+    for i in range(n):
+        u = privacy.obfuscated_gradient(jax.random.key(i), g, lam_bar)
+        acc = acc + u["w"]
+    est = acc / n / lam_bar
+    np.testing.assert_allclose(np.asarray(est), np.asarray(g["w"]),
+                               atol=0.05, rtol=0.15)
+
+
+def test_agent_keys_distinct():
+    k = jax.random.key(7)
+    keys = {tuple(np.asarray(jax.random.key_data(
+        privacy.agent_key(k, s, a)))) for s in range(5) for a in range(5)}
+    assert len(keys) == 25

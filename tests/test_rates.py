@@ -1,0 +1,101 @@
+"""Empirical validation of the paper's rate claims:
+
+* Remark 2 — consensus disagreement Σ_i ||x_i − x̄||² decays no slower than
+  O(1/k) under the (9)+(10) stepsizes.
+* Theorem 3 / Remark 3 — for non-convex bounded-gradient objectives, the
+  λ̄-weighted average of E||∇F(x̄^k)||² converges to zero.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import init_state, make_decentralized_step, make_topology
+from repro.core.schedules import harmonic
+
+
+def _run_pdsgd(loss, m, d, iters, base=0.3, seed=0, x0=None):
+    top = make_topology("ring", m)
+    step = make_decentralized_step(loss, top, harmonic(base),
+                                   algorithm="pdsgd")
+    init = jnp.zeros((d,)) if x0 is None else x0
+    state = init_state(init, m)
+    key = jax.random.key(seed)
+    cons, grads = [], []
+    for k in range(iters):
+        key, sk = jax.random.split(key)
+        state, aux = step(state, None, sk)
+        cons.append(float(aux["consensus_error"]))
+        xbar = jnp.asarray(jax.tree.leaves(state.params)[0]).mean(0)
+        grads.append(xbar)
+    return np.asarray(cons), grads
+
+
+def test_remark2_consensus_decays_at_least_1_over_k():
+    """log-log slope of the consensus error over k in [100, 3000] must be
+    ≤ −0.8 (Remark 2 guarantees ≥ O(1/k); realized decay is faster since
+    the perturbation per step is O(λ_k))."""
+    m, d = 6, 3
+    rng = np.random.default_rng(0)
+    targets = jnp.asarray(rng.normal(size=(m, d)).astype(np.float32))
+
+    def loss(p, batch):
+        i = 0  # vmapped over agents: p is one agent's copy
+        return jnp.sum((p - targets.mean(0)) ** 2)
+
+    cons, _ = _run_pdsgd(loss, m, d, iters=3000)
+    ks = np.arange(1, len(cons) + 1)
+    sel = (ks >= 100)
+    # guard zeros (perfect consensus) before log
+    c = np.maximum(cons[sel], 1e-30)
+    slope = np.polyfit(np.log(ks[sel]), np.log(c), 1)[0]
+    assert slope <= -0.8, slope
+    assert cons[-1] < cons[99] * 1e-1
+
+
+def test_theorem3_weighted_gradient_norm_vanishes():
+    """Non-convex bounded-gradient objective: F(x) = -(1/m) Σ cos(x − t_i).
+    The λ̄-weighted running average of ||∇F(x̄^k)||² (Eq. 33's empirical
+    counterpart) must shrink and the iterate must approach a stationary
+    point of F."""
+    m, d = 5, 2
+    rng = np.random.default_rng(1)
+
+    def loss(p, batch):
+        # smooth, non-convex, bounded gradient (Thm 3's assumptions);
+        # stationary points at p ≡ 0 (mod 2π)
+        return -jnp.sum(jnp.cos(p))
+
+    top = make_topology("ring", m)
+    step = make_decentralized_step(loss, top, harmonic(0.4),
+                                   algorithm="pdsgd")
+    x0 = jnp.asarray(rng.normal(size=(d,)).astype(np.float32) + 1.2)
+    state = init_state(x0, m)
+    key = jax.random.key(2)
+
+    grad_F = jax.grad(lambda x: -jnp.sum(jnp.cos(x)))
+    num = 0.0
+    den = 0.0
+    window_early, window_late = [], []
+    iters = 4000
+    for k in range(iters):
+        key, sk = jax.random.split(key)
+        state, aux = step(state, None, sk)
+        xbar = jnp.asarray(jax.tree.leaves(state.params)[0]).mean(0)
+        g2 = float(jnp.sum(grad_F(xbar) ** 2))
+        lam = 0.4 / (k + 1.0)
+        num += lam * g2
+        den += lam
+        if 50 <= k < 300:
+            window_early.append(g2)
+        if k >= iters - 250:
+            window_late.append(g2)
+    weighted = num / den
+    # convergence under Σλ̄=∞, Σλ̄²<∞ is O(1/√k)-slow: assert a clear
+    # decreasing trend (≥5× drop) and near-stationarity at the horizon
+    assert np.mean(window_late) < 0.2 * np.mean(window_early), (
+        np.mean(window_early), np.mean(window_late))
+    assert np.mean(window_late) < 1e-2   # ||∇F(x̄)|| ≲ 0.1 at k=4000
+    # Eq. (33)'s finite-t weighted average is dominated by the early
+    # (heaviest-λ̄) iterates; it must at least sit below the initial g².
+    g2_0 = float(jnp.sum(grad_F(x0) ** 2))
+    assert weighted < 0.5 * g2_0, (weighted, g2_0)

@@ -1,0 +1,63 @@
+import numpy as np
+import pytest
+
+from repro.core import schedules as S
+
+
+@pytest.mark.parametrize("sched", [
+    S.harmonic(1.0), S.paper_experiment(1.0), S.polynomial(1.0, 0.75),
+    S.warmup_harmonic(0.5, hold=50),
+])
+def test_conditions_9_and_10(sched):
+    rep = S.check_conditions(sched, num_agents=4, horizon=100_000)
+    assert rep["nonsummable_ok"], rep  # sum lam = inf (tail still contributes)
+    assert rep["square_summable_ok"], rep
+    assert rep["heterogeneity"] < 1e3  # (10): summable across agents
+
+
+def test_deviating_schedule_keeps_conditions():
+    """Remark 1: finite private deviations preserve (9) and keep the
+    heterogeneity sum (10) finite (agents differ only at finitely many k)."""
+    sched = S.deviating(S.harmonic(1.0), num_agents=4, num_deviations=10,
+                        max_factor=3.0, seed=2)
+    rep = S.check_conditions(sched, num_agents=4, horizon=50_000)
+    assert rep["nonsummable_ok"], rep
+    assert rep["square_summable_ok"], rep
+    assert rep["heterogeneity"] < 50.0  # finite; zero iff no deviations
+    base = S.check_conditions(S.harmonic(1.0), 4, horizon=50_000)
+    assert base["heterogeneity"] == 0.0
+    assert rep["heterogeneity"] > 0.0  # deviations actually happen
+
+
+def test_deviating_convergence_on_quadratic():
+    """Decentralized quadratic still converges under deviating stepsizes."""
+    import jax, jax.numpy as jnp, numpy as np_
+    from repro.core import init_state, make_decentralized_step, make_topology
+
+    top = make_topology("ring", 4)
+    target = jnp.asarray([1.0, -2.0, 0.5])
+    loss = lambda p, b: jnp.sum((p - target) ** 2)
+    sched = S.deviating(S.harmonic(0.4), num_agents=4, num_deviations=10)
+    step = make_decentralized_step(loss, top, sched, algorithm="pdsgd")
+    state = init_state(jnp.zeros((3,)), 4)
+    key = jax.random.key(0)
+    for _ in range(400):
+        key, sk = jax.random.split(key)
+        state, _ = step(state, None, sk)
+    xbar = np_.asarray(jax.tree.leaves(state.params)[0]).mean(0)
+    assert np_.linalg.norm(xbar - np_.asarray(target)) < 0.1
+
+
+def test_polynomial_rejects_non_square_summable():
+    with pytest.raises(ValueError):
+        S.polynomial(1.0, power=0.5)
+    with pytest.raises(ValueError):
+        S.polynomial(1.0, power=1.5)
+
+
+def test_paper_experiment_mean():
+    """E[(1 - rho/k)/k] with rho~U[0,1] = (1 - 1/(2k))/k."""
+    sched = S.paper_experiment(1.0)
+    k = np.array([0.0, 1.0, 9.0])  # 0-based -> evaluated at k+1
+    np.testing.assert_allclose(
+        sched(k), (1 - 1 / (2 * (k + 1))) / (k + 1), rtol=1e-12)

@@ -1,0 +1,120 @@
+"""Sharding-rule resolution unit tests (no devices needed — specs only) and
+a subprocess-based multi-device gossip equivalence test."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.dist.sharding import TRAIN_RULES, SERVE_RULES, logical_spec
+
+
+class _FakeMesh:
+    """Duck-typed mesh: logical_spec only reads .shape (a dict)."""
+
+    def __init__(self, **axes):
+        self.shape = axes
+
+
+SINGLE = _FakeMesh(data=16, model=16)
+MULTI = _FakeMesh(pod=2, data=16, model=16)
+
+
+def P(*args):
+    from jax.sharding import PartitionSpec
+    return PartitionSpec(*args)
+
+
+@pytest.mark.parametrize("shape,logical,expect", [
+    # agent-stacked FFN weight: agents over (pod,data), mlp over model
+    ((32, 5120, 14336), ("agents", "embed", "mlp"), P(("pod", "data"), None, "model")),
+    # llava Q heads 56 %16 != 0 -> replicate (head_dim rule is empty now)
+    ((56, 128), ("heads", "head_dim"), P()),
+    # divisible heads shard
+    ((32, 128), ("heads", "head_dim"), P("model")),
+    # vocab always shards
+    ((131072, 5120), ("vocab", "embed"), P("model")),
+])
+def test_train_rules_multi(shape, logical, expect):
+    assert logical_spec(MULTI, shape, logical, TRAIN_RULES) == expect
+
+
+@pytest.mark.parametrize("shape,logical,expect", [
+    # decode_32k cache: batch over data, kv_seq grabs model
+    ((40, 128, 32768, 8, 128),
+     ("layers", "batch", "kv_seq", "kv_heads", "head_dim"),
+     P(None, "data", "model")),
+    # long_500k cache: batch=1 replicated, kv_seq over (data, model)
+    ((40, 1, 524288, 8, 128),
+     ("layers", "batch", "kv_seq", "kv_heads", "head_dim"),
+     P(None, None, ("data", "model"))),
+])
+def test_serve_rules_single(shape, logical, expect):
+    assert logical_spec(SINGLE, shape, logical, SERVE_RULES) == expect
+
+
+def test_serve_rules_multi_long():
+    spec = logical_spec(MULTI, (40, 1, 524288, 8, 128),
+                        ("layers", "batch", "kv_seq", "kv_heads", "head_dim"),
+                        SERVE_RULES)
+    assert spec == P(None, None, ("pod", "data", "model"))
+
+
+def test_rank_mismatch_raises():
+    with pytest.raises(ValueError):
+        logical_spec(SINGLE, (4, 4), ("embed",), TRAIN_RULES)
+
+
+_GOSSIP_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
+    import sys; sys.path.insert(0, {src!r})
+    import json
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.dist import collectives as C
+    mesh = jax.make_mesh((2, 4, 2), ("pod", "data", "model"))
+    m, n_pod, n_data = 8, 2, 4
+    rng = np.random.default_rng(0)
+    params = {{"w": jnp.asarray(rng.normal(size=(m, 6, 4)).astype(np.float32))}}
+    grads = {{"w": jnp.asarray(rng.normal(size=(m, 6, 4)).astype(np.float32))}}
+    b = C.sample_b_draws(jax.random.key(0), m, n_data, n_pod)
+    sh = NamedSharding(mesh, P(("pod", "data"), None, None))
+    ps = jax.tree.map(lambda x: jax.device_put(x, sh), params)
+    gs = jax.tree.map(lambda x: jax.device_put(x, sh), grads)
+    out = jax.jit(lambda p, g, b: C.torus_gossip_pdsgd(
+        mesh, p, g, b, agent_axes=("pod", "data")))(ps, gs, b)
+    wts = C.torus_weights(n_data, n_pod)
+    dirs = C._directions(n_data, n_pod)
+    W = np.zeros((m, m)); B = np.zeros((m, m))
+    bnp = np.asarray(b)
+    for j in range(m):
+        pj, dj = divmod(j, n_data)
+        W[j, j] = wts["w_self"]; B[j, j] = bnp[j, 0]
+        for di, (axis, size, shift) in enumerate(dirs):
+            if axis == "data":
+                i = pj * n_data + (dj + shift) % n_data
+            else:
+                i = ((pj + shift) % n_pod) * n_data + dj
+            W[i, j] += wts["w_edge"]; B[i, j] += bnp[j, 1 + di]
+    ref = (np.einsum("ij,jab->iab", W, np.asarray(params["w"]))
+           - np.einsum("ij,jab->iab", B, np.asarray(grads["w"])))
+    err = float(np.abs(np.asarray(out["w"]) - ref).max())
+    col = float(np.abs(B.sum(0) - 1).max())
+    print(json.dumps({{"err": err, "col": col}}))
+""")
+
+
+def test_torus_gossip_matches_dense_reference_multidevice():
+    """Runs in a subprocess with 16 fake devices (the main test process must
+    keep a single device)."""
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    script = _GOSSIP_SCRIPT.format(src=os.path.abspath(src))
+    out = subprocess.run([sys.executable, "-c", script], capture_output=True,
+                         text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert res["err"] < 1e-5
+    assert res["col"] < 1e-6

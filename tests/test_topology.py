@@ -1,0 +1,41 @@
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import topology as T
+
+
+@pytest.mark.parametrize("name,m,kw", [
+    ("ring", 5, {}), ("ring", 16, {}), ("ring", 2, {}),
+    ("complete", 7, {}), ("star", 9, {}),
+    ("paper_fig1", 5, {}), ("erdos", 12, {"p": 0.4}),
+    ("torus", 32, {"rows": 2}),
+])
+def test_topologies_valid(name, m, kw):
+    top = T.make_topology(name, m, **kw)
+    top.validate()
+    assert top.num_agents == m
+    assert 0 <= top.rho < 1
+
+
+@settings(max_examples=30, deadline=None)
+@given(m=st.integers(2, 24), seed=st.integers(0, 10_000))
+def test_metropolis_doubly_stochastic_on_random_graphs(m, seed):
+    adj = T.erdos_renyi(m, p=0.5, seed=seed)
+    w = T.metropolis_weights(adj)
+    assert np.allclose(w.sum(0), 1, atol=1e-12)
+    assert np.allclose(w.sum(1), 1, atol=1e-12)
+    assert np.all(np.diag(w) > 0)
+    assert T.spectral_gap(w) < 1  # connected => rho < 1
+
+
+def test_neighbor_sets_include_self():
+    top = T.make_topology("ring", 6)
+    for i in range(6):
+        assert i in top.neighbors(i)
+
+
+def test_disconnected_graph_rejected():
+    adj = np.eye(4, dtype=bool)
+    w = T.metropolis_weights(adj)
+    assert T.spectral_gap(w) >= 1.0
