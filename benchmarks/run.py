@@ -7,9 +7,16 @@ Prints ``name,us_per_call,derived`` CSV rows:
   * table1_dp        : DP-noise baseline accuracy/DLG-error trade-off
   * remark5_entropy  : Thm 5 privacy bound (numeric vs closed form)
   * kernel_*         : Pallas kernel (interpret) vs jnp-oracle timing
+  * bench_step_path  : PDSGD hot-loop paths (eager-host vs device-resident
+                       vs lax.scan) — also writes BENCH_pdsgd.json at the
+                       repo root so later PRs can regress against it
+
+``--only NAME`` runs a single benchmark (substring match).
 """
 from __future__ import annotations
 
+import argparse
+import json
 import sys
 import os
 import time
@@ -19,6 +26,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 
 ROWS = []
 
@@ -244,6 +253,104 @@ def remark7_lambda_ablation(steps=300):
         emit(f"remark7_lambda{lam:g}", dt, f"attacker_mse={mse:.5f}")
 
 
+def bench_step_path(iters=600, unroll_k=100):
+    """Fig. 2 estimation workload (d=2, m=5) through the three hot-loop
+    paths:
+
+      * eager   — the seed behavior: schedule evaluated on host each step
+                  (`int(state.step)` device->host sync) + python dispatch
+      * fused   — device-resident schedule, zero host syncs, python loop
+      * scanned — `make_scanned_steps`: unroll_k iterations per lax.scan
+                  dispatch
+
+    The paper's claim is privacy at zero overhead; that is only visible
+    when the loop is dispatch-bound-free, so this row set is the repo's
+    canonical perf trajectory (written to BENCH_pdsgd.json).
+    """
+    from repro.core import (init_state, make_decentralized_step,
+                            make_scanned_steps, make_topology)
+    from repro.core.schedules import paper_experiment
+    from repro.data import estimation_problem
+
+    m, d = 5, 2
+    top = make_topology("paper_fig1", m)
+    prob = estimation_problem(m, d=d, s=3, n_per_agent=100, seed=0)
+    Z, M = jnp.asarray(prob["Z"]), jnp.asarray(prob["M"])
+
+    def loss_fn(p, batch):
+        z, Mi = batch
+        return jnp.mean(jnp.sum((z - p @ Mi.T) ** 2, -1))
+
+    sched = paper_experiment(0.05)
+    rng = np.random.default_rng(0)
+    idx = jnp.asarray(rng.integers(0, 100, size=(iters, m, 8)))
+    batches = (Z[jnp.arange(m)[None, :, None], idx],
+               jnp.broadcast_to(M[None], (iters,) + M.shape))
+    keys = jax.random.split(jax.random.key(0), iters)
+    batch_at = lambda k: jax.tree.map(lambda x: x[k], batches)
+
+    def time_python_loop(step):
+        state = init_state(jnp.zeros((d,)), m)
+        state, _ = step(state, batch_at(0), keys[0])  # warmup/compile
+        state = init_state(jnp.zeros((d,)), m)
+        t0 = time.perf_counter()
+        for k in range(iters):
+            state, aux = step(state, batch_at(k), keys[k])
+        jax.block_until_ready(state.params)
+        return (time.perf_counter() - t0) / iters * 1e6, state
+
+    results = {}
+    # 1. seed path: host schedule eval forces a device->host sync per step
+    step_eager = make_decentralized_step(loss_fn, top, sched,
+                                         force_host_schedule=True,
+                                         donate=False)
+    us, st_e = time_python_loop(step_eager)
+    results["eager"] = us
+    # 2. device-resident step (zero host syncs), still one dispatch/step
+    step_fused = make_decentralized_step(loss_fn, top, sched, donate=False)
+    us, st_f = time_python_loop(step_fused)
+    results["fused"] = us
+    # 3. scanned: unroll_k steps per dispatch
+    assert iters % unroll_k == 0
+    scanned = make_scanned_steps(step_fused, unroll_k, donate=False)
+    chunk = lambda x, c: jax.tree.map(
+        lambda l: l[c * unroll_k:(c + 1) * unroll_k], x)
+    state = init_state(jnp.zeros((d,)), m)
+    state, _ = scanned(state, chunk(batches, 0), chunk(keys, 0))  # warmup
+    state = init_state(jnp.zeros((d,)), m)
+    t0 = time.perf_counter()
+    for c in range(iters // unroll_k):
+        state, aux = scanned(state, chunk(batches, c), chunk(keys, c))
+    jax.block_until_ready(state.params)
+    results["scanned"] = (time.perf_counter() - t0) / iters * 1e6
+
+    err = float(np.linalg.norm(
+        np.asarray(jax.tree.leaves(state.params)[0]).mean(0)
+        - prob["theta_opt"]))
+    payload = {
+        "workload": f"fig2_estimation d={d} m={m} iters={iters}",
+        "unroll_k": unroll_k,
+        "paths": {
+            name: {"us_per_step": round(us, 2),
+                   "steps_per_s": round(1e6 / us, 1)}
+            for name, us in results.items()
+        },
+        "speedup_fused_vs_eager": round(results["eager"] / results["fused"], 2),
+        "speedup_scanned_vs_eager": round(
+            results["eager"] / results["scanned"], 2),
+        "final_err_scanned": err,
+        "backend": jax.default_backend(),
+    }
+    with open(os.path.join(REPO_ROOT, "BENCH_pdsgd.json"), "w") as f:
+        json.dump(payload, f, indent=2)
+    for name, us in results.items():
+        emit(f"bench_step_path_{name}", us,
+             f"steps_per_s={1e6 / us:.1f}")
+    emit("bench_step_path_speedup", 0.0,
+         f"scanned_vs_eager={payload['speedup_scanned_vs_eager']}x;"
+         f"fused_vs_eager={payload['speedup_fused_vs_eager']}x")
+
+
 def kernel_benches():
     from repro.kernels import (flash_attention, gossip_update,
                                obfuscate_update, ssd_intra_chunk)
@@ -278,21 +385,43 @@ def kernel_benches():
     emit("kernel_ssd_chunk", us_k, f"ref_us={us_r:.1f}")
 
 
-def main() -> None:
+BENCHES = {
+    "remark5_entropy": remark5_entropy,
+    "fig2_convex": fig2_convex,
+    "fig5_dlg": fig5_dlg,
+    "table1_dp": table1_dp,
+    "remark7_lambda_ablation": remark7_lambda_ablation,
+    "comm_cost": comm_cost,
+    "bench_step_path": bench_step_path,
+    "kernel_benches": kernel_benches,
+    "fig3_nonconvex": fig3_nonconvex,
+}
+
+
+def main(argv=None) -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--only", default=None,
+                   help="run a single benchmark (substring match on "
+                        + ", ".join(BENCHES))
+    args = p.parse_args(argv)
+    if args.only:
+        selected = {k: v for k, v in BENCHES.items() if args.only in k}
+        if not selected:
+            raise SystemExit(f"no benchmark matches {args.only!r}; "
+                             f"have {sorted(BENCHES)}")
+    else:
+        selected = BENCHES
     print("name,us_per_call,derived")
-    remark5_entropy()
-    fig2_convex()
-    fig5_dlg()
-    table1_dp()
-    remark7_lambda_ablation()
-    comm_cost()
-    kernel_benches()
-    fig3_nonconvex()
-    out = os.path.join(os.path.dirname(__file__), "results",
-                       "bench_results.csv")
-    os.makedirs(os.path.dirname(out), exist_ok=True)
-    with open(out, "w") as f:
-        f.write("name,us_per_call,derived\n" + "\n".join(ROWS) + "\n")
+    for fn in selected.values():
+        fn()
+    if not args.only:
+        # Only a full sweep owns the canonical CSV — a --only spot check
+        # must not clobber it with a partial row set.
+        out = os.path.join(os.path.dirname(__file__), "results",
+                           "bench_results.csv")
+        os.makedirs(os.path.dirname(out), exist_ok=True)
+        with open(out, "w") as f:
+            f.write("name,us_per_call,derived\n" + "\n".join(ROWS) + "\n")
 
 
 if __name__ == '__main__':

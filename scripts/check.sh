@@ -1,0 +1,18 @@
+#!/usr/bin/env bash
+# Tier-1 gate + hot-loop perf trajectory.  Run from the repo root:
+#   bash scripts/check.sh
+# Emits BENCH_pdsgd.json (eager vs fused vs scanned PDSGD step timings) so
+# every change ships with fresh perf numbers to regress against.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 tests =="
+python -m pytest -x -q
+
+echo "== hot-loop perf (bench_step_path) =="
+python benchmarks/run.py --only bench_step_path
+
+echo "== BENCH_pdsgd.json =="
+cat BENCH_pdsgd.json

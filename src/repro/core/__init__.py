@@ -5,6 +5,7 @@ from .privacy import sample_B, sample_lambda_tree, obfuscated_gradient, agent_ke
 from .pdsgd import (
     DecentralizedState,
     make_decentralized_step,
+    make_scanned_steps,
     pdsgd_update,
     dsgd_update,
     dp_dsgd_update,
@@ -25,7 +26,8 @@ __all__ = [
     "Topology", "make_topology", "metropolis_weights", "spectral_gap",
     "Schedule", "harmonic", "paper_experiment", "polynomial", "check_conditions",
     "sample_B", "sample_lambda_tree", "obfuscated_gradient", "agent_key",
-    "DecentralizedState", "make_decentralized_step", "pdsgd_update",
+    "DecentralizedState", "make_decentralized_step", "make_scanned_steps",
+    "pdsgd_update",
     "dsgd_update", "dp_dsgd_update", "gossip_mix", "consensus_error",
     "init_state", "replicate_params",
     "theta_closed", "theta_numeric", "mse_lower_bound",

@@ -20,7 +20,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .privacy import agent_key, obfuscated_gradient, sample_B
+from .privacy import agent_key, leaf_keys, obfuscated_gradient, sample_B
 from .schedules import Schedule
 from .topology import Topology
 
@@ -33,6 +33,7 @@ __all__ = [
     "dsgt_update",
     "dp_dsgd_update",
     "make_decentralized_step",
+    "make_scanned_steps",
     "consensus_error",
     "replicate_params",
 ]
@@ -87,6 +88,28 @@ def _per_agent_obfuscated(key: jax.Array, step: jax.Array, grads: Pytree,
     return jax.vmap(lambda k, g: obfuscated_gradient(k, g, lam_bar))(keys, grads)
 
 
+def _per_agent_bits(key: jax.Array, step: jax.Array, grads: Pytree) -> Pytree:
+    """The raw uint32 draws behind `_per_agent_obfuscated`'s Lambda.
+
+    Uses `privacy.leaf_keys` — the SAME per-(agent, leaf) derivation as the
+    eager path — but stops at the counter output: `jax.random.uniform(k, s)`
+    is bit-identical to mapping `jax.random.bits(k, s)` through the
+    mantissa trick the obfuscate kernel applies in-VMEM, so the fused path
+    realizes the *same* Lambda^k.
+    """
+    m = jax.tree.leaves(grads)[0].shape[0]
+    keys = jax.vmap(lambda a: agent_key(key, step, a))(jnp.arange(m))
+
+    def bits_one_agent(k, grads_i):
+        ks, leaves, treedef = leaf_keys(k, grads_i)
+        return jax.tree.unflatten(
+            treedef,
+            [jax.random.bits(kk, g.shape, dtype=jnp.uint32)
+             for kk, g in zip(ks, leaves)])
+
+    return jax.vmap(bits_one_agent)(keys, grads)
+
+
 def pdsgd_update(
     params: Pytree,
     grads: Pytree,
@@ -96,10 +119,29 @@ def pdsgd_update(
     W: jax.Array,
     support: jax.Array,
     lam_bar: jax.Array,
+    use_pallas: bool | None = None,
+    interpret: bool | None = None,
 ) -> Pytree:
-    """One iteration of Eq. (4): x^{k+1} = W x^k - B^k Lambda^k g^k."""
-    u = _per_agent_obfuscated(jax.random.fold_in(key, 1), step, grads, lam_bar)
+    """One iteration of Eq. (4): x^{k+1} = W x^k - B^k Lambda^k g^k.
+
+    ``use_pallas=True`` routes the whole update through the fused Pallas
+    kernels (`kernels.fused_pdsgd_tree`): one flattened pass, u never
+    materialized per leaf.  Because the kernel consumes the same counter
+    bits the eager path feeds `jax.random.uniform`, both paths realize the
+    identical Lambda^k/B^k draw — `tests/test_fast_path.py` pins them to
+    each other.  ``None`` defers to `kernels.default_use_pallas` (True on
+    TPU, False under the CPU interpreter where fused is a correctness path).
+    """
     B = sample_B(agent_key(jax.random.fold_in(key, 2), step, 0), support)
+    if use_pallas is None:
+        from ..kernels import default_use_pallas
+        use_pallas = default_use_pallas()
+    if use_pallas:
+        from ..kernels import fused_pdsgd_tree
+        bits = _per_agent_bits(jax.random.fold_in(key, 1), step, grads)
+        return fused_pdsgd_tree(W, B, params, grads, bits, lam_bar,
+                                interpret=interpret)
+    u = _per_agent_obfuscated(jax.random.fold_in(key, 1), step, grads, lam_bar)
     mixed = gossip_mix(W, params)
     descent = gossip_mix(B, u)
     return jax.tree.map(lambda a, b: a - b, mixed, descent)
@@ -172,24 +214,41 @@ def make_decentralized_step(
     algorithm: Algorithm = "pdsgd",
     sigma_dp: float = 0.0,
     donate: bool = True,
+    use_pallas: bool | None = None,
+    interpret: bool | None = None,
+    track_mean: bool = False,
+    force_host_schedule: bool = False,
 ):
     """Build a jitted decentralized training step.
 
     loss_fn(params_i, batch_i) -> scalar loss for ONE agent; it is vmapped
     over the agent axis.  Returns ``step(state, batch, key) -> (state, aux)``
     where batch leaves have a leading (m, ...) axis.
+
+    The stepsize schedule is evaluated ON DEVICE from the traced
+    ``state.step`` — the returned step performs zero per-iteration host
+    syncs and composes with `make_scanned_steps` (the un-jitted traceable
+    body is exposed as ``step.inner``).  Schedules that cannot trace (and
+    ``force_host_schedule=True``, kept for benchmarking the seed behavior)
+    fall back to the old host round-trip, in which case ``step.inner`` is
+    ``None``.
+
+    ``use_pallas``/``interpret`` select the fused-kernel PDSGD path (see
+    `pdsgd_update`); ``track_mean`` adds the agent-mean parameters to aux
+    (what rate tests integrate — cheap for small models, off by default).
     """
     W = jnp.asarray(topology.weights, dtype=jnp.float32)
     support = jnp.asarray(topology.adjacency, dtype=jnp.float32)
 
     grad_fn = jax.vmap(jax.value_and_grad(loss_fn))
 
-    def step_fn(state: DecentralizedState, batch, key: jax.Array, lam_bar):
+    def apply_update(state, batch, key, lam_bar):
         losses, grads = grad_fn(state.params, batch)
         if algorithm == "pdsgd":
             new_params = pdsgd_update(
                 state.params, grads, key=key, step=state.step, W=W,
-                support=support, lam_bar=lam_bar)
+                support=support, lam_bar=lam_bar, use_pallas=use_pallas,
+                interpret=interpret)
         elif algorithm == "dsgd":
             new_params = dsgd_update(state.params, grads, W=W, lam=lam_bar)
         elif algorithm == "dp_dsgd":
@@ -202,18 +261,84 @@ def make_decentralized_step(
             "loss": losses.mean(),
             "consensus_error": consensus_error(new_params),
         }
+        if track_mean:
+            aux["params_mean"] = jax.tree.map(lambda p: p.mean(axis=0),
+                                              new_params)
         return DecentralizedState(params=new_params, step=state.step + 1), aux
 
-    jitted = jax.jit(step_fn, donate_argnums=(0,) if donate else ())
+    def step_fn(state: DecentralizedState, batch, key: jax.Array):
+        lam_bar = jnp.asarray(
+            schedule(state.step.astype(jnp.float32), 0), dtype=jnp.float32)
+        return apply_update(state, batch, key, lam_bar)
+
+    device_schedule = not force_host_schedule
+    if device_schedule:
+        try:
+            jax.eval_shape(lambda s: schedule(s, 0),
+                           jax.ShapeDtypeStruct((), jnp.float32))
+        except Exception as e:
+            # Deliberate feature-probe fallback — but never a silent one:
+            # the host path costs a device->host sync every iteration.
+            import warnings
+            warnings.warn(
+                f"schedule {getattr(schedule, 'name', schedule)!r} is not "
+                f"device-traceable ({type(e).__name__}: {e}); falling back "
+                "to the per-step host-sync path (10-30x slower hot loop, "
+                "and make_scanned_steps will refuse this step)")
+            device_schedule = False
+
+    if device_schedule:
+        jitted = jax.jit(step_fn, donate_argnums=(0,) if donate else ())
+
+        def step(state: DecentralizedState, batch, key: jax.Array):
+            return jitted(state, batch, key)
+
+        step.inner = step_fn
+        return step
+
+    # Legacy host path: one device->host sync per iteration to evaluate the
+    # schedule in numpy.  Only reachable for non-traceable schedules or the
+    # explicit benchmark baseline.
+    jitted_host = jax.jit(apply_update, donate_argnums=(0,) if donate else ())
 
     def step(state: DecentralizedState, batch, key: jax.Array):
-        # The schedule is evaluated on host at the current iterate (static
-        # under jit via a traced scalar argument).
         lam_bar = jnp.asarray(
             schedule(np.asarray(int(state.step)), 0), dtype=jnp.float32)
-        return jitted(state, batch, key, lam_bar)
+        return jitted_host(state, batch, key, lam_bar)
 
+    step.inner = None
     return step
+
+
+def make_scanned_steps(step_fn, unroll_k: int, donate: bool = True):
+    """Fuse ``unroll_k`` training iterations into one `jax.lax.scan`.
+
+    Dispatch-bound small-model workloads (the paper's d=2 estimation
+    problem) pay ~a millisecond of Python/dispatch per step in the eager
+    loop; scanning k steps amortizes that to one dispatch per k.
+
+    ``step_fn`` is a step from `make_decentralized_step` (its traceable
+    ``.inner`` is used) or any pure ``(state, batch, key) -> (state, aux)``.
+    Returns ``scanned(state, batches, keys) -> (state, aux_stacked)`` where
+    every ``batches`` leaf gains a leading (unroll_k, ...) axis (``None``
+    broadcasts for batchless objectives) and ``keys`` is a (unroll_k,) key
+    array, e.g. from `jax.random.split`.
+    """
+    inner = getattr(step_fn, "inner", step_fn)
+    if inner is None:
+        raise ValueError(
+            "step_fn evaluates its schedule on host (non-traceable); "
+            "make_scanned_steps requires a device-resident step")
+
+    def body(state, xs):
+        batch, key = xs
+        return inner(state, batch, key)
+
+    @partial(jax.jit, donate_argnums=(0,) if donate else ())
+    def scanned(state: DecentralizedState, batches, keys: jax.Array):
+        return jax.lax.scan(body, state, (batches, keys), length=unroll_k)
+
+    return scanned
 
 
 def init_state(params: Pytree, m: int) -> DecentralizedState:

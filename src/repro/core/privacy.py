@@ -16,6 +16,7 @@ import numpy as np
 
 __all__ = [
     "agent_key",
+    "leaf_keys",
     "sample_lambda_tree",
     "obfuscated_gradient",
     "sample_B",
@@ -30,6 +31,19 @@ def agent_key(key: jax.Array, step: jax.Array | int, agent: jax.Array | int) -> 
     return jax.random.fold_in(jax.random.fold_in(key, step), agent)
 
 
+def leaf_keys(key: jax.Array, tree: Pytree):
+    """One independent PRNG key per leaf: ``(keys, leaves, treedef)``.
+
+    This is THE canonical per-leaf derivation.  Both the eager sampling
+    path (`obfuscated_gradient`/`sample_lambda_tree`) and the fused-kernel
+    bits path (`pdsgd._per_agent_bits`) consume it, which is what makes
+    their realized Lambda^k bit-identical — never derive leaf keys any
+    other way in either path.
+    """
+    leaves, treedef = jax.tree.flatten(tree)
+    return jax.random.split(key, len(leaves)), leaves, treedef
+
+
 def _uniform_like(key: jax.Array, x: jax.Array, lam_bar: jax.Array) -> jax.Array:
     """lambda ~ U[0, 2*lam_bar] elementwise, matching x's shape.
 
@@ -42,8 +56,7 @@ def _uniform_like(key: jax.Array, x: jax.Array, lam_bar: jax.Array) -> jax.Array
 
 def sample_lambda_tree(key: jax.Array, grads: Pytree, lam_bar: jax.Array) -> Pytree:
     """Sample the diagonal of Lambda_j^k for every gradient leaf."""
-    leaves, treedef = jax.tree.flatten(grads)
-    keys = jax.random.split(key, len(leaves))
+    keys, leaves, treedef = leaf_keys(key, grads)
     lams = [_uniform_like(k, g, lam_bar) for k, g in zip(keys, leaves)]
     return jax.tree.unflatten(treedef, lams)
 
@@ -54,8 +67,7 @@ def obfuscated_gradient(key: jax.Array, grads: Pytree, lam_bar: jax.Array) -> Py
     Fuses sampling and scaling per leaf (the Pallas kernel in
     kernels/obfuscate.py implements the same contraction tiled for VMEM).
     """
-    leaves, treedef = jax.tree.flatten(grads)
-    keys = jax.random.split(key, len(leaves))
+    keys, leaves, treedef = leaf_keys(key, grads)
     out = []
     for k, g in zip(keys, leaves):
         lam = _uniform_like(k, g, lam_bar)

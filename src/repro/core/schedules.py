@@ -25,15 +25,37 @@ __all__ = [
 ]
 
 
+def _is_jax(x) -> bool:
+    import jax
+    return isinstance(x, jax.Array)
+
+
+def _where(cond, a, b):
+    """np.where that also accepts traced jax values (device schedules)."""
+    if _is_jax(cond) or _is_jax(a) or _is_jax(b):
+        import jax.numpy as jnp
+        return jnp.where(cond, a, b)
+    return np.where(cond, a, b)
+
+
 @dataclasses.dataclass(frozen=True)
 class Schedule:
     """Mean stepsize schedule lam_bar(k, agent). k is 0-based internally;
-    the paper's 1/k schedules are evaluated at k+1."""
+    the paper's 1/k schedules are evaluated at k+1.
+
+    Evaluation is dual-mode: host calls (numpy inputs) run in float64 as
+    before, while a traced `jax.Array` k evaluates on device — this is what
+    lets `make_decentralized_step` keep the whole training step on device
+    with zero per-iteration host syncs.
+    """
 
     name: str
     fn: Callable[[np.ndarray, np.ndarray], np.ndarray]  # (k, agent) -> lam_bar
 
     def __call__(self, k, agent=0):
+        if _is_jax(k) or _is_jax(agent):
+            # traced/device path: keep k's dtype, no host round-trip
+            return self.fn(k, agent)
         k = np.asarray(k, dtype=np.float64)
         agent = np.asarray(agent, dtype=np.float64)
         return self.fn(k, agent)
@@ -71,8 +93,8 @@ def warmup_harmonic(base: float = 1.0, hold: int = 100) -> Schedule:
     nor square-summability of the harmonic tail."""
 
     def fn(k, a):
-        return np.where(k < hold, base * (k + 1.0) / (hold + 1.0),
-                        base * (hold + 1.0) / (k + 1.0))
+        return _where(k < hold, base * (k + 1.0) / (hold + 1.0),
+                      base * (hold + 1.0) / (k + 1.0))
 
     return Schedule("warmup_harmonic", fn)
 
@@ -100,14 +122,17 @@ def deviating(base_schedule: Schedule, num_agents: int,
 
     def fn(k, a):
         lam = base_schedule.fn(k, a)
+        if _is_jax(a):
+            raise TypeError("deviating schedules index private per-agent "
+                            "tables; the agent id must be a static host int")
         ai = int(np.asarray(a).reshape(-1)[0])
         table_i, table_f = idx.get(ai), fac.get(ai)
         if table_i is None:
             return lam
-        kk = np.asarray(k)
-        mult = np.ones_like(np.asarray(lam, dtype=np.float64))
+        kk = k if _is_jax(k) else np.asarray(k)
+        mult = lam * 0.0 + 1.0  # ones in lam's dtype, host or traced
         for i, f in zip(table_i, table_f):
-            mult = np.where(kk == i, f, mult)
+            mult = _where(kk == float(i), float(f), mult)
         return lam * mult
 
     return Schedule(f"deviating({base_schedule.name})", fn)

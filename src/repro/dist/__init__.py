@@ -1,0 +1,11 @@
+"""Distribution subsystem: logical sharding rules and the torus gossip
+collectives for the paper's Eq. (3) exchange.
+
+``sharding``    — logical-axis -> mesh-axis rule tables (train/serve/decode)
+                  and the resolver ``logical_spec``.
+``collectives`` — neighbor-only ring/torus gossip (``torus_gossip_pdsgd``)
+                  with a dense-W einsum fallback on a single host.
+"""
+from . import collectives, sharding
+
+__all__ = ["collectives", "sharding"]

@@ -1,0 +1,200 @@
+"""Communication-optimal torus gossip for the paper's Eq. (3) exchange.
+
+The dense baseline materializes W x^k - B^k u^k as two (m, m) einsums over
+the agent axis, which GSPMD lowers to all-gathers: every agent's variable
+visits every device.  On the ("pod","data") device torus the coupling
+matrix of `launch.steps.make_torus_W` has only nearest-neighbor support, so
+the same update needs just one `ppermute` ring shift per torus direction —
+O(deg) point-to-point messages per agent instead of an m-way all-gather,
+and each message carries only the already-mixed quantity
+
+    v_ij = w_edge * x_j - b_ij * u_j,
+
+never x_j or u_j alone.  That is exactly the paper's privacy architecture
+(Sec. III: only the sum-masked v_ij crosses the wire), so the fast path and
+the privacy mechanism are the same code.
+
+On a single host (no mesh, or the agent count does not match the mesh
+torus) `torus_gossip_pdsgd` falls back to a dense-W einsum with the same
+coupling matrices, which `tests/test_fast_path.py` pins against
+`core.pdsgd.gossip_mix` and `topology.metropolis_weights`.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+__all__ = [
+    "sample_b_draws",
+    "torus_weights",
+    "torus_gossip_pdsgd",
+    "dense_coupling",
+]
+
+Pytree = Any
+
+
+def _directions(n_data: int, n_pod: int) -> list[tuple[str, int, int]]:
+    """Distinct neighbor directions (mesh_axis, ring_size, shift) of the
+    ("pod","data") torus.  Size-2 rings have a single distinct neighbor
+    (+1 == -1 mod 2), matching `topology.torus2d`'s boolean adjacency."""
+    dirs: list[tuple[str, int, int]] = []
+    if n_data > 1:
+        dirs.append(("data", n_data, 1))
+    if n_data > 2:
+        dirs.append(("data", n_data, -1))
+    if n_pod > 1:
+        dirs.append(("pod", n_pod, 1))
+    if n_pod > 2:
+        dirs.append(("pod", n_pod, -1))
+    return dirs
+
+
+def torus_weights(n_data: int, n_pod: int) -> dict:
+    """Metropolis weights of the regular torus: every agent has
+    deg = len(directions) neighbors, so w_edge = 1/(1+deg) and
+    w_self = 1 - deg*w_edge — identical to
+    `topology.metropolis_weights(torus2d(n_pod, n_data))`."""
+    deg = len(_directions(n_data, n_pod))
+    w_edge = 1.0 / (1.0 + deg)
+    return {"w_self": 1.0 - deg * w_edge, "w_edge": w_edge}
+
+
+def sample_b_draws(key: jax.Array, m: int, n_data: int, n_pod: int) -> jax.Array:
+    """Per-agent random column weights of B^k on the torus support.
+
+    Returns (m, 1 + ndirs) with rows summing to one: column j of B^k is
+    chosen by agent j (Sec. III), row j here holds [b_jj, b_{i_1 j}, ...]
+    for the neighbors i_d = shift_d(j).  Dirichlet(1,..,1) via normalized
+    Exp(1) draws, mirroring `privacy.sample_B` on the dense support.
+    """
+    ndirs = len(_directions(n_data, n_pod))
+    e = jax.random.exponential(key, (m, 1 + ndirs), dtype=jnp.float32)
+    return e / e.sum(axis=1, keepdims=True)
+
+
+def _perm_matrices(n_data: int, n_pod: int) -> list[np.ndarray]:
+    """Static permutation matrix per direction: P[i, j] = 1 iff i receives
+    from j, with agent id = pod * n_data + data (GSPMD device order)."""
+    m = n_data * n_pod
+    mats = []
+    for axis, _size, shift in _directions(n_data, n_pod):
+        Pm = np.zeros((m, m), dtype=np.float32)
+        for j in range(m):
+            pj, dj = divmod(j, n_data)
+            if axis == "data":
+                i = pj * n_data + (dj + shift) % n_data
+            else:
+                i = ((pj + shift) % n_pod) * n_data + dj
+            Pm[i, j] = 1.0
+        mats.append(Pm)
+    return mats
+
+
+def dense_coupling(b: jax.Array, n_data: int, n_pod: int
+                   ) -> tuple[jax.Array, jax.Array]:
+    """Materialize the (W, B^k) pair the ring path applies implicitly.
+
+    W is the doubly-stochastic torus Metropolis matrix; B^k is the random
+    column-stochastic matrix realized from the `sample_b_draws` rows.
+    """
+    m = n_data * n_pod
+    wts = torus_weights(n_data, n_pod)
+    mats = _perm_matrices(n_data, n_pod)
+    eye = np.eye(m, dtype=np.float32)
+    W = wts["w_self"] * eye + wts["w_edge"] * sum(mats, np.zeros_like(eye))
+    B = jnp.asarray(eye) * b[None, :, 0]
+    for di, Pm in enumerate(mats):
+        B = B + jnp.asarray(Pm) * b[None, :, 1 + di]
+    return jnp.asarray(W), B
+
+
+def torus_gossip_pdsgd(mesh, params: Pytree, u: Pytree, b: jax.Array, *,
+                       agent_axes: tuple[str, ...] = ("pod", "data"),
+                       n_data: int | None = None,
+                       n_pod: int | None = None,
+                       leaf_specs: Pytree | None = None) -> Pytree:
+    """x' = W x - B^k u via neighbor-only exchanges on the mesh torus.
+
+    params/u: pytrees with leading agent axis (m, ...); b: (m, 1+ndirs)
+    rows from `sample_b_draws`.  When ``mesh`` hosts exactly one agent per
+    ("pod","data") coordinate the update runs under `shard_map` with one
+    `lax.ppermute` ring shift per direction; otherwise (single host, or a
+    mesh that does not carry the agent axis) it falls back to the dense
+    einsum with the equivalent `dense_coupling` matrices.  ``n_data`` /
+    ``n_pod`` override the torus shape when no mesh carries it (the
+    single-host fallback on a non-trivial torus).
+
+    ``leaf_specs`` (a pytree of PartitionSpec congruent with params) keeps
+    the NON-agent dims of each leaf sharded inside the shard_map — without
+    it every leaf is resharded to P(agent_axes) and model-parallel params
+    would be all-gathered to full per-agent replicas.  The gossip body is
+    elementwise + ppermute over the agent axes only, so any trailing-dim
+    sharding passes straight through.  Each spec's first entry must cover
+    exactly ``agent_axes``.
+    """
+    m = jax.tree.leaves(params)[0].shape[0]
+    axes = tuple(a for a in agent_axes
+                 if mesh is not None and a in getattr(mesh, "shape", {}))
+    if n_pod is None:
+        n_pod = mesh.shape.get("pod", 1) if (axes and "pod" in axes) else 1
+    if n_data is None:
+        n_data = (mesh.shape.get("data", 1) if (axes and "data" in axes)
+                  else m // n_pod)
+    if n_pod * n_data != m:
+        raise ValueError(
+            f"torus {n_pod}x{n_data} does not hold m={m} agents")
+
+    dirs = _directions(n_data, n_pod)
+    if b.shape[-1] != 1 + len(dirs):
+        raise ValueError(
+            f"b has {b.shape[-1]} coefficients but the {n_pod}x{n_data} "
+            f"torus has {len(dirs)} neighbor directions")
+
+    mesh_matches = (axes
+                    and (mesh.shape.get("pod", 1) if "pod" in axes else 1) == n_pod
+                    and (mesh.shape.get("data", 1) if "data" in axes else 1) == n_data)
+    if not mesh_matches:
+        # Dense single-host fallback: same math, explicit matrices.
+        from ..core.pdsgd import gossip_mix
+        W, B = dense_coupling(b, n_data, n_pod)
+        mixed = gossip_mix(W, params)
+        desc = gossip_mix(B, u)
+        return jax.tree.map(lambda a, c: a - c, mixed, desc)
+
+    wts = torus_weights(n_data, n_pod)
+    agent_spec = axes[0] if len(axes) == 1 else axes
+    if leaf_specs is None:
+        leaf_spec = jax.tree.map(lambda _: P(agent_spec), params)
+    else:
+        leaf_spec = leaf_specs
+
+    def body(b_loc, x_loc, u_loc):
+        # One agent per shard: every leaf is (1, ...), b_loc is (1, 1+ndirs).
+        def coeff(col, leaf):
+            return b_loc[:, col].reshape((-1,) + (1,) * (leaf.ndim - 1))
+
+        out = jax.tree.map(
+            lambda x, uu: wts["w_self"] * x - coeff(0, x) * uu, x_loc, u_loc)
+        for di, (axis, size, shift) in enumerate(dirs):
+            perm = [(d, (d + shift) % size) for d in range(size)]
+            # The sender computes the mixed v_ij; only v crosses the link.
+            v = jax.tree.map(
+                lambda x, uu: wts["w_edge"] * x - coeff(1 + di, x) * uu,
+                x_loc, u_loc)
+            shifted = jax.tree.map(
+                lambda leaf: jax.lax.ppermute(leaf, axis, perm), v)
+            out = jax.tree.map(lambda a, c: a + c, out, shifted)
+        return out
+
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(P(agent_spec), leaf_spec, leaf_spec),
+        out_specs=leaf_spec,
+        check_rep=False,
+    )(b, params, u)

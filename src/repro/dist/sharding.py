@@ -1,0 +1,101 @@
+"""Logical-axis sharding rules (t5x/flax style) for every launch mode.
+
+A rule table maps each *logical* axis name (the names attached to params in
+``models/*.py`` via ``ArrayDef.logical`` and to activations/caches inline)
+to an ordered list of *mesh-axis candidates*.  ``logical_spec`` resolves a
+concrete :class:`~jax.sharding.PartitionSpec` for one array by walking its
+logical axes and taking, per axis, the first candidate whose mesh axes
+
+  * all exist on the mesh (missing axes are dropped from the candidate, so
+    a ("pod", "data", "model") rule degrades to ("data", "model") on a
+    single-pod mesh),
+  * are not already consumed by an earlier dimension of the same array, and
+  * have a combined size that divides the dimension (never produces ragged
+    shards; an indivisible dimension falls through to replication).
+
+Tables are data, not code: the dry-run sweeps and tests compare them
+directly, and `launch/specs.py` builds every in/out sharding from them.
+"""
+from __future__ import annotations
+
+from typing import Mapping, Sequence
+
+from jax.sharding import PartitionSpec
+
+__all__ = ["TRAIN_RULES", "SERVE_RULES", "DECODE_RULES", "logical_spec"]
+
+# Each value is a tuple of candidates; each candidate a tuple of mesh axes.
+RuleTable = Mapping[str, tuple[tuple[str, ...], ...]]
+
+# Axes that are always replicated (kept explicit so the tables double as
+# documentation of every logical axis in the repo).
+_REPLICATED = {
+    "layers": (), "seq": (), "head_dim": (), "experts": (), "conv": (),
+    "state": (), "window": (), "audio": (), "embed": (),
+}
+
+TRAIN_RULES: RuleTable = dict(
+    _REPLICATED,
+    # The decentralized agent axis lives on the ("pod","data") torus — one
+    # agent per (pod, data) coordinate, matching `launch.mesh.agent_axes`.
+    agents=(("pod", "data"),),
+    # Per-agent batch/seq stay local to the agent's model-parallel group.
+    batch=(), kv_seq=(),
+    mlp=(("model",),), expert_mlp=(("model",),),
+    heads=(("model",),), kv_heads=(("model",),),
+    vocab=(("model",),),
+)
+
+SERVE_RULES: RuleTable = dict(
+    _REPLICATED,
+    agents=(("pod", "data"),),
+    batch=(("data",),),
+    # Long-context KV caches grab every free axis they can divide by; the
+    # candidates degrade gracefully: batch usually owns "data", so kv_seq
+    # falls through to "model"; at batch=1 it takes ("pod","data","model").
+    kv_seq=(("pod", "data", "model"), ("data", "model"), ("model",)),
+    mlp=(("model",),), expert_mlp=(("model",),),
+    heads=(("model",),), kv_heads=(("model",),),
+    vocab=(("model",),),
+)
+
+# §Perf head_dim-fallback layout for decode: when heads %% model != 0 (e.g.
+# llava's 56 Q heads on a 16-way model axis) the head axis replicates and
+# head_dim picks up "model" instead, keeping attention weights sharded.
+DECODE_RULES: RuleTable = dict(SERVE_RULES, head_dim=(("model",),))
+
+
+def logical_spec(mesh, shape: Sequence[int],
+                 logical: Sequence[str | None],
+                 table: RuleTable) -> PartitionSpec:
+    """Resolve the PartitionSpec of one array on ``mesh``.
+
+    ``mesh`` only needs a ``.shape`` mapping (axis name -> size), so tests
+    can pass a duck-typed stand-in without touching device state.
+    """
+    if len(shape) != len(logical):
+        raise ValueError(
+            f"rank mismatch: shape {tuple(shape)} vs logical {tuple(logical)}")
+    used: set[str] = set()
+    entries: list[None | str | tuple[str, ...]] = []
+    for dim, name in zip(shape, logical):
+        chosen = None
+        for cand in (table.get(name, ()) if name is not None else ()):
+            axes = tuple(a for a in cand if a in mesh.shape)
+            if not axes or any(a in used for a in axes):
+                continue
+            size = 1
+            for a in axes:
+                size *= mesh.shape[a]
+            if size <= 1 or dim % size != 0:
+                continue
+            chosen = axes
+            break
+        if chosen is not None:
+            used.update(chosen)
+            entries.append(chosen[0] if len(chosen) == 1 else chosen)
+        else:
+            entries.append(None)
+    while entries and entries[-1] is None:
+        entries.pop()
+    return PartitionSpec(*entries)

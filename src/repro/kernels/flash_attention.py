@@ -17,6 +17,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .runtime import resolve_interpret
+
 DEFAULT_BQ = 128
 DEFAULT_BK = 128
 NEG_INF = -1e30
@@ -67,13 +69,22 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, bq: int, bk: int,
     o_ref[0] = out.astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("causal", "window", "bq", "bk",
-                                             "interpret"))
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     causal: bool = True, window: int | None = None,
                     bq: int = DEFAULT_BQ, bk: int = DEFAULT_BK,
-                    interpret: bool = True) -> jax.Array:
-    """q/k/v: (B, S, H, hd) with equal head counts.  Returns (B, S, H, hd)."""
+                    interpret: bool | None = None) -> jax.Array:
+    """q/k/v: (B, S, H, hd) with equal head counts.  Returns (B, S, H, hd).
+
+    interpret resolves in this un-jitted wrapper: top-level calls pick up
+    env flips by retracing; calls inside an outer jit bind it at that trace."""
+    return _flash_attention(q, k, v, causal=causal, window=window,
+                            bq=bq, bk=bk,
+                            interpret=resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "bq", "bk",
+                                             "interpret"))
+def _flash_attention(q, k, v, *, causal, window, bq, bk, interpret):
     B, S, H, hd = q.shape
     bq_ = min(bq, S)
     bk_ = min(bk, S)

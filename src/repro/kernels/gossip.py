@@ -15,6 +15,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .runtime import resolve_interpret
+
 DEFAULT_BLOCK_N = 512
 
 
@@ -28,10 +30,18 @@ def _gossip_kernel(w_ref, b_ref, x_ref, u_ref, o_ref):
     o_ref[...] = (mixed - desc).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
 def gossip_update(W: jax.Array, B: jax.Array, X: jax.Array, U: jax.Array,
                   block_n: int = DEFAULT_BLOCK_N,
-                  interpret: bool = True) -> jax.Array:
+                  interpret: bool | None = None) -> jax.Array:
+    # interpret resolves in this un-jitted wrapper: top-level calls pick
+    # up env flips by retracing; calls inside an outer jit bind it at
+    # that outer trace
+    return _gossip_update(W, B, X, U, block_n=block_n,
+                          interpret=resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def _gossip_update(W, B, X, U, block_n, interpret):
     m, n = X.shape
     bn = min(block_n, n)
     assert n % bn == 0, (n, bn)

@@ -24,6 +24,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .runtime import resolve_interpret
+
 DEFAULT_BLOCK = (256, 256)
 
 
@@ -42,16 +44,28 @@ def _obfuscate_kernel(x_ref, g_ref, bits_ref, scal_ref, o_ref):
     o_ref[...] = (w_self * x - b_self * (lam * g)).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("block", "interpret"))
 def obfuscate_update(x: jax.Array, g: jax.Array, bits: jax.Array,
                      lam_bar, w_self, b_self,
                      block: tuple[int, int] = DEFAULT_BLOCK,
-                     interpret: bool = True) -> jax.Array:
+                     interpret: bool | None = None) -> jax.Array:
     """x, g: (R, C) same shape; bits: (R, C) uint32.  Returns v same shape.
 
     R/C are padded to the block grid by the caller (ops.py handles pytrees
-    and arbitrary shapes by flattening + padding).
+    and arbitrary shapes by flattening + padding).  ``interpret=None``
+    defers to `runtime.default_interpret` (compiled on TPU, interpreter
+    elsewhere); resolved in this un-jitted wrapper, so TOP-LEVEL calls pick
+    up env-var flips by retracing.  Calls inside an outer jit (e.g. a
+    training step) bind the knob once at that outer trace — rebuild the
+    step to change it.
     """
+    return _obfuscate_update(x, g, bits, lam_bar, w_self, b_self,
+                             block=block,
+                             interpret=resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def _obfuscate_update(x, g, bits, lam_bar, w_self, b_self,
+                      block, interpret):
     R, C = x.shape
     br, bc = min(block[0], R), min(block[1], C)
     assert R % br == 0 and C % bc == 0, (x.shape, block)

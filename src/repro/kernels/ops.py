@@ -1,8 +1,8 @@
 """Public jit'd wrappers for the Pallas kernels.
 
-``interpret`` defaults to True everywhere: this container is CPU-only, so
-kernels execute through the Pallas interpreter for correctness validation;
-on TPU hardware the same calls run compiled (interpret=False).
+``interpret=None`` everywhere defers to `runtime.default_interpret`: on this
+CPU-only container kernels execute through the Pallas interpreter for
+correctness validation; on TPU hardware the same calls run compiled.
 """
 from __future__ import annotations
 
@@ -14,12 +14,14 @@ import jax.numpy as jnp
 from .flash_attention import flash_attention
 from .gossip import gossip_update
 from .obfuscate import obfuscate_update
+from .runtime import default_interpret, default_use_pallas
 from .ssm_scan import ssd_intra_chunk
 
 Pytree = Any
 
 __all__ = ["flash_attention", "gossip_update", "obfuscate_update",
-           "ssd_intra_chunk", "obfuscate_tree", "gossip_tree"]
+           "ssd_intra_chunk", "obfuscate_tree", "gossip_tree",
+           "fused_pdsgd_tree", "default_interpret", "default_use_pallas"]
 
 
 def _flatten_concat(tree: Pytree):
@@ -46,7 +48,8 @@ def _pad_cols(x: jax.Array, multiple: int):
 
 
 def obfuscate_tree(key: jax.Array, x_tree: Pytree, g_tree: Pytree,
-                   lam_bar, w_self, b_self, interpret: bool = True) -> Pytree:
+                   lam_bar, w_self, b_self,
+                   interpret: bool | None = None) -> Pytree:
     """Apply the fused obfuscation kernel leaf-wise across a parameter
     pytree with leading agent dim (m, ...)."""
     x_flat, sizes, leaves = _flatten_concat(x_tree)
@@ -62,12 +65,43 @@ def obfuscate_tree(key: jax.Array, x_tree: Pytree, g_tree: Pytree,
 
 
 def gossip_tree(W: jax.Array, B: jax.Array, x_tree: Pytree, u_tree: Pytree,
-                interpret: bool = True) -> Pytree:
+                interpret: bool | None = None) -> Pytree:
     """x' = W X - B U across a parameter pytree with leading agent dim."""
     x_flat, sizes, leaves = _flatten_concat(x_tree)
     u_flat, _, _ = _flatten_concat(u_tree)
     x_flat, pad = _pad_cols(x_flat, 512)
     u_flat, _ = _pad_cols(u_flat, 512)
+    out = gossip_update(W, B, x_flat, u_flat, interpret=interpret)
+    if pad:
+        out = out[:, :-pad]
+    return _unflatten(out, sizes, leaves, x_tree)
+
+
+def fused_pdsgd_tree(W: jax.Array, B: jax.Array, x_tree: Pytree,
+                     g_tree: Pytree, bits_tree: Pytree, lam_bar,
+                     interpret: bool | None = None) -> Pytree:
+    """Full Eq. (4) update through both fused kernels in one flattened pass:
+
+        u = Lambda(bits) ∘ g          (obfuscate kernel, w_self=0, b_self=-1)
+        x' = W X - B U                (gossip kernel)
+
+    One flatten/concat + one pad for the whole pytree; the intermediate u
+    never round-trips through per-leaf shapes.  ``bits_tree`` carries the
+    uint32 draws per leaf (same shapes as g_tree) so the realized Lambda is
+    bit-identical to the eager `privacy.obfuscated_gradient` path — the
+    randomness contract tests rely on this.
+    """
+    x_flat, sizes, leaves = _flatten_concat(x_tree)
+    g_flat, _, _ = _flatten_concat(g_tree)
+    bits_flat, _, _ = _flatten_concat(bits_tree)
+    x_flat, pad = _pad_cols(x_flat, 512)
+    g_flat, _ = _pad_cols(g_flat, 512)
+    bits_flat, _ = _pad_cols(bits_flat, 512)
+    # w_self=0, b_self=-1 turns the self-term kernel into u = lambda ∘ g.
+    u_flat = obfuscate_update(x_flat, g_flat, bits_flat, lam_bar,
+                              jnp.float32(0.0), jnp.float32(-1.0),
+                              block=(x_flat.shape[0], 256),
+                              interpret=interpret)
     out = gossip_update(W, B, x_flat, u_flat, interpret=interpret)
     if pad:
         out = out[:, :-pad]

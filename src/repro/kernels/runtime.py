@@ -1,0 +1,62 @@
+"""Single source of truth for the Pallas execution knobs.
+
+Every kernel wrapper used to hard-code ``interpret=True`` (correct for this
+CPU-only container, wrong the moment the same code lands on a TPU).  The
+knobs now resolve here, once:
+
+  * ``default_interpret()`` — False on real TPU backends (compiled Mosaic),
+    True elsewhere (Pallas interpreter).  Override with
+    ``REPRO_PALLAS_INTERPRET=0/1``.
+  * ``default_use_pallas()`` — whether hot paths route through the fused
+    Pallas kernels at all (vs the pure-jnp reference).  Defaults to True on
+    TPU, False elsewhere: under the CPU interpreter the fused kernels are a
+    correctness path, not a speed path.  Override with ``REPRO_USE_PALLAS``.
+
+Callers pass ``interpret=None`` / ``use_pallas=None`` to defer to these.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+__all__ = ["default_interpret", "default_use_pallas", "resolve_interpret"]
+
+_TRUTHY = {"1", "true", "yes", "on"}
+_FALSY = {"0", "false", "no", "off"}
+
+
+def _env_flag(name: str) -> bool | None:
+    val = os.environ.get(name, "").strip().lower()
+    if val in _TRUTHY:
+        return True
+    if val in _FALSY:
+        return False
+    return None
+
+
+def default_interpret() -> bool:
+    env = _env_flag("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env
+    return jax.default_backend() != "tpu"
+
+
+def default_use_pallas() -> bool:
+    env = _env_flag("REPRO_USE_PALLAS")
+    if env is not None:
+        return env
+    return jax.default_backend() == "tpu"
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """Canonical ``interpret=None`` resolution, shared by every kernel's
+    un-jitted public wrapper.
+
+    Retrace semantics (documented once, here): because resolution happens
+    in the un-jitted wrapper, TOP-LEVEL kernel calls see env-var flips on
+    the next call (new static value -> retrace).  A kernel call inside an
+    outer jit (e.g. a jitted training step) binds the knob at that outer
+    trace; rebuild the step to change it.
+    """
+    return default_interpret() if interpret is None else bool(interpret)

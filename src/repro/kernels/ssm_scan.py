@@ -18,6 +18,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .runtime import resolve_interpret
+
 
 def _ssd_chunk_kernel(x_ref, dt_ref, acum_ref, b_ref, c_ref, y_ref, s_ref):
     x = x_ref[0].astype(jnp.float32)        # (Q, H, P)
@@ -43,12 +45,20 @@ def _ssd_chunk_kernel(x_ref, dt_ref, acum_ref, b_ref, c_ref, y_ref, s_ref):
     s_ref[0] = state.astype(s_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
 def ssd_intra_chunk(x: jax.Array, dt: jax.Array, a_cum: jax.Array,
                     Bm: jax.Array, Cm: jax.Array,
-                    interpret: bool = True):
+                    interpret: bool | None = None):
     """x: (G, Q, H, P); dt/a_cum: (G, Q, H); Bm/Cm: (G, Q, N).
-    Returns (y_intra (G,Q,H,P) dtype-of-x, states (G,H,P,N) f32)."""
+    Returns (y_intra (G,Q,H,P) dtype-of-x, states (G,H,P,N) f32).
+
+    interpret resolves in this un-jitted wrapper: top-level calls pick up
+    env flips by retracing; calls inside an outer jit bind it at that trace."""
+    return _ssd_intra_chunk(x, dt, a_cum, Bm, Cm,
+                            interpret=resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _ssd_intra_chunk(x, dt, a_cum, Bm, Cm, interpret):
     G, Q, H, P = x.shape
     N = Bm.shape[-1]
     return pl.pallas_call(

@@ -164,6 +164,8 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
     t2 = time.time()
 
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):  # older jax: one dict per computation
+        ca = ca[0] if ca else {}
     ma = compiled.memory_analysis()
     result = {
         "arch": arch,

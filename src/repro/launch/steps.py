@@ -36,12 +36,20 @@ def make_torus_W(mesh) -> np.ndarray:
 
 def make_train_step(bundle: ModelBundle, mesh,
                     gossip: Literal["dense", "ring"] = "dense",
-                    algorithm: str = "pdsgd", lam_base: float = 0.1):
+                    algorithm: str = "pdsgd", lam_base: float = 0.1,
+                    use_pallas: bool = False):
     """Returns train_step(params, batch, key, step) -> (params, loss).
 
     lam_bar follows the paper's 1/k schedule from `lam_base`; the random
     per-element stepsizes Lambda and mixing coefficients B are drawn inside
     the step from fold_in-derived per-agent keys.
+
+    ``use_pallas`` defaults to False HERE (unlike `core.pdsgd`): the fused
+    `fused_pdsgd_tree` concatenates the whole model into (m, D) buffers,
+    which is the right layout for the single-host hot loop but would defeat
+    the per-leaf GSPMD sharding (and allocate whole-model temporaries) on
+    the multi-billion-param bundles this launch path shards over the mesh.
+    Opt in only for bundles that fit replicated per agent.
     """
     m = num_agents(mesh)
     axes = agent_axes(mesh)
@@ -50,6 +58,19 @@ def make_train_step(bundle: ModelBundle, mesh,
     support = jnp.asarray(W_np > 0, jnp.float32)
     n_data = mesh.shape.get("data", 1)
     n_pod = mesh.shape.get("pod", 1)
+
+    ring_specs = None
+    if gossip == "ring":
+        # Resolve each param leaf's full PartitionSpec (agent axes first,
+        # model-parallel trailing dims preserved) so the ring exchange never
+        # gathers the non-agent dims.
+        from ..dist.sharding import TRAIN_RULES, logical_spec
+        from .specs import with_agent_axis
+        p_abs, p_log = with_agent_axis(bundle.abstract(),
+                                       bundle.logical_axes(), m)
+        ring_specs = jax.tree.map(
+            lambda a, log: logical_spec(mesh, a.shape, log, TRAIN_RULES),
+            p_abs, p_log)
 
     grad_fn = jax.vmap(jax.value_and_grad(bundle.loss_fn))
 
@@ -61,7 +82,7 @@ def make_train_step(bundle: ModelBundle, mesh,
             if gossip == "dense":
                 new_params = pdsgd.pdsgd_update(
                     params, grads, key=key, step=step, W=W, support=support,
-                    lam_bar=lam_bar)
+                    lam_bar=lam_bar, use_pallas=use_pallas)
             else:
                 u = pdsgd._per_agent_obfuscated(
                     jax.random.fold_in(key, 1), step, grads, lam_bar)
@@ -69,7 +90,8 @@ def make_train_step(bundle: ModelBundle, mesh,
                     agent_key(jax.random.fold_in(key, 2), step, 0),
                     m, n_data, n_pod)
                 new_params = collectives.torus_gossip_pdsgd(
-                    mesh, params, u, b, agent_axes=axes)
+                    mesh, params, u, b, agent_axes=axes,
+                    leaf_specs=ring_specs)
         elif algorithm == "dsgd":
             new_params = pdsgd.dsgd_update(params, grads, W=W, lam=lam_bar)
         else:

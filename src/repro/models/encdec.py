@@ -126,8 +126,26 @@ def _dec_layer(pl, x, enc_out, cfg, window):
     return x
 
 
+def _sinusoidal_positions(S: int, d: int, dtype) -> jax.Array:
+    """Fixed sinusoidal table (S, d).  The conv frontend this stub replaces
+    carries positional structure; raw frame embeddings have none, and a
+    position-free encoder input can even be feature-constant (e.g. silence),
+    which zeroes every layernorm variance and blows up its gradients."""
+    import math as _math
+    half = d // 2
+    pos = jnp.arange(S, dtype=jnp.float32)[:, None]
+    freq = jnp.exp(-jnp.arange(half, dtype=jnp.float32)
+                   * (_math.log(10000.0) / max(half - 1, 1)))
+    ang = pos * freq[None, :]
+    emb = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+    if emb.shape[-1] < d:
+        emb = jnp.pad(emb, ((0, 0), (0, d - emb.shape[-1])))
+    return emb.astype(dtype)
+
+
 def encode(params, frames, cfg):
-    x = frames
+    B, S, d = frames.shape
+    x = frames + _sinusoidal_positions(S, d, frames.dtype)[None]
     for i in range(cfg.num_encoder_layers):
         pl = tfm.layer_slice(params["encoder"], i)
         x = jax.checkpoint(lambda p, x: _enc_layer(p, x, cfg))(pl, x)

@@ -1,0 +1,162 @@
+"""Parity tests for the device-resident PDSGD fast path:
+
+* fused-kernel `pdsgd_update` == eager reference (same realized Lambda/B
+  draws — the fused path consumes the identical counter bits),
+* `make_scanned_steps` == the eager python step loop over the same keys,
+* `torus_gossip_pdsgd`'s dense single-host fallback == `gossip_mix` with
+  the equivalent explicit (W, B) matrices, and W == the Metropolis torus
+  matrix the dense path builds from `topology`,
+* device-evaluated schedules == their host (numpy) values.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (init_state, make_decentralized_step,
+                        make_scanned_steps, make_topology, gossip_mix)
+from repro.core.pdsgd import pdsgd_update
+from repro.core import schedules as S
+from repro.core.topology import metropolis_weights, torus2d
+from repro.dist import collectives as C
+
+N_STEPS = 12
+
+
+def _quadratic_setup(m=5, d=3):
+    top = make_topology("paper_fig1", m)
+    rng = np.random.default_rng(0)
+    targets = jnp.asarray(rng.normal(size=(m, d)).astype(np.float32))
+
+    def loss(p, batch):
+        return jnp.sum((p - batch) ** 2)
+
+    batch = targets  # leading (m, ...) agent axis
+    return top, loss, batch, d
+
+
+def test_fused_pdsgd_update_matches_eager_over_steps():
+    """use_pallas routes through obfuscate+gossip Pallas kernels; both paths
+    must realize the same trajectory (same Lambda^k, B^k draws)."""
+    top, loss, batch, d = _quadratic_setup()
+    sched = S.paper_experiment(0.1)
+    step_e = make_decentralized_step(loss, top, sched, use_pallas=False)
+    step_f = make_decentralized_step(loss, top, sched, use_pallas=True)
+    se = init_state(jnp.zeros((d,)), top.num_agents)
+    sf = init_state(jnp.zeros((d,)), top.num_agents)
+    keys = jax.random.split(jax.random.key(3), N_STEPS)
+    for i in range(N_STEPS):
+        se, aux_e = step_e(se, batch, keys[i])
+        sf, aux_f = step_f(sf, batch, keys[i])
+        np.testing.assert_allclose(
+            np.asarray(jax.tree.leaves(sf.params)[0]),
+            np.asarray(jax.tree.leaves(se.params)[0]),
+            rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(float(aux_f["loss"]), float(aux_e["loss"]),
+                               rtol=1e-5)
+
+
+def test_fused_update_single_call_bitwise():
+    """One update with a multi-leaf pytree: the fused kernel path consumes
+    the same counter bits as `jax.random.uniform`, so u is bit-identical."""
+    m = 6
+    top = make_topology("ring", m)
+    W = jnp.asarray(top.weights, jnp.float32)
+    sup = jnp.asarray(top.adjacency, jnp.float32)
+    params = {"w": jax.random.normal(jax.random.key(0), (m, 4, 5)),
+              "b": jax.random.normal(jax.random.key(1), (m, 9))}
+    grads = {"w": jax.random.normal(jax.random.key(2), (m, 4, 5)),
+             "b": jax.random.normal(jax.random.key(3), (m, 9))}
+    kw = dict(key=jax.random.key(7), step=jnp.asarray(11), W=W, support=sup,
+              lam_bar=jnp.float32(0.07))
+    eager = pdsgd_update(params, grads, use_pallas=False, **kw)
+    fused = pdsgd_update(params, grads, use_pallas=True, **kw)
+    for name in params:
+        np.testing.assert_allclose(np.asarray(fused[name]),
+                                   np.asarray(eager[name]),
+                                   rtol=1e-7, atol=1e-7)
+
+
+def test_scanned_steps_match_eager_loop():
+    top, loss, batch, d = _quadratic_setup()
+    step = make_decentralized_step(loss, top, S.harmonic(0.2))
+    keys = jax.random.split(jax.random.key(5), N_STEPS)
+
+    s_eager = init_state(jnp.zeros((d,)), top.num_agents)
+    losses = []
+    for i in range(N_STEPS):
+        s_eager, aux = step(s_eager, batch, keys[i])
+        losses.append(float(aux["loss"]))
+
+    scanned = make_scanned_steps(step, N_STEPS)
+    batches = jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (N_STEPS,) + x.shape), batch)
+    s_scan, aux_stack = scanned(init_state(jnp.zeros((d,)), top.num_agents),
+                                batches, keys)
+    assert int(s_scan.step) == N_STEPS
+    np.testing.assert_allclose(
+        np.asarray(jax.tree.leaves(s_scan.params)[0]),
+        np.asarray(jax.tree.leaves(s_eager.params)[0]),
+        rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(aux_stack["loss"]),
+                               np.asarray(losses), rtol=1e-5, atol=1e-6)
+
+
+def test_scanned_rejects_host_schedule():
+    """A schedule that cannot trace falls back to the per-step host sync
+    path, which cannot live inside lax.scan."""
+    top, loss, batch, d = _quadratic_setup()
+    host_only = S.Schedule("host_only", lambda k, a: 0.1 / (int(k) + 1.0))
+    step = make_decentralized_step(loss, top, host_only,
+                                   force_host_schedule=False)
+    assert step.inner is None
+    state, _ = step(init_state(jnp.zeros((d,)), top.num_agents), batch,
+                    jax.random.key(0))  # host path still works per-step
+    assert int(state.step) == 1
+    with pytest.raises(ValueError):
+        make_scanned_steps(step, 4)
+
+
+@pytest.mark.parametrize("n_pod,n_data", [(1, 8), (2, 4), (1, 2), (2, 2)])
+def test_torus_dense_fallback_matches_gossip_mix(n_pod, n_data):
+    m = n_pod * n_data
+    rng = np.random.default_rng(4)
+    params = {"w": jnp.asarray(rng.normal(size=(m, 6, 2)).astype(np.float32))}
+    u = {"w": jnp.asarray(rng.normal(size=(m, 6, 2)).astype(np.float32))}
+    b = C.sample_b_draws(jax.random.key(0), m, n_data, n_pod)
+    out = C.torus_gossip_pdsgd(None, params, u, b,
+                               n_data=n_data, n_pod=n_pod)
+    W, B = C.dense_coupling(b, n_data, n_pod)
+    ref = jax.tree.map(lambda a, c: a - c, gossip_mix(W, params),
+                       gossip_mix(B, u))
+    np.testing.assert_allclose(np.asarray(out["w"]), np.asarray(ref["w"]),
+                               rtol=1e-6, atol=1e-6)
+    # W is exactly the Metropolis torus matrix the dense path would build.
+    W_ref = metropolis_weights(torus2d(n_pod, n_data))
+    np.testing.assert_allclose(np.asarray(W), W_ref, atol=1e-6)
+
+
+def test_sample_b_draws_column_stochastic():
+    m, n_data, n_pod = 8, 4, 2
+    b = C.sample_b_draws(jax.random.key(9), m, n_data, n_pod)
+    np.testing.assert_allclose(np.asarray(b.sum(axis=1)), np.ones(m),
+                               rtol=1e-6)
+    _, B = C.dense_coupling(b, n_data, n_pod)
+    Bn = np.asarray(B)
+    np.testing.assert_allclose(Bn.sum(axis=0), np.ones(m), rtol=1e-6)
+    # support respects the torus adjacency
+    adj = torus2d(n_pod, n_data)
+    assert np.all((Bn > 0) <= adj)
+
+
+@pytest.mark.parametrize("sched", [
+    S.harmonic(0.5), S.paper_experiment(1.0), S.polynomial(1.0, 0.75),
+    S.warmup_harmonic(0.5, hold=50),
+    S.deviating(S.harmonic(1.0), num_agents=3, num_deviations=5),
+])
+def test_device_schedule_matches_host(sched):
+    ks = np.asarray([0.0, 1.0, 7.0, 49.0, 50.0, 51.0, 1000.0])
+    host = np.asarray(sched(ks, 0), dtype=np.float64)
+    dev = np.asarray(jax.jit(lambda k: sched(k, 0))(
+        jnp.asarray(ks, jnp.float32)))
+    np.testing.assert_allclose(dev, host, rtol=1e-5)

@@ -2,7 +2,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import (consensus_error, dsgd_update, gossip_mix, init_state,
                         make_decentralized_step, pdsgd_update,

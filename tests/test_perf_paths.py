@@ -9,7 +9,7 @@ import textwrap
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 import jax
 import jax.numpy as jnp
