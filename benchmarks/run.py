@@ -10,6 +10,10 @@ Prints ``name,us_per_call,derived`` CSV rows:
   * bench_step_path  : PDSGD hot-loop paths (eager-host vs device-resident
                        vs lax.scan) — also writes BENCH_pdsgd.json at the
                        repo root so later PRs can regress against it
+                       (scripts/bench_gate.py enforces the regression gate)
+  * bench_pipeline   : scanned-loop data pipeline — staged per-step loops
+                       vs the chunked prefetched scan on an LM config
+                       (merged into BENCH_pdsgd.json)
 
 ``--only NAME`` runs a single benchmark (substring match).
 """
@@ -30,6 +34,19 @@ import numpy as np
 REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 
 ROWS = []
+
+
+def _write_bench_json(update: dict):
+    """Merge ``update`` into BENCH_pdsgd.json (so bench_step_path and
+    bench_pipeline each own their keys without clobbering the other)."""
+    path = os.path.join(REPO_ROOT, "BENCH_pdsgd.json")
+    payload = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            payload = json.load(f)
+    payload.update(update)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
 
 
 def emit(name: str, us_per_call: float, derived: str):
@@ -341,14 +358,144 @@ def bench_step_path(iters=600, unroll_k=100):
         "final_err_scanned": err,
         "backend": jax.default_backend(),
     }
-    with open(os.path.join(REPO_ROOT, "BENCH_pdsgd.json"), "w") as f:
-        json.dump(payload, f, indent=2)
+    _write_bench_json(payload)
     for name, us in results.items():
         emit(f"bench_step_path_{name}", us,
              f"steps_per_s={1e6 / us:.1f}")
     emit("bench_step_path_speedup", 0.0,
          f"scanned_vs_eager={payload['speedup_scanned_vs_eager']}x;"
          f"fused_vs_eager={payload['speedup_fused_vs_eager']}x")
+
+
+def bench_pipeline(steps=384, unroll_k=96):
+    """Tentpole bench: the scanned-loop data pipeline (chunked super-batches
+    + background-thread prefetcher) vs the staged per-step loop, training an
+    LM end-to-end.
+
+    Like bench_step_path, this measures the dispatch/pipeline-bound regime —
+    a further-reduced 1-layer LM config ("lm-pipeline-smoke") — because the
+    pipeline's benefit is per-step HOST cost (staging, dispatch, schedule
+    sync, batch synthesis) and on this CPU container a full smoke model's
+    fwd/bwd drowns those in model flops.  All four rows run the same PDSGD
+    math over the same `batch_at`/fold_in streams:
+
+      * staged_eager_host  : seed behavior — one host batch staged per step,
+                             schedule evaluated on host (device->host sync
+                             every iteration)
+      * staged_eager       : PR1 driver — device-resident schedule, still
+                             one staged batch + one dispatch per step
+      * staged_scanned     : lax.scan hot loop, but chunks synthesized
+                             synchronously between scan dispatches
+      * prefetched_scanned : full pipeline — `data.prefetch.Prefetcher`
+                             double-buffers device-placed chunks under the
+                             in-flight scan
+
+    Results merge into BENCH_pdsgd.json under "bench_pipeline".
+    """
+    import dataclasses
+
+    from repro.configs import get_config
+    from repro.core import (init_state, make_decentralized_step,
+                            make_scanned_steps, make_topology)
+    from repro.core.schedules import warmup_harmonic
+    from repro.data import make_lm_pipeline, make_placer, prefetch_chunks
+    from repro.launch.steps import per_step_keys
+    from repro.models import build_model
+
+    cfg = dataclasses.replace(
+        get_config("stablelm-3b-smoke"), name="lm-pipeline-smoke",
+        num_layers=1, d_model=32, num_heads=2, num_kv_heads=2, head_dim=16,
+        d_ff=64, vocab_size=128)
+    m, pab, seq = 4, 1, 16
+    assert steps % unroll_k == 0
+    pl = make_lm_pipeline(cfg.vocab_size, m, pab, seq, seed=0)
+    bundle = build_model(cfg)
+    top = make_topology("ring", m)
+    sched = warmup_harmonic(0.4, hold=200)
+    params0 = bundle.init(jax.random.key(0))
+    base_key = jax.random.key(1)
+    stage = make_placer(None)  # same placement both paths: apples-to-apples
+
+    step_host = make_decentralized_step(bundle.loss_fn, top, sched,
+                                        force_host_schedule=True)
+    step_dev = make_decentralized_step(bundle.loss_fn, top, sched)
+    scanned = make_scanned_steps(step_dev, unroll_k)
+
+    def eager_loop(step):
+        state = init_state(params0, m)
+        state, aux = step(state, stage(pl.batch_at(0)), base_key)  # compile
+        state = init_state(params0, m)
+        t0 = time.perf_counter()
+        for k in range(steps):
+            sk = jax.random.fold_in(base_key, k)
+            state, aux = step(state, stage(pl.batch_at(k)), sk)
+            if k % 10 == 0:  # seed driver's logging cadence
+                float(aux["loss"])
+        jax.block_until_ready(jax.tree.leaves(state.params)[0])
+        return (time.perf_counter() - t0) / steps * 1e6, float(aux["loss"])
+
+    def scanned_loop(prefetched):
+        state = init_state(params0, m)
+        state, aux = scanned(state, stage(pl.chunk_at(0, unroll_k)),
+                             per_step_keys(base_key, 0, unroll_k))  # compile
+        state = init_state(params0, m)
+        n_chunks = steps // unroll_k
+        t0 = time.perf_counter()
+        if prefetched:
+            with prefetch_chunks(pl, unroll_k, num_chunks=n_chunks,
+                                 place=stage) as chunks:
+                for c, chunk in enumerate(chunks):
+                    state, aux = scanned(
+                        state, chunk,
+                        per_step_keys(base_key, c * unroll_k, unroll_k))
+                    float(aux["loss"].mean())  # per-chunk log reduction
+        else:
+            for c in range(n_chunks):
+                chunk = stage(pl.chunk_at(c * unroll_k, unroll_k))
+                state, aux = scanned(
+                    state, chunk,
+                    per_step_keys(base_key, c * unroll_k, unroll_k))
+                float(aux["loss"].mean())
+        jax.block_until_ready(jax.tree.leaves(state.params)[0])
+        return ((time.perf_counter() - t0) / steps * 1e6,
+                float(aux["loss"].mean()))
+
+    def best_of(fn, *args, n=5):
+        # identical deterministic work per repeat; min discards load spikes
+        runs = [fn(*args) for _ in range(n)]
+        return min(runs, key=lambda r: r[0])
+
+    results, losses = {}, {}
+    results["staged_eager_host"], losses["staged_eager_host"] = \
+        best_of(eager_loop, step_host)
+    results["staged_eager"], losses["staged_eager"] = \
+        best_of(eager_loop, step_dev)
+    results["staged_scanned"], losses["staged_scanned"] = \
+        best_of(scanned_loop, False)
+    results["prefetched_scanned"], losses["prefetched_scanned"] = \
+        best_of(scanned_loop, True)
+
+    payload = {
+        "workload": (f"lm-pipeline-smoke 1L d32 v128 m={m} "
+                     f"per_agent_batch={pab} seq={seq} steps={steps}"),
+        "unroll_k": unroll_k,
+        "paths": {
+            name: {"us_per_step": round(us, 2),
+                   "steps_per_s": round(1e6 / us, 1)}
+            for name, us in results.items()
+        },
+        "speedup_prefetched_vs_staged": round(
+            results["staged_eager_host"] / results["prefetched_scanned"], 2),
+        "speedup_prefetched_vs_staged_scanned": round(
+            results["staged_scanned"] / results["prefetched_scanned"], 2),
+        "final_loss_prefetched": losses["prefetched_scanned"],
+        "backend": jax.default_backend(),
+    }
+    _write_bench_json({"bench_pipeline": payload})
+    for name, us in results.items():
+        emit(f"bench_pipeline_{name}", us, f"steps_per_s={1e6 / us:.1f}")
+    emit("bench_pipeline_speedup", 0.0,
+         f"prefetched_vs_staged={payload['speedup_prefetched_vs_staged']}x")
 
 
 def kernel_benches():
@@ -393,6 +540,7 @@ BENCHES = {
     "remark7_lambda_ablation": remark7_lambda_ablation,
     "comm_cost": comm_cost,
     "bench_step_path": bench_step_path,
+    "bench_pipeline": bench_pipeline,
     "kernel_benches": kernel_benches,
     "fig3_nonconvex": fig3_nonconvex,
 }

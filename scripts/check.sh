@@ -1,8 +1,10 @@
 #!/usr/bin/env bash
-# Tier-1 gate + hot-loop perf trajectory.  Run from the repo root:
+# Tier-1 gate + hot-loop perf trajectory + benchmark regression gate.
+# Run from the repo root:
 #   bash scripts/check.sh
-# Emits BENCH_pdsgd.json (eager vs fused vs scanned PDSGD step timings) so
-# every change ships with fresh perf numbers to regress against.
+# Emits BENCH_pdsgd.json (step-path + pipeline timings) and compares it
+# against the previously committed run; a >30% us_per_step regression in
+# any path fails the script (escape hatch: BENCH_ALLOW_REGRESS=1).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -11,8 +13,21 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 echo "== tier-1 tests =="
 python -m pytest -x -q
 
+prev_bench="$(mktemp)"
+trap 'rm -f "$prev_bench"' EXIT
+if ! git show HEAD:BENCH_pdsgd.json > "$prev_bench" 2>/dev/null; then
+  # no committed baseline (fresh clone pre-first-bench); gate self-skips
+  rm -f "$prev_bench"
+fi
+
 echo "== hot-loop perf (bench_step_path) =="
 python benchmarks/run.py --only bench_step_path
+
+echo "== data pipeline perf (bench_pipeline) =="
+python benchmarks/run.py --only bench_pipeline
+
+echo "== benchmark regression gate =="
+python scripts/bench_gate.py "$prev_bench" BENCH_pdsgd.json
 
 echo "== BENCH_pdsgd.json =="
 cat BENCH_pdsgd.json

@@ -41,8 +41,16 @@ def save_checkpoint(directory: str, step: int, tree: Any) -> str:
     return out
 
 
-def load_checkpoint(directory: str, step: int, like: Any) -> Any:
-    """Restore into the structure of `like` (validates paths/shapes)."""
+def load_checkpoint(directory: str, step: int, like: Any, *,
+                    allow_cast: bool = False) -> Any:
+    """Restore into the structure of `like` (validates paths/shapes/dtypes).
+
+    Dtypes are validated like paths and shapes: a checkpoint saved in one
+    precision does not silently round-trip into another — a float32 state
+    restored through a bfloat16 template would perturb the trajectory a
+    resume is supposed to reproduce bit-for-bit.  Pass ``allow_cast=True``
+    for a deliberate precision change.
+    """
     src = os.path.join(directory, f"step_{step:08d}")
     with open(os.path.join(src, "tree.json")) as f:
         meta = json.load(f)
@@ -61,7 +69,16 @@ def load_checkpoint(directory: str, step: int, like: Any) -> Any:
         if list(arr.shape) != list(np.shape(leaf)):
             raise ValueError(f"leaf {i} shape mismatch: {arr.shape} vs "
                              f"{np.shape(leaf)}")
-        leaves.append(arr.astype(np.asarray(leaf).dtype))
+        want = getattr(leaf, "dtype", None)
+        if want is None:
+            want = np.asarray(leaf).dtype
+        saved = meta["dtypes"][i]
+        if str(saved) != str(want) and not allow_cast:
+            raise ValueError(
+                f"leaf {i} ({meta['paths'][i]}) dtype mismatch: checkpoint "
+                f"has {saved}, target wants {want}; pass allow_cast=True "
+                "for a deliberate cast")
+        leaves.append(arr.astype(want))
     return jax.tree_util.tree_unflatten(jax.tree_util.tree_structure(like), leaves)
 
 

@@ -8,6 +8,7 @@ from .pdsgd import (
     make_scanned_steps,
     pdsgd_update,
     dsgd_update,
+    dsgt_update,
     dp_dsgd_update,
     gossip_mix,
     consensus_error,
@@ -28,7 +29,8 @@ __all__ = [
     "sample_B", "sample_lambda_tree", "obfuscated_gradient", "agent_key",
     "DecentralizedState", "make_decentralized_step", "make_scanned_steps",
     "pdsgd_update",
-    "dsgd_update", "dp_dsgd_update", "gossip_mix", "consensus_error",
+    "dsgd_update", "dsgt_update", "dp_dsgd_update", "gossip_mix",
+    "consensus_error",
     "init_state", "replicate_params",
     "theta_closed", "theta_numeric", "mse_lower_bound",
     "conditional_entropy_closed",

@@ -3,6 +3,8 @@ plus the two comparison baselines it is evaluated against:
 
   * ``pdsgd``        : x^{k+1} = W x^k - B^k (Lambda^k ∘ g^k)       (ours/paper)
   * ``dsgd``         : x^{k+1} = W x^k - lam^k g^k                  (Lian et al. [19])
+  * ``dsgt``         : gradient tracking, x and tracker y both gossiped
+                       ([49],[50]; 2x PDSGD's message volume)
   * ``dp_dsgd``      : dsgd with N(0, sigma_DP^2) noise added to g  (Table I baseline)
 
 All steps are pure functions over pytrees whose leaves carry a leading agent
@@ -39,16 +41,24 @@ __all__ = [
 ]
 
 Pytree = Any
-Algorithm = Literal["pdsgd", "dsgd", "dp_dsgd"]
+Algorithm = Literal["pdsgd", "dsgd", "dsgt", "dp_dsgd"]
 
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
 class DecentralizedState:
-    """Training state: per-agent parameters and the iteration counter."""
+    """Training state: per-agent parameters and the iteration counter.
+
+    ``tracker`` is algorithm-owned extra state carried through the step
+    closure's state tuple: ``None`` for pdsgd/dsgd/dp_dsgd, and the pair
+    ``(y, prev_grads)`` for dsgt (build with ``init_state(...,
+    algorithm="dsgt")``).  Because it rides inside the state pytree it
+    checkpoints, donates, and scans exactly like params.
+    """
 
     params: Pytree  # leaves (m, ...)
     step: jax.Array  # scalar int32
+    tracker: Pytree = None  # algorithm extra state (dsgt: (y, prev_grads))
 
     @property
     def num_agents(self) -> int:
@@ -177,6 +187,10 @@ def dsgt_update(
     DSGT must share BOTH x and the tracker y every iteration — 2× the
     message volume of PDSGD, which shares only the single mixed variable
     v_ij (see the Sec. I discussion and `benchmarks.run::comm_cost`).
+    `make_decentralized_step(algorithm="dsgt")` runs this recursion inline
+    with the tracker pair (y^{k-1}, g^{k-1}) carried in
+    ``DecentralizedState.tracker`` (a phase-shifted but equivalent
+    formulation — see the note in its dsgt branch).
     """
     new_params = jax.tree.map(
         lambda x, y: x - lam * y.astype(x.dtype),
@@ -237,6 +251,8 @@ def make_decentralized_step(
     `pdsgd_update`); ``track_mean`` adds the agent-mean parameters to aux
     (what rate tests integrate — cheap for small models, off by default).
     """
+    if algorithm not in ("pdsgd", "dsgd", "dsgt", "dp_dsgd"):
+        raise ValueError(f"unknown algorithm {algorithm!r}")
     W = jnp.asarray(topology.weights, dtype=jnp.float32)
     support = jnp.asarray(topology.adjacency, dtype=jnp.float32)
 
@@ -244,6 +260,7 @@ def make_decentralized_step(
 
     def apply_update(state, batch, key, lam_bar):
         losses, grads = grad_fn(state.params, batch)
+        new_tracker = state.tracker
         if algorithm == "pdsgd":
             new_params = pdsgd_update(
                 state.params, grads, key=key, step=state.step, W=W,
@@ -251,6 +268,26 @@ def make_decentralized_step(
                 interpret=interpret)
         elif algorithm == "dsgd":
             new_params = dsgd_update(state.params, grads, W=W, lam=lam_bar)
+        elif algorithm == "dsgt":
+            if state.tracker is None:
+                raise ValueError(
+                    "algorithm='dsgt' carries (y, prev_grads) in "
+                    "state.tracker; build the state with "
+                    "init_state(params, m, algorithm='dsgt')")
+            # y^k = W y^{k-1} + g^k - g^{k-1}  (y^{-1} = g^{-1} = 0, so the
+            # first tracker is exactly g^0); x^{k+1} = W x^k - lam y^k.
+            # NOTE the tracker convention is phase-shifted vs `dsgt_update`:
+            # state.tracker holds (y^{k-1}, g^{k-1}) and params advance with
+            # the FRESH y^k, whereas dsgt_update takes y^k and advances
+            # params with it before producing y^{k+1}.  Don't swap one for
+            # the other without re-deriving the phase.
+            y_prev, g_prev = state.tracker
+            y = jax.tree.map(lambda t, g, gp: t + g - gp,
+                             gossip_mix(W, y_prev), grads, g_prev)
+            new_params = jax.tree.map(
+                lambda a, t: a - lam_bar * t.astype(a.dtype),
+                gossip_mix(W, state.params), y)
+            new_tracker = (y, grads)
         elif algorithm == "dp_dsgd":
             new_params = dp_dsgd_update(
                 state.params, grads, key=jax.random.fold_in(key, 3), W=W,
@@ -264,7 +301,8 @@ def make_decentralized_step(
         if track_mean:
             aux["params_mean"] = jax.tree.map(lambda p: p.mean(axis=0),
                                               new_params)
-        return DecentralizedState(params=new_params, step=state.step + 1), aux
+        return DecentralizedState(params=new_params, step=state.step + 1,
+                                  tracker=new_tracker), aux
 
     def step_fn(state: DecentralizedState, batch, key: jax.Array):
         lam_bar = jnp.asarray(
@@ -341,6 +379,17 @@ def make_scanned_steps(step_fn, unroll_k: int, donate: bool = True):
     return scanned
 
 
-def init_state(params: Pytree, m: int) -> DecentralizedState:
-    return DecentralizedState(params=replicate_params(params, m),
-                              step=jnp.asarray(0, dtype=jnp.int32))
+def init_state(params: Pytree, m: int,
+               algorithm: Algorithm = "pdsgd") -> DecentralizedState:
+    """Replicate params to m agents; ``algorithm`` sizes the extra state
+    (dsgt needs a zero tracker pair, everything else carries None)."""
+    replicated = replicate_params(params, m)
+    tracker = None
+    if algorithm == "dsgt":
+        # Two independent zero trees: aliasing one buffer into both slots
+        # would make the jitted step donate the same buffer twice.
+        tracker = (jax.tree.map(jnp.zeros_like, replicated),
+                   jax.tree.map(jnp.zeros_like, replicated))
+    return DecentralizedState(params=replicated,
+                              step=jnp.asarray(0, dtype=jnp.int32),
+                              tracker=tracker)

@@ -4,13 +4,24 @@ from .synthetic import (
     estimation_problem,
     noniid_partition,
 )
-from .pipeline import DataPipeline, make_lm_pipeline
+from .pipeline import (
+    BATCH_LOGICAL,
+    CHUNK_LOGICAL,
+    DataPipeline,
+    make_lm_pipeline,
+)
+from .prefetch import Prefetcher, make_placer, prefetch_chunks
 
 __all__ = [
     "SyntheticLMDataset",
     "synthetic_digits",
     "estimation_problem",
     "noniid_partition",
+    "BATCH_LOGICAL",
+    "CHUNK_LOGICAL",
     "DataPipeline",
     "make_lm_pipeline",
+    "Prefetcher",
+    "make_placer",
+    "prefetch_chunks",
 ]

@@ -4,6 +4,13 @@ Produces numpy batches shaped (agents, per_agent_batch, seq) for training or
 (batch, seq) for serving; the launcher places them onto the mesh with the
 matching NamedSharding.  Deterministic per (seed, step) so every host in a
 multi-controller deployment computes its own slice without coordination.
+
+The scanned loop (`core.make_scanned_steps`) consumes *chunks*: the same
+batches stacked along a leading (unroll_k,) axis.  `chunk_at`/`chunks` build
+them from `batch_at`, so the stream stays random-access — resuming at any
+step reproduces the exact chunk sequence of an uninterrupted run.  The
+background-thread double buffering that overlaps chunk synthesis with the
+in-flight scan dispatch lives in `data.prefetch`.
 """
 from __future__ import annotations
 
@@ -14,7 +21,13 @@ import numpy as np
 
 from .synthetic import SyntheticLMDataset
 
-__all__ = ["DataPipeline", "make_lm_pipeline"]
+__all__ = ["DataPipeline", "make_lm_pipeline", "BATCH_LOGICAL", "CHUNK_LOGICAL"]
+
+# Logical axis names of one LM batch leaf, resolvable against the rule
+# tables in `repro.dist.sharding` (the leading scan axis of a chunk is
+# always replicated — every agent walks the same unroll schedule).
+BATCH_LOGICAL = ("agents", "batch", "seq")
+CHUNK_LOGICAL = (None,) + BATCH_LOGICAL
 
 
 @dataclasses.dataclass
@@ -33,6 +46,26 @@ class DataPipeline:
         tokens = tokens.reshape(self.num_agents, self.per_agent_batch,
                                 self.seq_len + 1)
         return {"tokens": tokens[..., :-1], "labels": tokens[..., 1:]}
+
+    def chunk_at(self, start_step: int, unroll_k: int) -> dict:
+        """Super-batch for steps [start_step, start_step + unroll_k).
+
+        Leaves gain a leading (unroll_k,) axis and are exactly
+        ``np.stack([batch_at(start_step + i) for i in range(unroll_k)])``
+        leaf-for-leaf, so `make_scanned_steps` consuming chunks walks the
+        identical stream as the eager loop consuming `batch_at` — and a
+        resumed run re-chunks from any step boundary without drift.
+        """
+        batches = [self.batch_at(start_step + i) for i in range(unroll_k)]
+        return {k: np.stack([b[k] for b in batches]) for k in batches[0]}
+
+    def chunks(self, unroll_k: int, start_step: int = 0,
+               num_chunks: int | None = None) -> Iterator[dict]:
+        """Iterate chunk_at super-batches; finite when num_chunks is given."""
+        c = 0
+        while num_chunks is None or c < num_chunks:
+            yield self.chunk_at(start_step + c * unroll_k, unroll_k)
+            c += 1
 
     def __iter__(self) -> Iterator[dict]:
         step = 0

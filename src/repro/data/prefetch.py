@@ -1,0 +1,192 @@
+"""Background-thread double-buffered prefetch for the scanned train loop.
+
+The scanned hot loop alternates two host-side costs: synthesizing the next
+(unroll_k, ...) chunk in numpy and blocking on the in-flight scan's aux for
+logging/checkpointing.  `Prefetcher` moves the synthesis (and optionally the
+device placement) onto a daemon worker thread behind a bounded queue, so the
+next chunk is already resident when the current dispatch retires — the loop
+then runs at max(host, device) instead of host + device.
+
+Placement: `make_placer(mesh)` resolves each leaf's NamedSharding through
+`repro.dist.sharding.logical_spec` (TRAIN_RULES), so chunk leaves land
+pre-sharded over the agent torus instead of being replicated by the first
+jit invocation.  With ``mesh=None`` it degrades to `jnp.asarray` — the right
+thing on a single-device CPU container, and still overlaps H2D with compute
+because the transfer happens on the worker thread.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import weakref
+from typing import Any, Callable, Iterable, Iterator
+
+import jax
+
+from .pipeline import BATCH_LOGICAL, CHUNK_LOGICAL
+
+__all__ = ["Prefetcher", "make_placer", "prefetch_chunks"]
+
+# End-of-stream marker in the item slot (distinct from any source item, so
+# a source legitimately yielding None is passed through, not truncated).
+_END = object()
+
+
+def _bounded_put(stop: threading.Event, q: queue.Queue, payload):
+    # Bounded put that never deadlocks against close(): poll the stop
+    # event instead of blocking forever on a full queue.
+    while not stop.is_set():
+        try:
+            q.put(payload, timeout=0.05)
+            return
+        except queue.Full:
+            continue
+
+
+def _worker_loop(it: Iterator, place: Callable | None,
+                 stop: threading.Event, q: queue.Queue):
+    # Module-level (no Prefetcher reference): the thread must not keep the
+    # owning Prefetcher alive, or its GC finalizer could never run.
+    end = (_END, None)  # clean end-of-stream
+    try:
+        for item in it:
+            if stop.is_set():
+                return
+            _bounded_put(stop, q,
+                         (place(item) if place is not None else item, None))
+    except BaseException as e:  # re-raised by the consumer
+        end = (_END, e)
+    finally:
+        _bounded_put(stop, q, end)
+
+
+def _shutdown_worker(stop: threading.Event, q: queue.Queue,
+                     thread: threading.Thread, join_timeout: float):
+    """Signal stop, unblock a worker stuck on a full queue, and join.
+
+    Module-level (not a method) so `weakref.finalize` can call it without
+    keeping the Prefetcher alive.
+    """
+    stop.set()
+    while True:
+        try:
+            q.get_nowait()
+        except queue.Empty:
+            break
+    thread.join(timeout=join_timeout)
+
+
+def make_placer(mesh=None, rules=None) -> Callable[[Any], Any]:
+    """Build place(batch_or_chunk) -> device-resident pytree.
+
+    Leaves of rank ``len(BATCH_LOGICAL)`` are treated as per-step batches,
+    rank ``len(CHUNK_LOGICAL)`` as scanned chunks; anything else (and the
+    ``mesh=None`` case) falls back to plain `jnp.asarray`.
+    """
+    if mesh is None:
+        return lambda tree: jax.tree.map(jax.numpy.asarray, tree)
+
+    from jax.sharding import NamedSharding
+
+    from ..dist.sharding import TRAIN_RULES, logical_spec
+
+    rules = TRAIN_RULES if rules is None else rules
+
+    def place_leaf(x):
+        ndim = getattr(x, "ndim", None)  # scalars/flags fall back too
+        if ndim == len(CHUNK_LOGICAL):
+            logical = CHUNK_LOGICAL
+        elif ndim == len(BATCH_LOGICAL):
+            logical = BATCH_LOGICAL
+        else:
+            return jax.numpy.asarray(x)
+        spec = logical_spec(mesh, x.shape, logical, rules)
+        return jax.device_put(x, NamedSharding(mesh, spec))
+
+    return lambda tree: jax.tree.map(place_leaf, tree)
+
+
+class Prefetcher:
+    """Iterate ``source`` on a daemon thread, ``depth`` items ahead.
+
+    ``place`` (e.g. from `make_placer`) runs ON THE WORKER THREAD, so both
+    batch synthesis and the host->device transfer overlap the consumer's
+    device work.  Iteration ends when the source is exhausted; worker
+    exceptions re-raise in the consumer.  `close()` (also via context
+    manager / generator ``.close()`` protocol) stops the worker promptly
+    even when the queue is full and joins it — no leaked threads.
+    """
+
+    def __init__(self, source: Iterable, place: Callable | None = None,
+                 depth: int = 2):
+        if depth < 1:
+            raise ValueError(f"depth must be >= 1, got {depth}")
+        self._queue: queue.Queue = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self._exhausted = False
+        self._thread = threading.Thread(
+            target=_worker_loop,
+            args=(iter(source), place, self._stop, self._queue),
+            name="repro-data-prefetch", daemon=True)
+        self._thread.start()
+        # Abandoned-iterator safety net: an un-close()d, un-exhausted
+        # Prefetcher would leave the worker polling a full queue forever,
+        # pinning depth+1 buffered chunks.  GC of the Prefetcher stops it.
+        self._finalizer = weakref.finalize(
+            self, _shutdown_worker, self._stop, self._queue, self._thread,
+            0.2)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        if self._exhausted or self._stop.is_set():
+            raise StopIteration
+        item, err = self._queue.get()
+        if err is not None:
+            self._exhausted = True
+            raise err
+        if item is _END:
+            self._exhausted = True
+            raise StopIteration
+        return item
+
+    def close(self, join_timeout: float = 5.0):
+        """Stop the worker and join it; idempotent.
+
+        The stop event is polled between items, so a worker mid-synthesis
+        finishes its current item first; if that outlives ``join_timeout``
+        the leak is reported rather than silently ignored.
+        """
+        _shutdown_worker(self._stop, self._queue, self._thread, join_timeout)
+        if self._thread.is_alive():
+            import warnings
+            warnings.warn(
+                f"prefetch worker still synthesizing an item after "
+                f"{join_timeout}s; it will exit after the current item "
+                "(daemon thread, safe at interpreter shutdown)")
+        self._exhausted = True
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
+
+
+def prefetch_chunks(pipeline, unroll_k: int, start_step: int = 0,
+                    num_chunks: int | None = None, mesh=None,
+                    place: Callable | None = None,
+                    depth: int = 2) -> Prefetcher:
+    """Prefetching iterator of device-resident (unroll_k, ...) chunks.
+
+    ``place`` defaults to `make_placer(mesh)`.  Use as a context manager so
+    an early exit (exception, KeyboardInterrupt) still joins the worker.
+    """
+    if place is None:
+        place = make_placer(mesh)
+    return Prefetcher(
+        pipeline.chunks(unroll_k, start_step=start_step,
+                        num_chunks=num_chunks),
+        place=place, depth=depth)

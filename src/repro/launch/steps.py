@@ -25,6 +25,20 @@ from .mesh import agent_axes, num_agents
 Pytree = Any
 
 
+def per_step_keys(key: jax.Array, start_step: int, n: int) -> jax.Array:
+    """Per-step keys for global steps [start_step, start_step + n).
+
+    Derived by fold_in on the ABSOLUTE step index (not by splitting a
+    carried key), so the key stream is random-access: a resumed run replays
+    exactly the keys of the uninterrupted run and never re-issues a
+    (key, step) pair — key reuse across restarts is what the paper's
+    privacy argument forbids.  The eager loop's ``fold_in(key, k)`` and a
+    chunk of these vmapped keys are bit-identical.
+    """
+    steps = jnp.arange(start_step, start_step + n)
+    return jax.vmap(lambda i: jax.random.fold_in(key, i))(steps)
+
+
 def make_torus_W(mesh) -> np.ndarray:
     """Doubly-stochastic W on the mesh's agent torus (pod ring x data ring),
     with agent id = pod * n_data + data (matches GSPMD's device order)."""

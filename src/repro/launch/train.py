@@ -1,11 +1,26 @@
 """Decentralized PDSGD training driver.
 
-Runs the full stack end-to-end: config -> model -> data pipeline -> PDSGD
-step -> checkpoints.  On this CPU container use a smoke config; on a TPU
-slice pass a full arch + mesh flags.
+Runs the full stack end-to-end: config -> model -> streaming data pipeline
+-> PDSGD step -> checkpoints.  On this CPU container use a smoke config; on
+a TPU slice pass a full arch + mesh flags.
 
   PYTHONPATH=src python -m repro.launch.train --arch xlstm-125m-smoke \
       --agents 4 --steps 50 --per-agent-batch 2 --seq-len 64
+
+``--unroll-k K`` (K > 1) selects the scanned hot loop: `make_scanned_steps`
+fuses K iterations per dispatch and a background-thread prefetcher
+(`data.prefetch`) synthesizes the next (K, agents, batch, seq) chunk while
+the current scan is in flight.  ``--unroll-k 1`` keeps the eager
+one-dispatch-per-step loop; both walk bit-identical trajectories because
+batches come from the random-access `DataPipeline.batch_at` and per-step
+keys are fold_in-derived from the absolute step index.
+
+Checkpoints persist the FULL `DecentralizedState` — params, the step
+counter, and any algorithm tracker — so ``--resume`` continues schedules
+and, critically, never re-derives `privacy.agent_key(key, step, agent)` for
+an already-consumed step: replaying a (key, step) pair would re-issue the
+same Lambda^k draws against new gradients, exactly the key reuse the
+paper's information-theoretic privacy argument forbids.
 """
 from __future__ import annotations
 
@@ -14,24 +29,24 @@ import json
 import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
-from ..checkpoint import save_checkpoint
+from ..checkpoint import latest_step, load_checkpoint, save_checkpoint
 from ..configs import get_config
-from ..core import init_state, make_decentralized_step, make_topology
-from ..core.schedules import harmonic, warmup_harmonic
-from ..data import make_lm_pipeline
+from ..core import (init_state, make_decentralized_step, make_scanned_steps,
+                    make_topology)
+from ..core.schedules import warmup_harmonic
+from ..data import make_lm_pipeline, make_placer, prefetch_chunks
 from ..models import build_model
+from .steps import per_step_keys
 
 
-def main(argv=None):
+def build_parser() -> argparse.ArgumentParser:
     p = argparse.ArgumentParser()
     p.add_argument("--arch", default="xlstm-125m-smoke")
     p.add_argument("--agents", type=int, default=4)
     p.add_argument("--topology", default="ring")
     p.add_argument("--algorithm", default="pdsgd",
-                   choices=["pdsgd", "dsgd", "dp_dsgd"])
+                   choices=["pdsgd", "dsgd", "dsgt", "dp_dsgd"])
     p.add_argument("--steps", type=int, default=100)
     p.add_argument("--per-agent-batch", type=int, default=2)
     p.add_argument("--seq-len", type=int, default=64)
@@ -39,11 +54,25 @@ def main(argv=None):
     p.add_argument("--warmup-hold", type=int, default=200)
     p.add_argument("--sigma-dp", type=float, default=0.0)
     p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--unroll-k", type=int, default=1,
+                   help="iterations fused per lax.scan dispatch; 1 = eager")
+    p.add_argument("--prefetch-depth", type=int, default=2,
+                   help="chunks buffered ahead by the prefetch thread")
     p.add_argument("--checkpoint-dir", default=None)
     p.add_argument("--checkpoint-every", type=int, default=50)
+    p.add_argument("--resume", action="store_true",
+                   help="restore the latest full state (incl. step counter) "
+                        "from --checkpoint-dir and continue")
     p.add_argument("--log-every", type=int, default=10)
-    args = p.parse_args(argv)
+    return p
 
+
+def run_training(args, mesh=None) -> dict:
+    """Run the driver loop; returns {state, history, resumed_from}.
+
+    ``history`` is the list of emitted log records.  Factored out of `main`
+    so tests can drive resume round-trips in-process.
+    """
     cfg = get_config(args.arch)
     bundle = build_model(cfg)
     top = make_topology(args.topology, args.agents)
@@ -54,23 +83,103 @@ def main(argv=None):
     pipeline = make_lm_pipeline(cfg.vocab_size, args.agents,
                                 args.per_agent_batch, args.seq_len,
                                 seed=args.seed)
-    state = init_state(bundle.init(jax.random.key(args.seed)), args.agents)
+    state = init_state(bundle.init(jax.random.key(args.seed)), args.agents,
+                       algorithm=args.algorithm)
     key = jax.random.key(args.seed + 1)
+    place = make_placer(mesh)
 
+    if args.checkpoint_dir and args.checkpoint_every < 1:
+        raise ValueError("--checkpoint-every must be >= 1 (omit "
+                         "--checkpoint-dir to disable checkpoints)")
+
+    start = 0
+    if args.resume:
+        if not args.checkpoint_dir:
+            raise ValueError("--resume requires --checkpoint-dir")
+        last = latest_step(args.checkpoint_dir)
+        if last is None:
+            # Refuse rather than silently restart at step 0: if a previous
+            # run DID consume steps, re-deriving agent_key(key, step, agent)
+            # for them is exactly the key reuse the privacy argument
+            # forbids.  A fresh run should not pass --resume.
+            raise FileNotFoundError(
+                f"--resume: no checkpoint found under "
+                f"{args.checkpoint_dir!r}; drop --resume for a fresh run")
+        state = load_checkpoint(args.checkpoint_dir, last, like=state)
+        if int(state.step) != last:
+            # batches/keys would be driven by the directory index while the
+            # schedule and agent_key use state.step — refuse the divergence
+            raise ValueError(
+                f"checkpoint step_{last:08d} holds state.step="
+                f"{int(state.step)}; refusing to resume from a mislabeled "
+                "checkpoint")
+        start = last
+        print(json.dumps({"resumed_from": last,
+                          "state_step": int(state.step)}))
+
+    history: list[dict] = []
     t0 = time.time()
-    for k in range(args.steps):
-        key, sk = jax.random.split(key)
-        batch = jax.tree.map(jnp.asarray, pipeline.batch_at(k))
+
+    def log(k, loss, cons):
+        rec = {"step": int(k), "loss": float(loss),
+               "consensus_error": float(cons),
+               "elapsed_s": round(time.time() - t0, 1)}
+        history.append(rec)
+        print(json.dumps(rec))
+
+    def crosses(k_prev: int, k_next: int, every: int) -> bool:
+        return k_next // every > k_prev // every
+
+    def checkpoint_due(k_prev: int, k_next: int) -> bool:
+        # Fire whenever (k_prev, k_next] crosses a checkpoint_every
+        # boundary.  The scanned loop can only save at chunk boundaries,
+        # so with unroll_k > checkpoint_every intermediate saves collapse
+        # onto the chunk end (warned about below).
+        return bool(args.checkpoint_dir) and crosses(
+            k_prev, k_next, args.checkpoint_every)
+
+    k = start
+    if args.unroll_k > 1:
+        if args.checkpoint_dir and args.checkpoint_every % args.unroll_k:
+            print(json.dumps({
+                "warning": f"checkpoint_every={args.checkpoint_every} is "
+                           f"not a multiple of unroll_k={args.unroll_k}: "
+                           "checkpoints land on chunk boundaries only"}))
+        scanned = make_scanned_steps(step, args.unroll_k)
+        n_chunks = max(0, args.steps - start) // args.unroll_k
+        with prefetch_chunks(pipeline, args.unroll_k, start_step=start,
+                             num_chunks=n_chunks, place=place,
+                             depth=args.prefetch_depth) as chunks:
+            for chunk in chunks:
+                keys = per_step_keys(key, k, args.unroll_k)
+                state, aux = scanned(state, chunk, keys)
+                k_next = k + args.unroll_k
+                # aux is stacked per step; reduce per chunk for logging.
+                # Honor --log-every at chunk granularity — an unlogged
+                # chunk costs no device->host sync at all.
+                if crosses(k, k_next, args.log_every) or k_next >= args.steps:
+                    log(k_next - 1, aux["loss"].mean(),
+                        aux["consensus_error"][-1])
+                if checkpoint_due(k, k_next):
+                    save_checkpoint(args.checkpoint_dir, k_next, state)
+                k = k_next
+
+    # Eager loop: the whole run when --unroll-k 1, the tail otherwise.
+    for k in range(k, args.steps):
+        sk = jax.random.fold_in(key, k)
+        batch = place(pipeline.batch_at(k))
         state, aux = step(state, batch, sk)
         if k % args.log_every == 0 or k == args.steps - 1:
-            print(json.dumps({
-                "step": k,
-                "loss": round(float(aux["loss"]), 4),
-                "consensus_error": float(aux["consensus_error"]),
-                "elapsed_s": round(time.time() - t0, 1),
-            }))
-        if args.checkpoint_dir and (k + 1) % args.checkpoint_every == 0:
-            save_checkpoint(args.checkpoint_dir, k + 1, state.params)
+            log(k, aux["loss"], aux["consensus_error"])
+        if checkpoint_due(k, k + 1):
+            save_checkpoint(args.checkpoint_dir, k + 1, state)
+
+    return {"state": state, "history": history, "resumed_from": start or None}
+
+
+def main(argv=None):
+    args = build_parser().parse_args(argv)
+    run_training(args)
     return 0
 
 

@@ -1,0 +1,144 @@
+"""Checkpoint/resume correctness: a resumed run must replay the EXACT
+trajectory of the uninterrupted one — same batches (random-access
+`batch_at`), same per-step keys (fold_in on the absolute step), and a step
+counter that keeps counting so `privacy.agent_key(key, step, agent)` never
+re-issues Lambda draws for an already-consumed step."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import latest_step, load_checkpoint, save_checkpoint
+from repro.core import (init_state, make_decentralized_step, make_topology)
+from repro.core.schedules import harmonic
+from repro.launch.train import build_parser, run_training
+
+ARCH = "stablelm-3b-smoke"
+BASE = ["--arch", ARCH, "--agents", "4", "--steps", "8",
+        "--per-agent-batch", "1", "--seq-len", "16", "--log-every", "1"]
+
+
+def _run(extra):
+    return run_training(build_parser().parse_args(BASE + extra))
+
+
+def _params(result):
+    return [np.asarray(x) for x in jax.tree.leaves(result["state"].params)]
+
+
+@pytest.fixture(scope="module")
+def uninterrupted():
+    """One 8-step scanned run + one eager run, shared across tests."""
+    return {"scanned": _run(["--unroll-k", "4"]), "eager": _run([])}
+
+
+def test_eager_and_scanned_drivers_walk_identical_trajectory(uninterrupted):
+    for a, b in zip(_params(uninterrupted["eager"]),
+                    _params(uninterrupted["scanned"])):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_scanned_resume_bit_identical(tmp_path, uninterrupted):
+    d = str(tmp_path)
+    _run(["--unroll-k", "4", "--steps", "4", "--checkpoint-dir", d,
+          "--checkpoint-every", "4"])
+    assert latest_step(d) == 4
+    resumed = _run(["--unroll-k", "4", "--checkpoint-dir", d,
+                    "--checkpoint-every", "4", "--resume"])
+    assert resumed["resumed_from"] == 4
+    assert int(resumed["state"].step) == 8
+    for a, b in zip(_params(uninterrupted["scanned"]), _params(resumed)):
+        np.testing.assert_array_equal(a, b)
+    # the logged chunk reductions line up bit-for-bit too
+    full_tail = [h["loss"] for h in uninterrupted["scanned"]["history"][-1:]]
+    res_tail = [h["loss"] for h in resumed["history"][-1:]]
+    assert full_tail == res_tail
+
+
+def test_eager_resume_bit_identical(tmp_path, uninterrupted):
+    d = str(tmp_path)
+    _run(["--steps", "4", "--checkpoint-dir", d, "--checkpoint-every", "4"])
+    resumed = _run(["--checkpoint-dir", d, "--checkpoint-every", "4",
+                    "--resume"])
+    assert resumed["resumed_from"] == 4
+    for a, b in zip(_params(uninterrupted["eager"]), _params(resumed)):
+        np.testing.assert_array_equal(a, b)
+    full = {h["step"]: h["loss"] for h in uninterrupted["eager"]["history"]}
+    for h in resumed["history"]:
+        assert h["loss"] == full[h["step"]]
+
+
+def test_resume_without_checkpoint_refuses(tmp_path):
+    """--resume with an empty/mistyped checkpoint dir must NOT silently
+    restart at step 0 (that would replay (key, step) pairs)."""
+    with pytest.raises(FileNotFoundError, match="no checkpoint"):
+        _run(["--checkpoint-dir", str(tmp_path), "--resume"])
+
+
+def test_checkpoint_persists_full_state_with_step(tmp_path):
+    """The checkpoint carries the WHOLE DecentralizedState — a restore
+    without --resume-style re-derivation gets the step counter back."""
+    state = init_state({"w": jnp.ones((3, 2))}, 4)
+    state.step = jnp.asarray(17, jnp.int32)
+    save_checkpoint(str(tmp_path), 17, state)
+    like = init_state({"w": jnp.zeros((3, 2))}, 4)
+    restored = load_checkpoint(str(tmp_path), 17, like)
+    assert int(restored.step) == 17
+    np.testing.assert_array_equal(np.asarray(restored.params["w"]),
+                                  np.ones((4, 3, 2), np.float32))
+
+
+def test_load_checkpoint_rejects_dtype_mismatch(tmp_path):
+    save_checkpoint(str(tmp_path), 1, {"w": jnp.zeros((2, 2), jnp.float32)})
+    with pytest.raises(ValueError, match="dtype mismatch"):
+        load_checkpoint(str(tmp_path), 1,
+                        {"w": jnp.zeros((2, 2), jnp.float16)})
+    out = load_checkpoint(str(tmp_path), 1,
+                          {"w": jnp.zeros((2, 2), jnp.float16)},
+                          allow_cast=True)
+    assert out["w"].dtype == np.float16
+
+
+def test_dsgt_algorithm_reachable_and_converges():
+    """`--algorithm dsgt` is a real choice now: the tracker pair rides in
+    the state tuple, and the recursion tracks the global optimum on the
+    paper's quadratic."""
+    algo_action = next(a for a in build_parser()._actions
+                       if a.dest == "algorithm")
+    assert "dsgt" in algo_action.choices
+    m, d = 5, 2
+    top = make_topology("paper_fig1", m)
+    rng = np.random.default_rng(0)
+    targets = jnp.asarray(rng.normal(size=(m, d)).astype(np.float32))
+
+    def loss(p, batch):
+        return jnp.mean(jnp.sum((p - batch) ** 2, -1))
+
+    step = make_decentralized_step(loss, top, harmonic(0.3),
+                                   algorithm="dsgt")
+    state = init_state(jnp.zeros((d,)), m, algorithm="dsgt")
+    assert state.tracker is not None
+    for k in range(400):
+        state, aux = step(state, targets, jax.random.key(k))
+    xbar = np.asarray(jax.tree.leaves(state.params)[0]).mean(0)
+    np.testing.assert_allclose(xbar, np.asarray(targets).mean(0), atol=0.05)
+    assert float(aux["consensus_error"]) < 1e-2
+
+
+def test_dsgt_requires_tracker_state():
+    top = make_topology("ring", 4)
+    step = make_decentralized_step(lambda p, b: jnp.sum(p ** 2), top,
+                                   harmonic(0.1), algorithm="dsgt")
+    with pytest.raises(ValueError, match="tracker"):
+        step(init_state(jnp.zeros((2,)), 4), None, jax.random.key(0))
+
+
+def test_dsgt_state_checkpoints_with_tracker(tmp_path):
+    state = init_state({"w": jnp.ones((2,))}, 3, algorithm="dsgt")
+    save_checkpoint(str(tmp_path), 5, state)
+    like = init_state({"w": jnp.zeros((2,))}, 3, algorithm="dsgt")
+    restored = load_checkpoint(str(tmp_path), 5, like)
+    assert int(restored.step) == 0
+    y, g_prev = restored.tracker
+    np.testing.assert_array_equal(np.asarray(y["w"]), np.zeros((3, 2)))
+    np.testing.assert_array_equal(np.asarray(g_prev["w"]), np.zeros((3, 2)))
