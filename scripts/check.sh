@@ -26,6 +26,9 @@ python benchmarks/run.py --only bench_step_path
 echo "== data pipeline perf (bench_pipeline) =="
 python benchmarks/run.py --only bench_pipeline
 
+echo "== checkpoint perf (bench_checkpoint) =="
+python benchmarks/run.py --only bench_checkpoint
+
 echo "== benchmark regression gate =="
 python scripts/bench_gate.py "$prev_bench" BENCH_pdsgd.json
 

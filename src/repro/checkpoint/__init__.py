@@ -1,3 +1,8 @@
-from .io import save_checkpoint, load_checkpoint, latest_step
+from .io import (save_checkpoint, load_checkpoint, latest_step,
+                 complete_steps, snapshot_tree, commit_snapshot,
+                 step_dirname)
+from .manager import CheckpointManager
 
-__all__ = ["save_checkpoint", "load_checkpoint", "latest_step"]
+__all__ = ["save_checkpoint", "load_checkpoint", "latest_step",
+           "complete_steps", "snapshot_tree", "commit_snapshot",
+           "step_dirname", "CheckpointManager"]

@@ -1,0 +1,322 @@
+"""Crash-safe, non-blocking checkpoint manager for the train loop.
+
+`save_checkpoint` costs the hot loop np.asarray + npz serialization every
+time it fires (the ROADMAP's "Async checkpoint writes" item).
+`CheckpointManager` splits a save at the only boundary that must stay on
+the caller's thread:
+
+  1. **snapshot** (caller thread): `io.snapshot_tree` stages device-side
+     copies of the state's leaves — an async dispatch, so the hot loop's
+     pipeline never drains, yet ordered before the next donated step can
+     invalidate the source buffers;
+  2. **commit** (daemon writer thread): npz write + tree.json, staged in
+     ``step_<n>.tmp-<pid>`` and `os.rename`d into place, so readers only
+     ever see complete steps (`io.commit_snapshot`);
+  3. **retention** (writer thread): after each commit, superseded steps
+     beyond ``keep_last`` are GC'd (``keep_every`` pins periodic steps
+     forever, the newest complete step is never deleted) and
+     ``manifest.json`` records the surviving completed steps.
+
+The writer follows the `data.worker` daemon-thread pattern shared with
+`data.prefetch.Prefetcher`: bounded queue (backpressure, never unbounded
+memory), first exception parked and re-raised in the train loop on the
+next `save()`/`wait()`/`close()`, `close()` drains in-flight writes, and a
+`weakref.finalize` safety net stops an abandoned writer without keeping
+the manager alive.
+
+Single-writer assumption: one live manager owns a checkpoint directory
+(stale ``*.tmp-*`` debris from crashed predecessors is swept on open).
+"""
+from __future__ import annotations
+
+import os
+import queue
+import shutil
+import threading
+import time as _time
+import weakref
+from typing import Any
+
+from ..data import worker as _w
+from . import io
+
+__all__ = ["CheckpointManager"]
+
+MANIFEST = "manifest.json"
+
+
+class _WriterState:
+    """Mutable state shared with the writer thread (never holds the
+    manager itself, so the finalizer can run)."""
+
+    def __init__(self, completed: list[int]):
+        self.lock = threading.Lock()
+        self.error: BaseException | None = None
+        self.completed: set[int] = set(completed)
+
+
+def _retained(completed: set[int], keep_last: int | None,
+              keep_every: int | None) -> set[int]:
+    """Steps that survive GC.  ``keep_last=None`` disables GC entirely."""
+    if keep_last is None or not completed:
+        return set(completed)
+    # The slice always contains max(completed) (keep_last >= 1 enforced in
+    # __init__), so the newest complete step is never collected.
+    keep = set(sorted(completed)[-keep_last:])
+    if keep_every:
+        keep |= {s for s in completed if s % keep_every == 0}
+    return keep
+
+
+def _remove_debris(path: str) -> None:
+    # Debris can be a DIR or a plain FILE (manifest.json.tmp-<pid>) —
+    # rmtree on a file is a silent no-op under ignore_errors, so branch.
+    if os.path.isdir(path):
+        shutil.rmtree(path, ignore_errors=True)
+    else:
+        try:
+            os.remove(path)
+        except OSError:
+            pass
+
+
+def _recover_or_sweep(directory: str) -> None:
+    """Handle a crashed predecessor's leftovers.
+
+    ``step_<n>.tmp-<pid>`` staging dirs and torn ``*.tmp-<pid>`` files are
+    deleted.  A ``step_<n>.old-<pid>`` dir is the OLD copy parked by a
+    re-save (`io.commit_snapshot`); if the process died between its two
+    renames, that parked dir is the only durable copy of step n — rename
+    it back into place rather than destroying it.  Only when the final
+    dir exists (the re-save completed) is the parked copy superseded
+    debris.
+    """
+    for name in os.listdir(directory):
+        path = os.path.join(directory, name)
+        if io._OLD_SUFFIX in name:
+            base = name.split(io._OLD_SUFFIX)[0]
+            final = os.path.join(directory, base)
+            if (io._STEP_RE.fullmatch(base) and not os.path.exists(final)
+                    and io.is_complete(path)):
+                os.rename(path, final)
+                continue
+            _remove_debris(path)
+        elif io._TMP_SUFFIX in name:
+            _remove_debris(path)
+
+
+def _abandon_writer(q: queue.Queue, thread: threading.Thread,
+                    join_timeout: float) -> None:
+    """Finalizer for a manager GC'd without close(): drop queued jobs and
+    unblock the writer (it waits in an untimed q.get(), so a stop event
+    alone could never reach it — only an END sentinel does)."""
+    _w.drain_queue(q)
+    try:
+        q.put_nowait(_w.END)
+    except queue.Full:
+        pass  # writer is mid-job with a refilled queue; daemon dies at exit
+    thread.join(timeout=join_timeout)
+
+
+def _write_manifest(directory: str, state: _WriterState,
+                    keep_last: int | None, keep_every: int | None) -> None:
+    io._atomic_write_json(os.path.join(directory, MANIFEST), {
+        "format": 1,
+        "completed": sorted(state.completed),
+        "policy": {"keep_last": keep_last, "keep_every": keep_every},
+    })
+
+
+def _commit_and_gc(directory: str, step: int, arrays: dict, meta: dict,
+                   state: _WriterState, keep_last: int | None,
+                   keep_every: int | None) -> None:
+    io.commit_snapshot(directory, step, arrays, meta)
+    with state.lock:
+        state.completed.add(step)
+        drop = state.completed - _retained(state.completed, keep_last,
+                                           keep_every)
+        state.completed -= drop
+        _write_manifest(directory, state, keep_last, keep_every)
+    for s in sorted(drop):
+        shutil.rmtree(os.path.join(directory, io.step_dirname(s)),
+                      ignore_errors=True)
+
+
+def _writer_loop(directory: str, q: queue.Queue, state: _WriterState,
+                 keep_last: int | None, keep_every: int | None) -> None:
+    # Module-level (no CheckpointManager reference): the thread must not
+    # keep the owning manager alive, or its GC finalizer could never run.
+    while True:
+        job = q.get()
+        try:
+            if job is _w.END:
+                return
+            if state.error is not None:
+                continue  # park the first error, drain the rest unwritten
+            step, arrays, meta = job
+            _commit_and_gc(directory, step, arrays, meta, state,
+                           keep_last, keep_every)
+        except BaseException as e:
+            state.error = e
+        finally:
+            q.task_done()
+
+
+class CheckpointManager:
+    """Background-writing checkpoint store with retention.
+
+    Parameters
+    ----------
+    directory:    checkpoint root (`<dir>/step_<n>/...` + manifest.json).
+    keep_last:    retain this many newest complete steps (None = keep all).
+    keep_every:   additionally pin every step divisible by this, forever
+                  (e.g. ``keep_last=3, keep_every=1000`` keeps a rolling
+                  window plus durable millennial checkpoints).
+    async_writes: False serializes commits on the caller thread (same
+                  atomicity/retention, no worker) — the tests' simple mode
+                  and a fallback for single-shot tooling.
+    queue_depth:  bounded in-flight snapshots; a full queue back-pressures
+                  `save()` rather than buffering unbounded host copies.
+    fresh:        True CLEARS any existing steps/manifest on open (after
+                  crash-debris recovery).  A fresh run reusing a directory
+                  must not leave another trajectory's states behind: stale
+                  higher-numbered steps would both poison retention GC
+                  (the new run's saves look "oldest" and get collected)
+                  and hand a later --resume the wrong trajectory.  The
+                  default adopts what's on disk (the resume case).
+    """
+
+    def __init__(self, directory: str, *, keep_last: int | None = None,
+                 keep_every: int | None = None, async_writes: bool = True,
+                 queue_depth: int = 2, fresh: bool = False):
+        if keep_last is not None and keep_last < 1:
+            raise ValueError(f"keep_last must be >= 1, got {keep_last}")
+        if keep_every is not None and keep_every < 1:
+            raise ValueError(f"keep_every must be >= 1, got {keep_every}")
+        if queue_depth < 1:
+            raise ValueError(f"queue_depth must be >= 1, got {queue_depth}")
+        self.directory = directory
+        self.keep_last = keep_last
+        self.keep_every = keep_every
+        os.makedirs(directory, exist_ok=True)
+        _recover_or_sweep(directory)  # a crashed predecessor's leftovers
+        if fresh:
+            for s in io.complete_steps(directory):
+                shutil.rmtree(os.path.join(directory, io.step_dirname(s)),
+                              ignore_errors=True)
+            _remove_debris(os.path.join(directory, MANIFEST))
+        self._state = _WriterState(io.complete_steps(directory))
+        # Idempotence is scoped to THIS manager's lifetime (terminal +
+        # boundary saves of one run dedupe) — steps already on disk from a
+        # previous run are overwritten, not skipped: a fresh run reusing a
+        # checkpoint dir must not silently keep a different trajectory's
+        # states.
+        self._submitted: set[int] = set()
+        self._closed = False
+        self._queue: queue.Queue | None = None
+        self._thread = None
+        if async_writes:
+            self._queue = queue.Queue(maxsize=queue_depth)
+            self._thread = threading.Thread(
+                target=_writer_loop,
+                args=(directory, self._queue, self._state, keep_last,
+                      keep_every),
+                name="repro-checkpoint-writer", daemon=True)
+            self._thread.start()
+            # Abandoned-manager safety net: drops queued (not yet started)
+            # writes, which is exactly what interpreter teardown would do —
+            # call close() to guarantee queued saves land.
+            self._finalizer = weakref.finalize(
+                self, _abandon_writer, self._queue, self._thread, 1.0)
+
+    # -- introspection ----------------------------------------------------
+    @property
+    def completed_steps(self) -> list[int]:
+        """Sorted steps with committed on-disk payloads (post-GC)."""
+        with self._state.lock:
+            return sorted(self._state.completed)
+
+    def latest_step(self) -> int | None:
+        steps = self.completed_steps
+        return steps[-1] if steps else None
+
+    # -- error plumbing ---------------------------------------------------
+    def _raise_pending(self) -> None:
+        err = self._state.error
+        if err is not None:
+            raise RuntimeError(
+                f"checkpoint writer failed for {self.directory!r}; the "
+                "train loop must not continue as if its state were "
+                "durable") from err
+
+    # -- the API ----------------------------------------------------------
+    def save(self, step: int, tree: Any) -> bool:
+        """Snapshot ``tree`` now; commit (a)synchronously.  Idempotent:
+        a step already committed or in flight is skipped (returns False).
+        Re-raises a prior writer failure into the caller."""
+        self._raise_pending()
+        if self._closed:
+            raise RuntimeError("CheckpointManager is closed")
+        step = int(step)
+        if step in self._submitted:
+            return False
+        arrays, meta = io.snapshot_tree(step, tree)
+        self._submitted.add(step)
+        if self._queue is None:
+            _commit_and_gc(self.directory, step, arrays, meta, self._state,
+                           self.keep_last, self.keep_every)
+            return True
+        while True:  # bounded put that notices a dying writer
+            self._raise_pending()
+            try:
+                self._queue.put((step, arrays, meta), timeout=0.05)
+                return True
+            except queue.Full:
+                continue
+
+    def wait(self) -> None:
+        """Block until every submitted snapshot is on disk (or raise the
+        writer's failure).  The manager stays usable."""
+        if self._queue is not None:
+            self._queue.join()
+        self._raise_pending()
+
+    def close(self, join_timeout: float = 300.0) -> None:
+        """Drain in-flight writes, stop the writer, surface any failure.
+
+        Unlike the prefetcher's close (which discards — data is
+        re-synthesizable), a checkpoint close must LAND what was queued:
+        an END sentinel follows the last job, and we join on it."""
+        if self._closed:
+            self._raise_pending()
+            return
+        self._closed = True
+        if self._queue is not None:
+            # Timed put: an untimed one on a full queue would block before
+            # join_timeout could ever apply if the writer is wedged in a
+            # stalled filesystem call.
+            deadline = _time.monotonic() + join_timeout
+            while True:
+                try:
+                    self._queue.put(_w.END, timeout=0.1)
+                    break
+                except queue.Full:
+                    if _time.monotonic() >= deadline:
+                        self._finalizer.detach()
+                        raise TimeoutError(
+                            f"checkpoint writer wedged (queue still full "
+                            f"after {join_timeout}s)")
+            self._thread.join(timeout=max(0.0,
+                                          deadline - _time.monotonic()))
+            self._finalizer.detach()
+            if self._thread.is_alive():
+                raise TimeoutError(
+                    f"checkpoint writer still running after {join_timeout}s")
+        self._raise_pending()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False

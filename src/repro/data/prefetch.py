@@ -24,23 +24,11 @@ from typing import Any, Callable, Iterable, Iterator
 import jax
 
 from .pipeline import BATCH_LOGICAL, CHUNK_LOGICAL
+from .worker import END as _END
+from .worker import bounded_put as _bounded_put
+from .worker import shutdown_worker as _shutdown_worker
 
 __all__ = ["Prefetcher", "make_placer", "prefetch_chunks"]
-
-# End-of-stream marker in the item slot (distinct from any source item, so
-# a source legitimately yielding None is passed through, not truncated).
-_END = object()
-
-
-def _bounded_put(stop: threading.Event, q: queue.Queue, payload):
-    # Bounded put that never deadlocks against close(): poll the stop
-    # event instead of blocking forever on a full queue.
-    while not stop.is_set():
-        try:
-            q.put(payload, timeout=0.05)
-            return
-        except queue.Full:
-            continue
 
 
 def _worker_loop(it: Iterator, place: Callable | None,
@@ -58,22 +46,6 @@ def _worker_loop(it: Iterator, place: Callable | None,
         end = (_END, e)
     finally:
         _bounded_put(stop, q, end)
-
-
-def _shutdown_worker(stop: threading.Event, q: queue.Queue,
-                     thread: threading.Thread, join_timeout: float):
-    """Signal stop, unblock a worker stuck on a full queue, and join.
-
-    Module-level (not a method) so `weakref.finalize` can call it without
-    keeping the Prefetcher alive.
-    """
-    stop.set()
-    while True:
-        try:
-            q.get_nowait()
-        except queue.Empty:
-            break
-    thread.join(timeout=join_timeout)
 
 
 def make_placer(mesh=None, rules=None) -> Callable[[Any], Any]:

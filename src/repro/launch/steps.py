@@ -48,6 +48,18 @@ def make_torus_W(mesh) -> np.ndarray:
     return topology.metropolis_weights(adj)
 
 
+def dsgt_carry(params: Pytree) -> tuple[Pytree, tuple[Pytree, Pytree]]:
+    """Initial carry for `make_train_step(algorithm="dsgt")`.
+
+    The tracker pair (y^{k-1}, g^{k-1}) rides alongside the agent-stacked
+    params — zeros at k=0 so the first fresh tracker is exactly g^0, the
+    same convention as `core.pdsgd.make_decentralized_step`'s dsgt branch.
+    Two independent zero trees: aliasing one buffer into both slots would
+    donate the same buffer twice under jit."""
+    return (params, (jax.tree.map(jnp.zeros_like, params),
+                     jax.tree.map(jnp.zeros_like, params)))
+
+
 def make_train_step(bundle: ModelBundle, mesh,
                     gossip: Literal["dense", "ring"] = "dense",
                     algorithm: str = "pdsgd", lam_base: float = 0.1,
@@ -58,6 +70,16 @@ def make_train_step(bundle: ModelBundle, mesh,
     per-element stepsizes Lambda and mixing coefficients B are drawn inside
     the step from fold_in-derived per-agent keys.
 
+    ``algorithm="dsgt"`` (the gradient-tracking communication baseline)
+    swaps the first argument for a carry ``(params, (y_prev, g_prev))``
+    from `dsgt_carry` and returns the advanced carry — the tracker pair
+    gossips, shards, and donates exactly like params.  Phase convention
+    matches `core.pdsgd.make_decentralized_step`'s dsgt branch: the carry
+    holds (y^{k-1}, g^{k-1}) and params advance with the FRESH
+    y^k = W y^{k-1} + g^k − g^{k-1}.  Dense gossip only — DSGT must mix
+    TWO variables per iteration (the 2× message volume the paper positions
+    against), and the ring pipeline only carries the single PDSGD v_ij.
+
     ``use_pallas`` defaults to False HERE (unlike `core.pdsgd`): the fused
     `fused_pdsgd_tree` concatenates the whole model into (m, D) buffers,
     which is the right layout for the single-host hot loop but would defeat
@@ -65,6 +87,10 @@ def make_train_step(bundle: ModelBundle, mesh,
     the multi-billion-param bundles this launch path shards over the mesh.
     Opt in only for bundles that fit replicated per agent.
     """
+    if algorithm == "dsgt" and gossip != "dense":
+        raise ValueError(
+            "algorithm='dsgt' supports gossip='dense' only (the tracker is "
+            "a second gossiped variable; the ring pipeline carries one)")
     m = num_agents(mesh)
     axes = agent_axes(mesh)
     W_np = make_torus_W(mesh)
@@ -91,7 +117,19 @@ def make_train_step(bundle: ModelBundle, mesh,
     def train_step(params, batch, seed, step):
         key = jax.random.key(seed)
         lam_bar = lam_base / (step.astype(jnp.float32) + 1.0)
+        if algorithm == "dsgt":
+            params, (y_prev, g_prev) = params
         losses, grads = grad_fn(params, batch)
+        if algorithm == "dsgt":
+            # y^k = W y^{k-1} + g^k - g^{k-1};  x^{k+1} = W x^k - lam y^k
+            # (same phase convention as core.pdsgd's dsgt branch — the
+            # carry holds LAST step's pair, params advance on the fresh y).
+            y = jax.tree.map(lambda t, g, gp: t + g - gp,
+                             pdsgd.gossip_mix(W, y_prev), grads, g_prev)
+            new_params = jax.tree.map(
+                lambda a, t: a - lam_bar * t.astype(a.dtype),
+                pdsgd.gossip_mix(W, params), y)
+            return (new_params, (y, grads)), losses.mean()
         if algorithm == "pdsgd":
             if gossip == "dense":
                 new_params = pdsgd.pdsgd_update(

@@ -21,6 +21,14 @@ and, critically, never re-derives `privacy.agent_key(key, step, agent)` for
 an already-consumed step: replaying a (key, step) pair would re-issue the
 same Lambda^k draws against new gradients, exactly the key reuse the
 paper's information-theoretic privacy argument forbids.
+
+Saves go through `checkpoint.CheckpointManager`: the loop only stages
+async device-side copies of the leaves (no host sync — the dispatch
+pipeline never drains); the device->host transfer, serialization, and the
+atomic tmp-dir/rename commit happen on a daemon writer thread
+(``--checkpoint-sync`` forces the blocking path).  ``--keep-last``/``--keep-every`` bound disk usage, and a
+terminal checkpoint is always written when ``--checkpoint-dir`` is set —
+a finished run resumes from its end, not from the last periodic boundary.
 """
 from __future__ import annotations
 
@@ -30,7 +38,7 @@ import time
 
 import jax
 
-from ..checkpoint import latest_step, load_checkpoint, save_checkpoint
+from ..checkpoint import CheckpointManager, latest_step, load_checkpoint
 from ..configs import get_config
 from ..core import (init_state, make_decentralized_step, make_scanned_steps,
                     make_topology)
@@ -60,6 +68,15 @@ def build_parser() -> argparse.ArgumentParser:
                    help="chunks buffered ahead by the prefetch thread")
     p.add_argument("--checkpoint-dir", default=None)
     p.add_argument("--checkpoint-every", type=int, default=50)
+    p.add_argument("--checkpoint-sync", action="store_true",
+                   help="commit checkpoints on the caller thread (blocks "
+                        "the hot loop; default is the async writer)")
+    p.add_argument("--keep-last", type=int, default=None,
+                   help="retain only this many newest checkpoints "
+                        "(default: keep all)")
+    p.add_argument("--keep-every", type=int, default=None,
+                   help="additionally pin every step divisible by this, "
+                        "exempt from --keep-last GC")
     p.add_argument("--resume", action="store_true",
                    help="restore the latest full state (incl. step counter) "
                         "from --checkpoint-dir and continue")
@@ -91,32 +108,24 @@ def run_training(args, mesh=None) -> dict:
     if args.checkpoint_dir and args.checkpoint_every < 1:
         raise ValueError("--checkpoint-every must be >= 1 (omit "
                          "--checkpoint-dir to disable checkpoints)")
+    if args.resume and not args.checkpoint_dir:
+        raise ValueError("--resume requires --checkpoint-dir")
+
+    # Built BEFORE resume selection: opening the manager recovers a
+    # predecessor's crash debris (a step parked mid-re-save is renamed
+    # back), so `latest_step` below sees everything recoverable.  A fresh
+    # (non --resume) run CLEARS stale steps — another trajectory's
+    # checkpoints must neither poison retention GC nor get handed to a
+    # later --resume.
+    manager = None
+    if args.checkpoint_dir:
+        manager = CheckpointManager(args.checkpoint_dir,
+                                    keep_last=args.keep_last,
+                                    keep_every=args.keep_every,
+                                    async_writes=not args.checkpoint_sync,
+                                    fresh=not args.resume)
 
     start = 0
-    if args.resume:
-        if not args.checkpoint_dir:
-            raise ValueError("--resume requires --checkpoint-dir")
-        last = latest_step(args.checkpoint_dir)
-        if last is None:
-            # Refuse rather than silently restart at step 0: if a previous
-            # run DID consume steps, re-deriving agent_key(key, step, agent)
-            # for them is exactly the key reuse the privacy argument
-            # forbids.  A fresh run should not pass --resume.
-            raise FileNotFoundError(
-                f"--resume: no checkpoint found under "
-                f"{args.checkpoint_dir!r}; drop --resume for a fresh run")
-        state = load_checkpoint(args.checkpoint_dir, last, like=state)
-        if int(state.step) != last:
-            # batches/keys would be driven by the directory index while the
-            # schedule and agent_key use state.step — refuse the divergence
-            raise ValueError(
-                f"checkpoint step_{last:08d} holds state.step="
-                f"{int(state.step)}; refusing to resume from a mislabeled "
-                "checkpoint")
-        start = last
-        print(json.dumps({"resumed_from": last,
-                          "state_step": int(state.step)}))
-
     history: list[dict] = []
     t0 = time.time()
 
@@ -135,44 +144,85 @@ def run_training(args, mesh=None) -> dict:
         # boundary.  The scanned loop can only save at chunk boundaries,
         # so with unroll_k > checkpoint_every intermediate saves collapse
         # onto the chunk end (warned about below).
-        return bool(args.checkpoint_dir) and crosses(
+        return manager is not None and crosses(
             k_prev, k_next, args.checkpoint_every)
 
-    k = start
-    if args.unroll_k > 1:
-        if args.checkpoint_dir and args.checkpoint_every % args.unroll_k:
-            print(json.dumps({
-                "warning": f"checkpoint_every={args.checkpoint_every} is "
-                           f"not a multiple of unroll_k={args.unroll_k}: "
-                           "checkpoints land on chunk boundaries only"}))
-        scanned = make_scanned_steps(step, args.unroll_k)
-        n_chunks = max(0, args.steps - start) // args.unroll_k
-        with prefetch_chunks(pipeline, args.unroll_k, start_step=start,
-                             num_chunks=n_chunks, place=place,
-                             depth=args.prefetch_depth) as chunks:
-            for chunk in chunks:
-                keys = per_step_keys(key, k, args.unroll_k)
-                state, aux = scanned(state, chunk, keys)
-                k_next = k + args.unroll_k
-                # aux is stacked per step; reduce per chunk for logging.
-                # Honor --log-every at chunk granularity — an unlogged
-                # chunk costs no device->host sync at all.
-                if crosses(k, k_next, args.log_every) or k_next >= args.steps:
-                    log(k_next - 1, aux["loss"].mean(),
-                        aux["consensus_error"][-1])
-                if checkpoint_due(k, k_next):
-                    save_checkpoint(args.checkpoint_dir, k_next, state)
-                k = k_next
+    try:
+        if args.resume:
+            last = latest_step(args.checkpoint_dir)
+            if last is None:
+                # Refuse rather than silently restart at step 0: if a
+                # previous run DID consume steps, re-deriving
+                # agent_key(key, step, agent) for them is exactly the key
+                # reuse the privacy argument forbids.  A fresh run should
+                # not pass --resume.
+                raise FileNotFoundError(
+                    f"--resume: no checkpoint found under "
+                    f"{args.checkpoint_dir!r}; drop --resume for a fresh "
+                    "run")
+            state = load_checkpoint(args.checkpoint_dir, last, like=state)
+            if int(state.step) != last:
+                # batches/keys would be driven by the directory index while
+                # the schedule and agent_key use state.step — refuse the
+                # divergence
+                raise ValueError(
+                    f"checkpoint step_{last:08d} holds state.step="
+                    f"{int(state.step)}; refusing to resume from a "
+                    "mislabeled checkpoint")
+            start = last
+            print(json.dumps({"resumed_from": last,
+                              "state_step": int(state.step)}))
 
-    # Eager loop: the whole run when --unroll-k 1, the tail otherwise.
-    for k in range(k, args.steps):
-        sk = jax.random.fold_in(key, k)
-        batch = place(pipeline.batch_at(k))
-        state, aux = step(state, batch, sk)
-        if k % args.log_every == 0 or k == args.steps - 1:
-            log(k, aux["loss"], aux["consensus_error"])
-        if checkpoint_due(k, k + 1):
-            save_checkpoint(args.checkpoint_dir, k + 1, state)
+        k = start
+        if args.unroll_k > 1:
+            if manager is not None and args.checkpoint_every % args.unroll_k:
+                print(json.dumps({
+                    "warning": f"checkpoint_every={args.checkpoint_every} is "
+                               f"not a multiple of unroll_k={args.unroll_k}: "
+                               "checkpoints land on chunk boundaries only"}))
+            scanned = make_scanned_steps(step, args.unroll_k)
+            n_chunks = max(0, args.steps - start) // args.unroll_k
+            with prefetch_chunks(pipeline, args.unroll_k, start_step=start,
+                                 num_chunks=n_chunks, place=place,
+                                 depth=args.prefetch_depth) as chunks:
+                for chunk in chunks:
+                    keys = per_step_keys(key, k, args.unroll_k)
+                    state, aux = scanned(state, chunk, keys)
+                    k_next = k + args.unroll_k
+                    # aux is stacked per step; reduce per chunk for logging.
+                    # Honor --log-every at chunk granularity — an unlogged
+                    # chunk costs no device->host sync at all.
+                    if crosses(k, k_next, args.log_every) or k_next >= args.steps:
+                        log(k_next - 1, aux["loss"].mean(),
+                            aux["consensus_error"][-1])
+                    if checkpoint_due(k, k_next):
+                        manager.save(k_next, state)
+                    k = k_next
+
+        # Eager loop: the whole run when --unroll-k 1, the tail otherwise.
+        for k in range(k, args.steps):
+            sk = jax.random.fold_in(key, k)
+            batch = place(pipeline.batch_at(k))
+            state, aux = step(state, batch, sk)
+            if k % args.log_every == 0 or k == args.steps - 1:
+                log(k, aux["loss"], aux["consensus_error"])
+            if checkpoint_due(k, k + 1):
+                manager.save(k + 1, state)
+
+        if manager is not None:
+            # Terminal checkpoint: a run whose --steps doesn't cross a
+            # --checkpoint-every boundary must still resume from its END,
+            # never replay work (and never re-issue (key, step) draws).
+            # `save` is idempotent, so a boundary landing exactly on
+            # args.steps doesn't write twice; max(start, steps) is what
+            # state.step holds even when a resume starts past --steps.
+            manager.save(max(start, args.steps), state)
+    finally:
+        if manager is not None:
+            # Drains in-flight writes; re-raises a writer failure so the
+            # train loop never reports success on a checkpoint that never
+            # landed.
+            manager.close()
 
     return {"state": state, "history": history, "resumed_from": start or None}
 

@@ -3,12 +3,17 @@ trajectory of the uninterrupted one — same batches (random-access
 `batch_at`), same per-step keys (fold_in on the absolute step), and a step
 counter that keeps counting so `privacy.agent_key(key, step, agent)` never
 re-issues Lambda draws for an already-consumed step."""
+import os
+import types
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.checkpoint import latest_step, load_checkpoint, save_checkpoint
+import repro.checkpoint.manager as manager_mod
+from repro.checkpoint import (complete_steps, latest_step, load_checkpoint,
+                              save_checkpoint, step_dirname)
 from repro.core import (init_state, make_decentralized_step, make_topology)
 from repro.core.schedules import harmonic
 from repro.launch.train import build_parser, run_training
@@ -66,6 +71,84 @@ def test_eager_resume_bit_identical(tmp_path, uninterrupted):
     full = {h["step"]: h["loss"] for h in uninterrupted["eager"]["history"]}
     for h in resumed["history"]:
         assert h["loss"] == full[h["step"]]
+
+
+def test_resume_skips_truncated_checkpoint(tmp_path, uninterrupted):
+    """Kill-mid-write regression: truncate the newest checkpoint and assert
+    resume falls back to the previous COMPLETE step — and still reproduces
+    the uninterrupted trajectory bit-for-bit from there."""
+    d = str(tmp_path)
+    _run(["--steps", "6", "--checkpoint-dir", d, "--checkpoint-every", "2"])
+    assert latest_step(d) == 6
+    os.remove(os.path.join(d, step_dirname(6), "arrays.npz"))
+    assert latest_step(d) == 4
+    resumed = _run(["--checkpoint-dir", d, "--checkpoint-every", "2",
+                    "--resume"])
+    assert resumed["resumed_from"] == 4
+    for a, b in zip(_params(uninterrupted["eager"]), _params(resumed)):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_terminal_checkpoint_saved_off_boundary(tmp_path):
+    """--steps not crossing a --checkpoint-every boundary must still leave
+    a terminal checkpoint: a finished run resumes from its END rather than
+    replaying (and re-keying) work from an earlier boundary."""
+    d = str(tmp_path)
+    r = _run(["--steps", "6", "--checkpoint-dir", d,
+              "--checkpoint-every", "4"])
+    assert complete_steps(d) == [4, 6]
+    restored = load_checkpoint(d, 6, like=r["state"])
+    assert int(restored.step) == 6
+    # resuming at the terminal step is a no-op that stays consistent
+    resumed = _run(["--steps", "6", "--checkpoint-dir", d,
+                    "--checkpoint-every", "4", "--resume"])
+    assert resumed["resumed_from"] == 6
+    assert complete_steps(d) == [4, 6]
+
+
+def test_driver_keep_last_retention(tmp_path):
+    d = str(tmp_path)
+    _run(["--steps", "8", "--checkpoint-dir", d, "--checkpoint-every", "2",
+          "--keep-last", "2"])
+    assert complete_steps(d) == [6, 8]
+    resumed = _run(["--checkpoint-dir", d, "--checkpoint-every", "2",
+                    "--keep-last", "2", "--resume"])
+    assert resumed["resumed_from"] == 8
+
+
+def test_sync_and_async_driver_checkpoints_identical(tmp_path):
+    da, ds = str(tmp_path / "async"), str(tmp_path / "sync")
+    _run(["--steps", "4", "--checkpoint-dir", da, "--checkpoint-every", "4"])
+    _run(["--steps", "4", "--checkpoint-dir", ds, "--checkpoint-every", "4",
+          "--checkpoint-sync"])
+    a = _run(["--checkpoint-dir", da, "--checkpoint-every", "4", "--resume"])
+    s = _run(["--checkpoint-dir", ds, "--checkpoint-every", "4", "--resume"])
+    for x, y in zip(_params(a), _params(s)):
+        np.testing.assert_array_equal(x, y)
+
+
+def test_writer_failure_surfaces_in_run_training(tmp_path, monkeypatch):
+    """A dying background writer must fail the training run — the loop
+    never reports success on checkpoints that never landed."""
+    monkeypatch.setattr(
+        manager_mod.io, "commit_snapshot",
+        lambda *a, **k: (_ for _ in ()).throw(OSError("disk full")))
+    with pytest.raises(RuntimeError, match="checkpoint writer failed"):
+        _run(["--steps", "4", "--checkpoint-dir", str(tmp_path),
+              "--checkpoint-every", "2"])
+
+
+def test_fresh_run_clears_stale_checkpoint_dir(tmp_path):
+    """A non --resume run reusing a checkpoint dir must clear another
+    trajectory's stale steps: a higher-numbered leftover would otherwise
+    be what a later --resume restores."""
+    d = str(tmp_path)
+    save_checkpoint(d, 100, {"junk": jnp.ones((2,))})
+    _run(["--steps", "4", "--checkpoint-dir", d, "--checkpoint-every", "2"])
+    assert complete_steps(d) == [2, 4]
+    resumed = _run(["--checkpoint-dir", d, "--checkpoint-every", "2",
+                    "--resume"])
+    assert resumed["resumed_from"] == 4
 
 
 def test_resume_without_checkpoint_refuses(tmp_path):
@@ -142,3 +225,58 @@ def test_dsgt_state_checkpoints_with_tracker(tmp_path):
     y, g_prev = restored.tracker
     np.testing.assert_array_equal(np.asarray(y["w"]), np.zeros((3, 2)))
     np.testing.assert_array_equal(np.asarray(g_prev["w"]), np.zeros((3, 2)))
+
+
+class _FakeMesh:
+    """Duck-typed mesh: the dense-gossip path of make_train_step only reads
+    .shape (a dict), so no multi-device runtime is needed."""
+
+    def __init__(self, **axes):
+        self.shape = axes
+
+
+def test_dsgt_mesh_path_parity_with_core():
+    """ROADMAP "dsgt in launch.steps": the mesh path's gradient-tracking
+    branch must walk the SAME trajectory as core.pdsgd's dsgt branch —
+    same W (torus == ring for 1 x m), same 1/k lam, same phase convention
+    for the (y, prev_grads) pair carried alongside params."""
+    from repro.core.topology import Topology, metropolis_weights, torus2d
+    from repro.launch.steps import dsgt_carry, make_train_step
+
+    m, d = 4, 3
+    rng = np.random.default_rng(0)
+    targets = jnp.asarray(rng.normal(size=(m, d)).astype(np.float32))
+
+    def loss(p, batch):
+        return jnp.mean(jnp.sum((p - batch) ** 2, -1))
+
+    adj = torus2d(1, m)
+    top = Topology(name="torus", adjacency=adj,
+                   weights=metropolis_weights(adj))
+    core_step = make_decentralized_step(loss, top, harmonic(0.1),
+                                        algorithm="dsgt", donate=False)
+    bundle = types.SimpleNamespace(loss_fn=loss)
+    mesh_step = jax.jit(make_train_step(bundle, _FakeMesh(data=m, model=1),
+                                        algorithm="dsgt", lam_base=0.1))
+
+    state = init_state(jnp.zeros((d,)), m, algorithm="dsgt")
+    carry = dsgt_carry(jnp.zeros((m, d)))
+    for k in range(10):
+        state, aux = core_step(state, targets, jax.random.key(k))
+        carry, mesh_loss = mesh_step(carry, targets, jnp.int32(0),
+                                     jnp.int32(k))
+    np.testing.assert_array_equal(
+        np.asarray(jax.tree.leaves(state.params)[0]), np.asarray(carry[0]))
+    # trackers agree too (phase convention matches, not just the params)
+    for a, b in zip(jax.tree.leaves(state.tracker),
+                    jax.tree.leaves(carry[1])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert float(mesh_loss) == pytest.approx(float(aux["loss"]), rel=1e-6)
+
+
+def test_dsgt_mesh_path_rejects_ring_gossip():
+    bundle = types.SimpleNamespace(loss_fn=lambda p, b: jnp.sum(p ** 2))
+    from repro.launch.steps import make_train_step
+    with pytest.raises(ValueError, match="dense"):
+        make_train_step(bundle, _FakeMesh(data=4, model=1),
+                        algorithm="dsgt", gossip="ring")
