@@ -17,6 +17,9 @@ Prints ``name,us_per_call,derived`` CSV rows:
   * bench_checkpoint : checkpointing cost on the hot loop — off vs
                        blocking save_checkpoint vs the async
                        CheckpointManager (merged into BENCH_pdsgd.json)
+  * bench_dynamic_topology : time-varying mixing — static W vs per-step
+                       link dropout through the fused mask->reweight->
+                       gossip kernel (merged into BENCH_pdsgd.json)
 
 ``--only NAME`` runs a single benchmark (substring match).
 """
@@ -610,6 +613,99 @@ def bench_checkpoint(iters=3000, unroll_k=50, checkpoint_every=500):
          f"blocking_overhead={payload['blocking_overhead_vs_off']}x")
 
 
+def bench_dynamic_topology(iters=600, unroll_k=100, rate=0.1):
+    """Time-varying mixing tax on the Fig. 2 scanned hot loop, fused-kernel
+    path: static W vs per-step link dropout through the fused
+    mask -> Metropolis-re-weight -> gossip kernel
+    (`kernels.masked_gossip_update`).
+
+    Both rows run `use_pallas=True` (the Pallas interpreter on this CPU
+    container — same code that compiles on TPU) so the comparison isolates
+    what dropout adds: one (m, m) Bernoulli mask draw + the in-VMEM
+    re-weighting, with W_k never staged from HBM.  The acceptance bar is
+    dropout within 15% of static steps/s.  The derived column carries the
+    final estimation error of the dropout run — convergence evidence that
+    unreliable links still solve the paper's problem.
+    """
+    from repro.core import (init_state, make_decentralized_step, make_mixing,
+                            make_scanned_steps, make_topology)
+    from repro.core.schedules import paper_experiment
+    from repro.data import estimation_problem
+
+    m, d = 5, 2
+    top = make_topology("paper_fig1", m)
+    prob = estimation_problem(m, d=d, s=3, n_per_agent=100, seed=0)
+    Z, M = jnp.asarray(prob["Z"]), jnp.asarray(prob["M"])
+
+    def loss_fn(p, batch):
+        z, Mi = batch
+        return jnp.mean(jnp.sum((z - p @ Mi.T) ** 2, -1))
+
+    rng = np.random.default_rng(0)
+    idx = jnp.asarray(rng.integers(0, 100, size=(iters, m, 8)))
+    batches = (Z[jnp.arange(m)[None, :, None], idx],
+               jnp.broadcast_to(M[None], (iters,) + M.shape))
+    keys = jax.random.split(jax.random.key(0), iters)
+    chunk = lambda x, c: jax.tree.map(
+        lambda l: l[c * unroll_k:(c + 1) * unroll_k], x)
+    assert iters % unroll_k == 0
+
+    def run(scanned):
+        state = init_state(jnp.zeros((d,)), m)
+        state, _ = scanned(state, chunk(batches, 0), chunk(keys, 0))
+        state = init_state(jnp.zeros((d,)), m)
+        t0 = time.perf_counter()
+        for c in range(iters // unroll_k):
+            state, aux = scanned(state, chunk(batches, c), chunk(keys, c))
+        jax.block_until_ready(state.params)
+        elapsed = time.perf_counter() - t0  # before the err host transfer
+        err = float(np.linalg.norm(
+            np.asarray(jax.tree.leaves(state.params)[0]).mean(0)
+            - prob["theta_opt"]))
+        return elapsed / iters * 1e6, err
+
+    # One build (one trace/compile) per mode, OUTSIDE the repeat loop; the
+    # repeats are interleaved so a load spike inflates BOTH rows instead
+    # of silently skewing the static/dropout ratio the gate watches.
+    processes = {"static": make_mixing(top),
+                 "dropout": make_mixing(top, rate=rate, seed=1)}
+    scans = {
+        name: make_scanned_steps(
+            make_decentralized_step(loss_fn, process, paper_experiment(0.05),
+                                    use_pallas=True, donate=False),
+            unroll_k, donate=False)
+        for name, process in processes.items()
+    }
+    runs = {name: [] for name in processes}
+    for _ in range(4):
+        for name in processes:
+            runs[name].append(run(scans[name]))
+    results = {name: min(rs)[0] for name, rs in runs.items()}
+    errs = {name: rs[0][1] for name, rs in runs.items()}
+
+    payload = {
+        "workload": (f"fig2_estimation d={d} m={m} iters={iters} "
+                     f"dropout={rate} use_pallas=True"),
+        "unroll_k": unroll_k,
+        "paths": {
+            name: {"us_per_step": round(us, 2),
+                   "steps_per_s": round(1e6 / us, 1)}
+            for name, us in results.items()
+        },
+        "dropout_overhead_vs_static": round(
+            results["dropout"] / results["static"], 3),
+        "final_err_static": errs["static"],
+        "final_err_dropout": errs["dropout"],
+        "backend": jax.default_backend(),
+    }
+    _write_bench_json({"bench_dynamic_topology": payload})
+    for name, us in results.items():
+        emit(f"bench_dynamic_topology_{name}", us,
+             f"steps_per_s={1e6 / us:.1f};final_err={errs[name]:.5f}")
+    emit("bench_dynamic_topology_overhead", 0.0,
+         f"dropout_vs_static={payload['dropout_overhead_vs_static']}x")
+
+
 def kernel_benches():
     from repro.kernels import (flash_attention, gossip_update,
                                obfuscate_update, ssd_intra_chunk)
@@ -654,6 +750,7 @@ BENCHES = {
     "bench_step_path": bench_step_path,
     "bench_pipeline": bench_pipeline,
     "bench_checkpoint": bench_checkpoint,
+    "bench_dynamic_topology": bench_dynamic_topology,
     "kernel_benches": kernel_benches,
     "fig3_nonconvex": fig3_nonconvex,
 }

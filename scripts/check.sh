@@ -10,6 +10,13 @@ cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+echo "== no committed bytecode =="
+if [ -n "$(git ls-files '*.pyc')" ]; then
+  echo "committed .pyc binaries found (see .gitignore):"
+  git ls-files '*.pyc'
+  exit 1
+fi
+
 echo "== tier-1 tests =="
 python -m pytest -x -q
 
@@ -28,6 +35,9 @@ python benchmarks/run.py --only bench_pipeline
 
 echo "== checkpoint perf (bench_checkpoint) =="
 python benchmarks/run.py --only bench_checkpoint
+
+echo "== time-varying topology perf (bench_dynamic_topology) =="
+python benchmarks/run.py --only bench_dynamic_topology
 
 echo "== benchmark regression gate =="
 python scripts/bench_gate.py "$prev_bench" BENCH_pdsgd.json

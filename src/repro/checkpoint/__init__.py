@@ -1,8 +1,8 @@
 from .io import (save_checkpoint, load_checkpoint, latest_step,
                  complete_steps, snapshot_tree, commit_snapshot,
-                 step_dirname)
+                 step_dirname, read_run_meta)
 from .manager import CheckpointManager
 
 __all__ = ["save_checkpoint", "load_checkpoint", "latest_step",
            "complete_steps", "snapshot_tree", "commit_snapshot",
-           "step_dirname", "CheckpointManager"]
+           "step_dirname", "read_run_meta", "CheckpointManager"]

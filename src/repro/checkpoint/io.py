@@ -34,7 +34,7 @@ import numpy as np
 
 __all__ = ["save_checkpoint", "load_checkpoint", "latest_step",
            "complete_steps", "snapshot_tree", "commit_snapshot",
-           "step_dirname"]
+           "step_dirname", "read_run_meta"]
 
 _STEP_RE = re.compile(r"step_(\d{8,})")  # {8,}: steps >= 10^8 widen past 8
 _TMP_SUFFIX = ".tmp-"
@@ -59,7 +59,8 @@ def _paths_of(tree: Any) -> list[str]:
     return paths
 
 
-def snapshot_tree(step: int, tree: Any) -> tuple[dict, dict]:
+def snapshot_tree(step: int, tree: Any,
+                  run_meta: dict | None = None) -> tuple[dict, dict]:
     """Stage ``tree``'s leaves for a save WITHOUT a host sync: (arrays, meta).
 
     This is the only part of a save that must run on the caller's thread,
@@ -84,6 +85,11 @@ def snapshot_tree(step: int, tree: Any) -> tuple[dict, dict]:
         "dtypes": [str(a.dtype) for a in arrays.values()],
         "shapes": [list(a.shape) for a in arrays.values()],
     }
+    if run_meta is not None:
+        # JSON-stable run configuration (e.g. the mixing-config fingerprint
+        # from `core.mixing.MixingProcess.fingerprint`) so a --resume under
+        # a different setup can fail fast instead of silently diverging.
+        meta["run"] = run_meta
     return arrays, meta
 
 
@@ -190,7 +196,8 @@ def _atomic_write_json(path: str, payload: dict) -> None:
     os.replace(tmp, path)
 
 
-def save_checkpoint(directory: str, step: int, tree: Any) -> str:
+def save_checkpoint(directory: str, step: int, tree: Any,
+                    run_meta: dict | None = None) -> str:
     """Synchronous atomic save (snapshot + commit on the caller's thread).
 
     The train loop should prefer `CheckpointManager`, which moves the
@@ -198,8 +205,15 @@ def save_checkpoint(directory: str, step: int, tree: Any) -> str:
     for tests and ad-hoc tooling, with the same on-disk format.
     """
     os.makedirs(directory, exist_ok=True)
-    arrays, meta = snapshot_tree(step, tree)
+    arrays, meta = snapshot_tree(step, tree, run_meta=run_meta)
     return commit_snapshot(directory, step, arrays, meta)
+
+
+def read_run_meta(directory: str, step: int) -> dict:
+    """The ``run`` metadata recorded with a step ({} for checkpoints from
+    writers that recorded none)."""
+    with open(os.path.join(directory, step_dirname(step), "tree.json")) as f:
+        return json.load(f).get("run", {})
 
 
 def load_checkpoint(directory: str, step: int, like: Any, *,

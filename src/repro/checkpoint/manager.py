@@ -184,11 +184,16 @@ class CheckpointManager:
                   (the new run's saves look "oldest" and get collected)
                   and hand a later --resume the wrong trajectory.  The
                   default adopts what's on disk (the resume case).
+    run_meta:     JSON-stable dict recorded under ``"run"`` in every
+                  step's tree.json (e.g. the mixing-config fingerprint) —
+                  read back via `io.read_run_meta` so a --resume under a
+                  different configuration fails fast.
     """
 
     def __init__(self, directory: str, *, keep_last: int | None = None,
                  keep_every: int | None = None, async_writes: bool = True,
-                 queue_depth: int = 2, fresh: bool = False):
+                 queue_depth: int = 2, fresh: bool = False,
+                 run_meta: dict | None = None):
         if keep_last is not None and keep_last < 1:
             raise ValueError(f"keep_last must be >= 1, got {keep_last}")
         if keep_every is not None and keep_every < 1:
@@ -198,6 +203,7 @@ class CheckpointManager:
         self.directory = directory
         self.keep_last = keep_last
         self.keep_every = keep_every
+        self.run_meta = run_meta
         os.makedirs(directory, exist_ok=True)
         _recover_or_sweep(directory)  # a crashed predecessor's leftovers
         if fresh:
@@ -260,7 +266,7 @@ class CheckpointManager:
         step = int(step)
         if step in self._submitted:
             return False
-        arrays, meta = io.snapshot_tree(step, tree)
+        arrays, meta = io.snapshot_tree(step, tree, run_meta=self.run_meta)
         self._submitted.add(step)
         if self._queue is None:
             _commit_and_gc(self.directory, step, arrays, meta, self._state,

@@ -1,5 +1,6 @@
 """Core: the paper's inherently privacy-preserving decentralized SGD."""
 from .topology import Topology, make_topology, metropolis_weights, spectral_gap
+from .mixing import MixingProcess, make_mixing, as_process, metropolis_from_mask
 from .schedules import Schedule, harmonic, paper_experiment, polynomial, check_conditions
 from .privacy import sample_B, sample_lambda_tree, obfuscated_gradient, agent_key
 from .pdsgd import (
@@ -25,6 +26,7 @@ from .attacks import dlg_attack, DLGResult
 
 __all__ = [
     "Topology", "make_topology", "metropolis_weights", "spectral_gap",
+    "MixingProcess", "make_mixing", "as_process", "metropolis_from_mask",
     "Schedule", "harmonic", "paper_experiment", "polynomial", "check_conditions",
     "sample_B", "sample_lambda_tree", "obfuscated_gradient", "agent_key",
     "DecentralizedState", "make_decentralized_step", "make_scanned_steps",

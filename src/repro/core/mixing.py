@@ -1,0 +1,274 @@
+"""Time-varying mixing: W_k realized ON DEVICE each step from
+(base adjacency, step).
+
+The paper's Assumption 2 (doubly-stochastic W, w_ii > 0, rho < 1) only has
+to hold *per iteration* — nothing in the convergence or privacy argument
+pins W to a single matrix.  Gao, Wang & Nedić ("Dynamics based Privacy
+Preservation in Decentralized Optimization", PAPERS.md) show that making
+the coupling weights time-varying is itself a privacy mechanism: an
+honest-but-curious neighbor that cannot pin w_ij across iterations loses
+the stationarity its inference attack needs, strengthening the
+gradient-obfuscation story of the source paper.  Operationally, a
+`MixingProcess` is also what makes unreliable networks representable at
+all: link dropout, churn, and randomized gossip are all "W_k varies".
+
+Three modes:
+
+* ``static``   — W_k == the base Metropolis matrix every step, bit-identical
+                 to the frozen-`Topology` contract this module replaces.
+* ``dropout``  — each undirected base edge fails independently per step with
+                 probability ``rate`` (symmetric Bernoulli mask, drawn from
+                 a fold_in of the absolute step index so the scanned loop
+                 and ``--resume`` stay bit-exact), then Metropolis weights
+                 are recomputed IN TRACE on the surviving graph — every
+                 realized W_k is doubly stochastic with w_ii > 0 by
+                 construction, whatever the draw.
+* ``resample`` — the graph itself is redrawn every ``resample_every`` steps
+                 as an Erdős–Rényi G(m, p) (randomized gossip / churn); W_k
+                 is constant within an epoch and jumps at epoch boundaries.
+
+A realized W_k may be disconnected for a single step (rho_k == 1); the
+per-iteration requirements (doubly stochastic, w_ii > 0, support inside
+the allowed graph) always hold, and connectivity holds in expectation for
+any rate < 1 / p > 0 — `tests/test_mixing.py` pins both properties.
+
+Everything `realize` does is traceable: the step functions in
+`core.pdsgd`, the fused masked kernel in `kernels.gossip`, and the ring
+path in `dist.collectives` all consume the same realization, so all
+execution paths agree on W_k draw-for-draw.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .topology import Topology
+
+__all__ = [
+    "MixingProcess",
+    "make_mixing",
+    "as_process",
+    "metropolis_from_mask",
+    "symmetric_edge_mask",
+]
+
+MODES = ("static", "dropout", "resample")
+
+
+def metropolis_from_mask(mask: jax.Array) -> jax.Array:
+    """In-trace Metropolis weights on a symmetric 0/1 OFF-DIAGONAL mask.
+
+    w_ij = mask_ij / (1 + max(deg_i, deg_j)), w_ii = 1 - sum_j w_ij.
+    Doubly stochastic and symmetric for any symmetric mask, with
+    w_ii >= 1/(1 + deg_i) > 0 — Assumption 2 holds for EVERY realization,
+    including disconnected ones (where that step's rho is 1 and the
+    per-iteration guarantees still stand).  The fused Pallas kernel
+    (`kernels.gossip.masked_gossip_update`) applies this same formula
+    in VMEM; keep the two in sync.
+    """
+    mask = mask.astype(jnp.float32)
+    deg = mask.sum(axis=1)
+    denom = 1.0 + jnp.maximum(deg[:, None], deg[None, :])
+    w = mask / denom
+    return w + jnp.diag(1.0 - w.sum(axis=1))
+
+
+def symmetric_edge_mask(key: jax.Array, m: int, keep_prob: jax.Array | float
+                        ) -> jax.Array:
+    """Symmetric off-diagonal Bernoulli(keep_prob) mask: one draw per
+    UNDIRECTED edge (upper triangle, mirrored) so a link fails in both
+    directions at once — the realized graph stays undirected."""
+    u = jax.random.uniform(key, (m, m), dtype=jnp.float32)
+    keep = jnp.triu(u < keep_prob, k=1).astype(jnp.float32)
+    return keep + keep.T
+
+
+# eq=False: the generated __eq__/__hash__ would hit Topology's numpy arrays
+# and raise on use (dict key, lru_cache, jit static arg) — identity semantics
+# are the honest contract; compare configurations via fingerprint().
+@dataclasses.dataclass(frozen=True, eq=False)
+class MixingProcess:
+    """A traceable process realizing the coupling matrix W_k each step.
+
+    ``realize(step)`` returns ``(W, support, mask)`` for a traced int32
+    step:
+
+    * ``W``       — (m, m) f32 doubly-stochastic realized mixing matrix;
+    * ``support`` — (m, m) f32 0/1, W's support incl. the diagonal (what
+                    `privacy.sample_B` needs so B^k rides only realized
+                    links);
+    * ``mask``    — (m, m) f32 0/1 symmetric off-diagonal edge mask, or
+                    ``None`` for a statically-known-constant W (the fused
+                    kernel takes the mask and re-weights in VMEM instead
+                    of staging a fresh W from HBM every step).
+
+    ``mode="static"`` — and ``mode="dropout"`` with ``rate == 0.0``, which
+    is the same process — return the EXACT constants of the base
+    `Topology`, so every consumer is bit-identical to the frozen-W path.
+    """
+
+    mode: str
+    topology: Topology
+    rate: float = 0.0            # dropout: per-edge failure probability
+    resample_every: int = 0      # resample: redraw period in steps
+    resample_p: float | None = None  # resample: ER edge probability
+    seed: int = 0                # private key of the draw stream
+
+    def __post_init__(self):
+        if self.mode not in MODES:
+            raise ValueError(f"unknown mixing mode {self.mode!r}; "
+                             f"have {MODES}")
+        if not 0.0 <= self.rate < 1.0:
+            raise ValueError(f"dropout rate must be in [0, 1), "
+                             f"got {self.rate}")
+        # Knobs that don't belong to the mode are refused, not silently
+        # ignored: a stray value would change nothing at runtime yet be
+        # baked into fingerprint(), making behaviorally identical runs
+        # refuse to --resume into each other.
+        if self.mode != "dropout" and self.rate != 0.0:
+            raise ValueError(
+                f"rate is a dropout-mode knob; mode={self.mode!r} ignores "
+                f"rate={self.rate}")
+        if self.mode != "resample" and (self.resample_every != 0
+                                        or self.resample_p is not None):
+            raise ValueError(
+                f"resample_every/resample_p are resample-mode knobs; "
+                f"mode={self.mode!r} ignores them")
+        if self.mode == "resample":
+            if self.resample_every < 1:
+                raise ValueError("mode='resample' needs resample_every >= 1")
+            p = self.edge_prob
+            if not 0.0 < p <= 1.0:
+                raise ValueError(f"resample_p must be in (0, 1], got {p}")
+        self._build_consts()
+
+    # -- static config ----------------------------------------------------
+    @property
+    def num_agents(self) -> int:
+        return self.topology.num_agents
+
+    @property
+    def is_static(self) -> bool:
+        """True when every W_k is the same statically-known constant."""
+        return self.mode == "static" or (self.mode == "dropout"
+                                         and self.rate == 0.0)
+
+    @property
+    def edge_prob(self) -> float:
+        """Resample-mode ER edge probability (defaults to the base graph's
+        off-diagonal edge density, so a redraw preserves expected degree)."""
+        if self.resample_p is not None:
+            return float(self.resample_p)
+        m = self.num_agents
+        off = self.topology.adjacency.sum() - m  # diag is always True
+        return float(off / max(m * (m - 1), 1))
+
+    def fingerprint(self) -> dict:
+        """JSON-stable identity of the mixing config, recorded in
+        checkpoint metadata so ``--resume`` under a different topology or
+        mixing mode fails fast instead of silently walking a different
+        graph (`launch.train`).
+
+        Behaviorally inert knobs are NORMALIZED out: a static process
+        (incl. dropout with rate 0) realizes the same W_k sequence
+        whatever its seed, so static fingerprints report the canonical
+        ``mode="static"`` with a null seed — two bit-identical
+        trajectories must never refuse to resume into each other over a
+        knob that drives nothing.
+        """
+        adj = np.ascontiguousarray(self.topology.adjacency.astype(np.uint8))
+        static = self.is_static
+        return {
+            "mode": "static" if static else self.mode,
+            "num_agents": int(self.num_agents),
+            "base_adjacency_sha256":
+                hashlib.sha256(adj.tobytes()).hexdigest()[:16],
+            "rate": 0.0 if static else float(self.rate),
+            "resample_every": int(self.resample_every),
+            "resample_p": (float(self.edge_prob)
+                           if self.mode == "resample" else None),
+            "seed": None if static else int(self.seed),
+        }
+
+    # -- device constants (built once, closed over by traces) -------------
+    def _build_consts(self) -> None:
+        """Eager, not lazy: `jnp.asarray` under an active jit trace yields
+        that trace's tracer — a lazily-built constant whose first use
+        happened inside one trace would be cached and leak into the next.
+        Built from `__post_init__`, i.e. at construction time, outside any
+        transformation."""
+        adj_off = self.topology.adjacency.astype(np.float32).copy()
+        np.fill_diagonal(adj_off, 0.0)
+        object.__setattr__(self, "_consts", {
+            # THE bit-identity anchor: exactly the constant the frozen-W
+            # path lifted (float64 numpy Metropolis cast once to f32).
+            "W0": jnp.asarray(self.topology.weights, dtype=jnp.float32),
+            "support0": jnp.asarray(self.topology.adjacency,
+                                    dtype=jnp.float32),
+            "adj_off": jnp.asarray(adj_off),
+            "key": jax.random.key(self.seed),
+            "eye": jnp.eye(self.num_agents, dtype=jnp.float32),
+        })
+
+    # -- the realization --------------------------------------------------
+    def realize(self, step: jax.Array):
+        """(W_k, support_k, mask_k) for the traced absolute ``step``.
+
+        Keys fold_in from the ABSOLUTE step index (dropout) or epoch
+        index (resample), never from a carried key: the eager loop, the
+        scanned loop, and a ``--resume`` replay all realize the identical
+        W_k sequence (same random-access contract as `launch.steps.
+        per_step_keys`).
+        """
+        c = self._consts
+        if self.is_static:
+            return c["W0"], c["support0"], None
+        if self.mode == "dropout":
+            k = jax.random.fold_in(c["key"], step)
+            mask = symmetric_edge_mask(k, self.num_agents,
+                                       1.0 - self.rate) * c["adj_off"]
+        else:  # resample: constant within an epoch, redrawn at boundaries
+            epoch = step // jnp.asarray(self.resample_every, step.dtype)
+            k = jax.random.fold_in(c["key"], epoch)
+            mask = symmetric_edge_mask(k, self.num_agents, self.edge_prob)
+        return metropolis_from_mask(mask), mask + c["eye"], mask
+
+    def realized_weights(self, step: int) -> np.ndarray:
+        """Host-side convenience: the realized W_k as numpy (tests/tools)."""
+        W, _, _ = self.realize(jnp.asarray(step, jnp.int32))
+        return np.asarray(W)
+
+
+def make_mixing(topology: Topology, *, rate: float = 0.0,
+                resample_every: int = 0, resample_p: float | None = None,
+                seed: int = 0, mode: str | None = None) -> MixingProcess:
+    """Build a `MixingProcess`, inferring the mode from the knobs:
+    ``resample_every > 0`` -> resample, ``rate > 0`` -> dropout, else
+    static.  Combining dropout with resample is refused — compose
+    explicitly if a scenario ever needs both."""
+    if mode is None:
+        if resample_every > 0 and rate > 0.0:
+            raise ValueError(
+                "dropout and resample are separate modes; set only one of "
+                "rate / resample_every")
+        mode = ("resample" if resample_every > 0
+                else "dropout" if rate > 0.0 else "static")
+    return MixingProcess(mode=mode, topology=topology, rate=rate,
+                         resample_every=resample_every,
+                         resample_p=resample_p, seed=seed)
+
+
+def as_process(topology_or_process) -> MixingProcess:
+    """Canonicalize what step builders accept: a bare `Topology` becomes
+    the static process (bit-identical to the frozen-W contract)."""
+    if isinstance(topology_or_process, MixingProcess):
+        return topology_or_process
+    if isinstance(topology_or_process, Topology):
+        return MixingProcess(mode="static", topology=topology_or_process)
+    raise TypeError(
+        f"expected Topology or MixingProcess, got "
+        f"{type(topology_or_process).__name__}")

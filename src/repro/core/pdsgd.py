@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .mixing import MixingProcess, as_process
 from .privacy import agent_key, leaf_keys, obfuscated_gradient, sample_B
 from .schedules import Schedule
 from .topology import Topology
@@ -129,10 +130,17 @@ def pdsgd_update(
     W: jax.Array,
     support: jax.Array,
     lam_bar: jax.Array,
+    mask: jax.Array | None = None,
     use_pallas: bool | None = None,
     interpret: bool | None = None,
 ) -> Pytree:
-    """One iteration of Eq. (4): x^{k+1} = W x^k - B^k Lambda^k g^k.
+    """One iteration of Eq. (4): x^{k+1} = W_k x^k - B^k Lambda^k g^k.
+
+    ``W``/``support`` are THIS step's realized coupling matrix and its
+    support (constants for a static topology, per-step realizations from
+    `mixing.MixingProcess.realize` for a time-varying one); ``support``
+    is what B^k is sampled on, so the descent term also rides only
+    realized links.
 
     ``use_pallas=True`` routes the whole update through the fused Pallas
     kernels (`kernels.fused_pdsgd_tree`): one flattened pass, u never
@@ -141,6 +149,8 @@ def pdsgd_update(
     identical Lambda^k/B^k draw — `tests/test_fast_path.py` pins them to
     each other.  ``None`` defers to `kernels.default_use_pallas` (True on
     TPU, False under the CPU interpreter where fused is a correctness path).
+    ``mask`` (the realized edge mask) makes the fused path re-derive W_k
+    in VMEM (`kernels.masked_gossip_update`) instead of staging it.
     """
     B = sample_B(agent_key(jax.random.fold_in(key, 2), step, 0), support)
     if use_pallas is None:
@@ -150,7 +160,7 @@ def pdsgd_update(
         from ..kernels import fused_pdsgd_tree
         bits = _per_agent_bits(jax.random.fold_in(key, 1), step, grads)
         return fused_pdsgd_tree(W, B, params, grads, bits, lam_bar,
-                                interpret=interpret)
+                                mask=mask, interpret=interpret)
     u = _per_agent_obfuscated(jax.random.fold_in(key, 1), step, grads, lam_bar)
     mixed = gossip_mix(W, params)
     descent = gossip_mix(B, u)
@@ -223,7 +233,7 @@ def dp_dsgd_update(
 
 def make_decentralized_step(
     loss_fn: Callable[[Pytree, Any], jax.Array],
-    topology: Topology,
+    topology: Topology | MixingProcess,
     schedule: Schedule,
     algorithm: Algorithm = "pdsgd",
     sigma_dp: float = 0.0,
@@ -239,6 +249,13 @@ def make_decentralized_step(
     over the agent axis.  Returns ``step(state, batch, key) -> (state, aux)``
     where batch leaves have a leading (m, ...) axis.
 
+    ``topology`` is a static `Topology` OR a `mixing.MixingProcess`: the
+    step realizes W_k on device from the traced ``state.step`` each
+    iteration (a static topology/process folds to the same frozen-W
+    constants as before, bit-identically).  Because the realization keys
+    fold_in from the absolute step, the eager loop, `make_scanned_steps`,
+    and a ``--resume`` replay all walk the same W_k sequence.
+
     The stepsize schedule is evaluated ON DEVICE from the traced
     ``state.step`` — the returned step performs zero per-iteration host
     syncs and composes with `make_scanned_steps` (the un-jitted traceable
@@ -253,19 +270,19 @@ def make_decentralized_step(
     """
     if algorithm not in ("pdsgd", "dsgd", "dsgt", "dp_dsgd"):
         raise ValueError(f"unknown algorithm {algorithm!r}")
-    W = jnp.asarray(topology.weights, dtype=jnp.float32)
-    support = jnp.asarray(topology.adjacency, dtype=jnp.float32)
+    process = as_process(topology)
 
     grad_fn = jax.vmap(jax.value_and_grad(loss_fn))
 
     def apply_update(state, batch, key, lam_bar):
+        W, support, mask = process.realize(state.step)
         losses, grads = grad_fn(state.params, batch)
         new_tracker = state.tracker
         if algorithm == "pdsgd":
             new_params = pdsgd_update(
                 state.params, grads, key=key, step=state.step, W=W,
-                support=support, lam_bar=lam_bar, use_pallas=use_pallas,
-                interpret=interpret)
+                support=support, lam_bar=lam_bar, mask=mask,
+                use_pallas=use_pallas, interpret=interpret)
         elif algorithm == "dsgd":
             new_params = dsgd_update(state.params, grads, W=W, lam=lam_bar)
         elif algorithm == "dsgt":

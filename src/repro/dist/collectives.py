@@ -34,6 +34,9 @@ __all__ = [
     "torus_weights",
     "torus_gossip_pdsgd",
     "dense_coupling",
+    "directional_keep",
+    "directional_weights",
+    "mask_b_draws",
 ]
 
 Pytree = Any
@@ -96,29 +99,78 @@ def _perm_matrices(n_data: int, n_pod: int) -> list[np.ndarray]:
     return mats
 
 
-def dense_coupling(b: jax.Array, n_data: int, n_pod: int
+def dense_coupling(b: jax.Array, n_data: int, n_pod: int,
+                   W: jax.Array | None = None
                    ) -> tuple[jax.Array, jax.Array]:
     """Materialize the (W, B^k) pair the ring path applies implicitly.
 
-    W is the doubly-stochastic torus Metropolis matrix; B^k is the random
-    column-stochastic matrix realized from the `sample_b_draws` rows.
+    W is the doubly-stochastic torus Metropolis matrix (or, for a
+    time-varying topology, the step's realized W_k passed in — its support
+    must lie inside the torus adjacency); B^k is the random
+    column-stochastic matrix realized from the `sample_b_draws` rows
+    (pre-masked by `mask_b_draws` in the time-varying case, so its support
+    follows the realization automatically).
     """
     m = n_data * n_pod
-    wts = torus_weights(n_data, n_pod)
     mats = _perm_matrices(n_data, n_pod)
     eye = np.eye(m, dtype=np.float32)
-    W = wts["w_self"] * eye + wts["w_edge"] * sum(mats, np.zeros_like(eye))
+    if W is None:
+        wts = torus_weights(n_data, n_pod)
+        W = jnp.asarray(wts["w_self"] * eye
+                        + wts["w_edge"] * sum(mats, np.zeros_like(eye)))
     B = jnp.asarray(eye) * b[None, :, 0]
     for di, Pm in enumerate(mats):
         B = B + jnp.asarray(Pm) * b[None, :, 1 + di]
-    return jnp.asarray(W), B
+    return W, B
+
+
+def directional_keep(support: jax.Array, n_data: int, n_pod: int
+                     ) -> jax.Array:
+    """Per-direction edge survival: keep[j, d] = support[shift_d(j), j].
+
+    ``support`` is the realized (m, m) 0/1 support from
+    `core.mixing.MixingProcess.realize` (diagonal entries are never
+    gathered — a direction's target differs from its source).  Because the
+    dense mask is symmetric, keep[j, d] == keep[i, d_opp] for the edge's
+    other endpoint: sender and receiver agree on every link's fate, which
+    is what keeps the ring exchange consistent with the dense realization.
+    """
+    mats = _perm_matrices(n_data, n_pod)
+    return jnp.stack(
+        [jnp.einsum("ij,ij->j", jnp.asarray(Pm), support) for Pm in mats],
+        axis=1)
+
+
+def directional_weights(W: jax.Array, n_data: int, n_pod: int) -> dict:
+    """Split a realized dense W_k (torus support) into the per-agent tables
+    the ring path consumes: ``w_self`` (m,) = diag(W_k) and ``w_dir``
+    (m, ndirs) with w_dir[j, d] = W_k[shift_d(j), j] — the weight agent j's
+    outgoing v_ij carries toward its direction-d neighbor."""
+    mats = _perm_matrices(n_data, n_pod)
+    w_dir = jnp.stack(
+        [jnp.einsum("ij,ij->j", jnp.asarray(Pm), W) for Pm in mats], axis=1)
+    return {"w_self": jnp.diagonal(W), "w_dir": w_dir}
+
+
+def mask_b_draws(b: jax.Array, keep_dir: jax.Array) -> jax.Array:
+    """Re-normalize `sample_b_draws` rows onto the realized neighbor set:
+    dropped directions get weight zero and the row (self + survivors) is
+    re-scaled to sum to one — the Dirichlet aggregation property keeps the
+    law the same as drawing on the realized support directly, and column
+    stochasticity of the implied B^k is preserved."""
+    scale = jnp.concatenate(
+        [jnp.ones((b.shape[0], 1), b.dtype), keep_dir.astype(b.dtype)],
+        axis=1)
+    e = b * scale
+    return e / e.sum(axis=1, keepdims=True)
 
 
 def torus_gossip_pdsgd(mesh, params: Pytree, u: Pytree, b: jax.Array, *,
                        agent_axes: tuple[str, ...] = ("pod", "data"),
                        n_data: int | None = None,
                        n_pod: int | None = None,
-                       leaf_specs: Pytree | None = None) -> Pytree:
+                       leaf_specs: Pytree | None = None,
+                       W: jax.Array | None = None) -> Pytree:
     """x' = W x - B^k u via neighbor-only exchanges on the mesh torus.
 
     params/u: pytrees with leading agent axis (m, ...); b: (m, 1+ndirs)
@@ -137,6 +189,16 @@ def torus_gossip_pdsgd(mesh, params: Pytree, u: Pytree, b: jax.Array, *,
     elementwise + ppermute over the agent axes only, so any trailing-dim
     sharding passes straight through.  Each spec's first entry must cover
     exactly ``agent_axes``.
+
+    ``W`` selects the time-varying path: the step's realized dense W_k
+    (support inside the torus adjacency, e.g. from
+    `core.mixing.MixingProcess.realize`) replaces the static Metropolis
+    scalars — split into per-agent `directional_weights` tables and
+    sharded like ``b``, so each sender still only touches its own row.
+    Pass ``b`` already masked by `mask_b_draws` so the descent term rides
+    the same realized links; a dropped edge then contributes an exactly
+    zero v_ij (the permute still runs — the collective keeps a static
+    shape under jit — but nothing of x_j or u_j crosses the dead link).
     """
     m = jax.tree.leaves(params)[0].shape[0]
     axes = tuple(a for a in agent_axes
@@ -162,30 +224,47 @@ def torus_gossip_pdsgd(mesh, params: Pytree, u: Pytree, b: jax.Array, *,
     if not mesh_matches:
         # Dense single-host fallback: same math, explicit matrices.
         from ..core.pdsgd import gossip_mix
-        W, B = dense_coupling(b, n_data, n_pod)
-        mixed = gossip_mix(W, params)
+        Wd, B = dense_coupling(b, n_data, n_pod, W=W)
+        mixed = gossip_mix(Wd, params)
         desc = gossip_mix(B, u)
         return jax.tree.map(lambda a, c: a - c, mixed, desc)
 
-    wts = torus_weights(n_data, n_pod)
     agent_spec = axes[0] if len(axes) == 1 else axes
     if leaf_specs is None:
         leaf_spec = jax.tree.map(lambda _: P(agent_spec), params)
     else:
         leaf_spec = leaf_specs
 
-    def body(b_loc, x_loc, u_loc):
-        # One agent per shard: every leaf is (1, ...), b_loc is (1, 1+ndirs).
-        def coeff(col, leaf):
-            return b_loc[:, col].reshape((-1,) + (1,) * (leaf.ndim - 1))
+    if W is None:
+        # Static torus: scalar Metropolis weights, shared by every agent —
+        # the original (bit-anchored) path.
+        wts = torus_weights(n_data, n_pod)
+        w_tab = jnp.broadcast_to(
+            jnp.asarray([wts["w_self"]]
+                        + [wts["w_edge"]] * len(dirs), jnp.float32)[None],
+            (m, 1 + len(dirs)))
+    else:
+        # Time-varying: per-agent weight tables from the realized W_k,
+        # sharded like b so a sender only reads its own row.
+        tabs = directional_weights(W, n_data, n_pod)
+        w_tab = jnp.concatenate([tabs["w_self"][:, None], tabs["w_dir"]],
+                                axis=1)
+
+    def body(b_loc, w_loc, x_loc, u_loc):
+        # One agent per shard: every leaf is (1, ...), b_loc/w_loc are
+        # (1, 1+ndirs) — column 0 is the self term, 1+d the directions.
+        def coeff(tab, col, leaf):
+            return tab[:, col].reshape((-1,) + (1,) * (leaf.ndim - 1))
 
         out = jax.tree.map(
-            lambda x, uu: wts["w_self"] * x - coeff(0, x) * uu, x_loc, u_loc)
+            lambda x, uu: (coeff(w_loc, 0, x) * x
+                           - coeff(b_loc, 0, x) * uu), x_loc, u_loc)
         for di, (axis, size, shift) in enumerate(dirs):
             perm = [(d, (d + shift) % size) for d in range(size)]
             # The sender computes the mixed v_ij; only v crosses the link.
             v = jax.tree.map(
-                lambda x, uu: wts["w_edge"] * x - coeff(1 + di, x) * uu,
+                lambda x, uu: (coeff(w_loc, 1 + di, x) * x
+                               - coeff(b_loc, 1 + di, x) * uu),
                 x_loc, u_loc)
             shifted = jax.tree.map(
                 lambda leaf: jax.lax.ppermute(leaf, axis, perm), v)
@@ -194,7 +273,7 @@ def torus_gossip_pdsgd(mesh, params: Pytree, u: Pytree, b: jax.Array, *,
 
     return shard_map(
         body, mesh=mesh,
-        in_specs=(P(agent_spec), leaf_spec, leaf_spec),
+        in_specs=(P(agent_spec), P(agent_spec), leaf_spec, leaf_spec),
         out_specs=leaf_spec,
         check_rep=False,
-    )(b, params, u)
+    )(b, w_tab, params, u)

@@ -1,4 +1,4 @@
-"""Blocked gossip kernel: x' = W @ X - B @ U over the agent dimension.
+"""Blocked gossip kernels: x' = W @ X - B @ U over the agent dimension.
 
 X/U are (m, n) agent-stacked flattened parameters; W/B are tiny (m, m)
 mixing matrices that live in VMEM for the whole kernel.  The grid tiles n;
@@ -6,6 +6,15 @@ each program does two (m x m) @ (m x bn) MXU matmuls and one subtract —
 fusing the subtraction halves output traffic vs two separate einsums.
 m <= 32 here, so the matmuls are m-padded to the 128-lane MXU; the win is
 traffic, not FLOPs (gossip is memory-bound).
+
+`masked_gossip_update` is the time-varying variant for
+`core.mixing.MixingProcess`: it takes the step's realized EDGE MASK
+instead of a pre-built W_k and performs mask -> Metropolis re-weight ->
+W_k @ X - B @ U inside one pallas_call.  W_k never exists in HBM — the
+(m, m) mask is the only per-step mixing input staged, and the re-weighting
+(two tiny reductions + a divide on an (m, m) VMEM tile) is free next to
+the matmuls.  The formula mirrors `core.mixing.metropolis_from_mask`
+exactly; keep the two in sync.
 """
 from __future__ import annotations
 
@@ -58,3 +67,56 @@ def _gossip_update(W, B, X, U, block_n, interpret):
         out_shape=jax.ShapeDtypeStruct((m, n), X.dtype),
         interpret=interpret,
     )(W, B, X, U)
+
+
+def _masked_gossip_kernel(mask_ref, b_ref, x_ref, u_ref, o_ref):
+    mask = mask_ref[...].astype(jnp.float32)
+    b = b_ref[...].astype(jnp.float32)
+    x = x_ref[...].astype(jnp.float32)
+    u = u_ref[...].astype(jnp.float32)
+    # Metropolis re-weighting in VMEM (== core.mixing.metropolis_from_mask):
+    # w_ij = mask_ij / (1 + max(deg_i, deg_j)), w_ii = 1 - sum_j w_ij.
+    m = mask.shape[0]
+    deg = mask.sum(axis=1)
+    denom = 1.0 + jnp.maximum(deg[:, None], deg[None, :])
+    w = mask / denom
+    # diag via 2D iota: jnp.diag/eye don't lower on the TPU vector units.
+    rows = jax.lax.broadcasted_iota(jnp.int32, (m, m), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (m, m), 1)
+    eye = (rows == cols).astype(jnp.float32)
+    w = w + eye * (1.0 - w.sum(axis=1, keepdims=True))
+    mixed = jnp.dot(w, x, preferred_element_type=jnp.float32)
+    desc = jnp.dot(b, u, preferred_element_type=jnp.float32)
+    o_ref[...] = (mixed - desc).astype(o_ref.dtype)
+
+
+def masked_gossip_update(mask: jax.Array, B: jax.Array, X: jax.Array,
+                         U: jax.Array, block_n: int = DEFAULT_BLOCK_N,
+                         interpret: bool | None = None) -> jax.Array:
+    """x' = metropolis(mask) @ X - B @ U, the mask -> re-weight -> gossip
+    fusion for time-varying topologies.  ``mask`` is the (m, m) symmetric
+    0/1 off-diagonal realized edge mask from `MixingProcess.realize`; the
+    doubly-stochastic W_k is recomputed per program from the VMEM-resident
+    mask and never staged from HBM."""
+    return _masked_gossip_update(mask, B, X, U, block_n=block_n,
+                                 interpret=resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def _masked_gossip_update(mask, B, X, U, block_n, interpret):
+    m, n = X.shape
+    bn = min(block_n, n)
+    assert n % bn == 0, (n, bn)
+    return pl.pallas_call(
+        _masked_gossip_kernel,
+        grid=(n // bn,),
+        in_specs=[
+            pl.BlockSpec((m, m), lambda i: (0, 0)),
+            pl.BlockSpec((m, m), lambda i: (0, 0)),
+            pl.BlockSpec((m, bn), lambda i: (0, i)),
+            pl.BlockSpec((m, bn), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((m, bn), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((m, n), X.dtype),
+        interpret=interpret,
+    )(mask, B, X, U)

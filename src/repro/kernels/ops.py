@@ -12,14 +12,15 @@ import jax
 import jax.numpy as jnp
 
 from .flash_attention import flash_attention
-from .gossip import gossip_update
+from .gossip import gossip_update, masked_gossip_update
 from .obfuscate import obfuscate_update
 from .runtime import default_interpret, default_use_pallas
 from .ssm_scan import ssd_intra_chunk
 
 Pytree = Any
 
-__all__ = ["flash_attention", "gossip_update", "obfuscate_update",
+__all__ = ["flash_attention", "gossip_update", "masked_gossip_update",
+           "obfuscate_update",
            "ssd_intra_chunk", "obfuscate_tree", "gossip_tree",
            "fused_pdsgd_tree", "default_interpret", "default_use_pallas"]
 
@@ -79,6 +80,7 @@ def gossip_tree(W: jax.Array, B: jax.Array, x_tree: Pytree, u_tree: Pytree,
 
 def fused_pdsgd_tree(W: jax.Array, B: jax.Array, x_tree: Pytree,
                      g_tree: Pytree, bits_tree: Pytree, lam_bar,
+                     mask: jax.Array | None = None,
                      interpret: bool | None = None) -> Pytree:
     """Full Eq. (4) update through both fused kernels in one flattened pass:
 
@@ -90,6 +92,11 @@ def fused_pdsgd_tree(W: jax.Array, B: jax.Array, x_tree: Pytree,
     uint32 draws per leaf (same shapes as g_tree) so the realized Lambda is
     bit-identical to the eager `privacy.obfuscated_gradient` path — the
     randomness contract tests rely on this.
+
+    ``mask`` (from `core.mixing.MixingProcess.realize`) selects the
+    time-varying path: the gossip stage becomes `masked_gossip_update`,
+    which re-derives the doubly-stochastic W_k from the realized edge mask
+    in VMEM — ``W`` is ignored and W_k never staged from HBM.
     """
     x_flat, sizes, leaves = _flatten_concat(x_tree)
     g_flat, _, _ = _flatten_concat(g_tree)
@@ -102,7 +109,11 @@ def fused_pdsgd_tree(W: jax.Array, B: jax.Array, x_tree: Pytree,
                               jnp.float32(0.0), jnp.float32(-1.0),
                               block=(x_flat.shape[0], 256),
                               interpret=interpret)
-    out = gossip_update(W, B, x_flat, u_flat, interpret=interpret)
+    if mask is not None:
+        out = masked_gossip_update(mask, B, x_flat, u_flat,
+                                   interpret=interpret)
+    else:
+        out = gossip_update(W, B, x_flat, u_flat, interpret=interpret)
     if pad:
         out = out[:, :-pad]
     return _unflatten(out, sizes, leaves, x_tree)

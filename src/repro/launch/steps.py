@@ -17,6 +17,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core import pdsgd, topology
+from ..core.mixing import MixingProcess
 from ..core.privacy import agent_key, obfuscated_gradient
 from ..dist import collectives
 from ..models.build import ModelBundle
@@ -39,13 +40,23 @@ def per_step_keys(key: jax.Array, start_step: int, n: int) -> jax.Array:
     return jax.vmap(lambda i: jax.random.fold_in(key, i))(steps)
 
 
-def make_torus_W(mesh) -> np.ndarray:
-    """Doubly-stochastic W on the mesh's agent torus (pod ring x data ring),
-    with agent id = pod * n_data + data (matches GSPMD's device order)."""
+def torus_topology(mesh) -> topology.Topology:
+    """The mesh's agent torus as a `Topology` (pod ring x data ring), with
+    agent id = pod * n_data + data (matches GSPMD's device order).  THE
+    single derivation of the mesh agent graph: `make_torus_W`, the
+    `make_train_step` mixing validation, and any
+    `core.mixing.MixingProcess` for `make_train_step(mixing=...)` must all
+    come from here."""
     n_pod = mesh.shape.get("pod", 1)
     n_data = mesh.shape.get("data", 1)
     adj = topology.torus2d(n_pod, n_data)
-    return topology.metropolis_weights(adj)
+    return topology.Topology(name="mesh_torus", adjacency=adj,
+                             weights=topology.metropolis_weights(adj))
+
+
+def make_torus_W(mesh) -> np.ndarray:
+    """Doubly-stochastic W on the mesh's agent torus."""
+    return torus_topology(mesh).weights
 
 
 def dsgt_carry(params: Pytree) -> tuple[Pytree, tuple[Pytree, Pytree]]:
@@ -63,12 +74,25 @@ def dsgt_carry(params: Pytree) -> tuple[Pytree, tuple[Pytree, Pytree]]:
 def make_train_step(bundle: ModelBundle, mesh,
                     gossip: Literal["dense", "ring"] = "dense",
                     algorithm: str = "pdsgd", lam_base: float = 0.1,
-                    use_pallas: bool = False):
+                    use_pallas: bool = False,
+                    mixing: MixingProcess | None = None):
     """Returns train_step(params, batch, key, step) -> (params, loss).
 
     lam_bar follows the paper's 1/k schedule from `lam_base`; the random
     per-element stepsizes Lambda and mixing coefficients B are drawn inside
     the step from fold_in-derived per-agent keys.
+
+    ``mixing`` (a `core.mixing.MixingProcess` built on `torus_topology
+    (mesh)`) makes the coupling time-varying: W_k/support_k are realized in
+    trace from the absolute ``step`` and both gossip schedules follow the
+    same realization — the dense einsum uses the realized matrices, the
+    ring path re-weights its per-direction ppermute contributions and
+    re-normalizes the B^k draws onto the surviving links
+    (`collectives.mask_b_draws`), so a dropped edge carries an exactly
+    zero v_ij.  ``None`` keeps the frozen torus Metropolis W (bit-identical
+    to before), as does a static/rate-0 process.  ``mode="resample"``
+    redraws the graph itself and is dense-only (an ER redraw is not
+    torus-supported, so the ring schedule cannot carry it).
 
     ``algorithm="dsgt"`` (the gradient-tracking communication baseline)
     swaps the first argument for a carry ``(params, (y_prev, g_prev))``
@@ -93,11 +117,38 @@ def make_train_step(bundle: ModelBundle, mesh,
             "a second gossiped variable; the ring pipeline carries one)")
     m = num_agents(mesh)
     axes = agent_axes(mesh)
-    W_np = make_torus_W(mesh)
-    W = jnp.asarray(W_np, jnp.float32)
-    support = jnp.asarray(W_np > 0, jnp.float32)
+    torus = torus_topology(mesh)
+    W0 = jnp.asarray(torus.weights, jnp.float32)
+    support0 = jnp.asarray(torus.adjacency, jnp.float32)
     n_data = mesh.shape.get("data", 1)
     n_pod = mesh.shape.get("pod", 1)
+
+    if mixing is not None:
+        if mixing.mode == "resample" and gossip == "ring":
+            raise ValueError(
+                "mixing mode='resample' redraws the graph off the torus "
+                "support; the ring schedule cannot carry it — use "
+                "gossip='dense'")
+        if (mixing.num_agents != m
+                or not np.array_equal(mixing.topology.adjacency,
+                                      torus.adjacency)):
+            # Refused even for a static process: this step's agent graph
+            # IS the mesh torus, and silently swapping in the torus W for
+            # a process built on some other base would hide a config bug.
+            raise ValueError(
+                "mixing process must be built on this mesh's agent torus "
+                "(see launch.steps.torus_topology)")
+
+    def realize(step):
+        if mixing is None:
+            return W0, support0, None
+        # A static process returns ITS OWN constants (Topology.validate
+        # admits any doubly-stochastic weights on the torus support, e.g.
+        # a lazy Metropolis variant — substituting W0 here would silently
+        # train a different mixing matrix than configured).  A process
+        # built on `torus_topology(mesh)` carries exactly W0, so the
+        # default remains bit-identical.
+        return mixing.realize(step)
 
     ring_specs = None
     if gossip == "ring":
@@ -117,6 +168,7 @@ def make_train_step(bundle: ModelBundle, mesh,
     def train_step(params, batch, seed, step):
         key = jax.random.key(seed)
         lam_bar = lam_base / (step.astype(jnp.float32) + 1.0)
+        W, support, mask = realize(step)
         if algorithm == "dsgt":
             params, (y_prev, g_prev) = params
         losses, grads = grad_fn(params, batch)
@@ -134,16 +186,30 @@ def make_train_step(bundle: ModelBundle, mesh,
             if gossip == "dense":
                 new_params = pdsgd.pdsgd_update(
                     params, grads, key=key, step=step, W=W, support=support,
-                    lam_bar=lam_bar, use_pallas=use_pallas)
+                    lam_bar=lam_bar, mask=mask, use_pallas=use_pallas)
             else:
                 u = pdsgd._per_agent_obfuscated(
                     jax.random.fold_in(key, 1), step, grads, lam_bar)
                 b = collectives.sample_b_draws(
                     agent_key(jax.random.fold_in(key, 2), step, 0),
                     m, n_data, n_pod)
+                W_k = None
+                if mask is not None:
+                    keep = collectives.directional_keep(support, n_data,
+                                                        n_pod)
+                    b = collectives.mask_b_draws(b, keep)
+                    W_k = W
+                elif mixing is not None:
+                    # Static process: honor ITS weights via the per-agent
+                    # table path (no b re-normalization — the full-support
+                    # renormalize would only add f32 noise).  For the
+                    # standard torus process W == W0 and the table path is
+                    # bit-equal to the scalar path (pinned by the
+                    # multi-device subprocess test).
+                    W_k = W
                 new_params = collectives.torus_gossip_pdsgd(
                     mesh, params, u, b, agent_axes=axes,
-                    leaf_specs=ring_specs)
+                    leaf_specs=ring_specs, W=W_k)
         elif algorithm == "dsgd":
             new_params = pdsgd.dsgd_update(params, grads, W=W, lam=lam_bar)
         else:

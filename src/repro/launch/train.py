@@ -15,6 +15,14 @@ one-dispatch-per-step loop; both walk bit-identical trajectories because
 batches come from the random-access `DataPipeline.batch_at` and per-step
 keys are fold_in-derived from the absolute step index.
 
+``--topology-dropout`` / ``--topology-resample-every`` make the coupling
+time-varying (`core.mixing.MixingProcess`): W_k is realized on device each
+step from the absolute step index, so both loops and ``--resume`` walk the
+identical W_k sequence.  The mixing config is fingerprinted into each
+checkpoint's metadata and a resume under different ``--topology*`` flags
+fails fast.  ``--topology-p`` / ``--topology-seed`` parameterize the
+``erdos`` base graph.
+
 Checkpoints persist the FULL `DecentralizedState` — params, the step
 counter, and any algorithm tracker — so ``--resume`` continues schedules
 and, critically, never re-derives `privacy.agent_key(key, step, agent)` for
@@ -38,10 +46,11 @@ import time
 
 import jax
 
-from ..checkpoint import CheckpointManager, latest_step, load_checkpoint
+from ..checkpoint import (CheckpointManager, latest_step, load_checkpoint,
+                          read_run_meta)
 from ..configs import get_config
-from ..core import (init_state, make_decentralized_step, make_scanned_steps,
-                    make_topology)
+from ..core import (init_state, make_decentralized_step, make_mixing,
+                    make_scanned_steps, make_topology)
 from ..core.schedules import warmup_harmonic
 from ..data import make_lm_pipeline, make_placer, prefetch_chunks
 from ..models import build_model
@@ -53,6 +62,19 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--arch", default="xlstm-125m-smoke")
     p.add_argument("--agents", type=int, default=4)
     p.add_argument("--topology", default="ring")
+    p.add_argument("--topology-p", type=float, default=0.4,
+                   help="edge probability for --topology erdos")
+    p.add_argument("--topology-seed", type=int, default=None,
+                   help="graph seed for --topology erdos and the "
+                        "time-varying mixing draw stream "
+                        "(default: --seed)")
+    p.add_argument("--topology-dropout", type=float, default=0.0,
+                   help="per-step probability that each link fails "
+                        "(time-varying W_k with in-trace Metropolis "
+                        "re-weighting; 0 = static)")
+    p.add_argument("--topology-resample-every", type=int, default=0,
+                   help="redraw the graph as Erdos-Renyi every N steps "
+                        "(0 = never); exclusive with --topology-dropout")
     p.add_argument("--algorithm", default="pdsgd",
                    choices=["pdsgd", "dsgd", "dsgt", "dp_dsgd"])
     p.add_argument("--steps", type=int, default=100)
@@ -84,6 +106,24 @@ def build_parser() -> argparse.ArgumentParser:
     return p
 
 
+def build_mixing(args):
+    """The run's `MixingProcess` from the CLI topology knobs.
+
+    ``--topology-p`` / ``--topology-seed`` reach `make_topology` (the seed
+    CLI used to drop them: every erdos run silently got p=0.4, seed=0);
+    the same seed drives the time-varying draw stream so a run is fully
+    reproducible from its flags.  Factored out of `run_training` so tests
+    can pin the wiring without building a model.
+    """
+    topo_seed = args.topology_seed if args.topology_seed is not None \
+        else args.seed
+    top = make_topology(args.topology, args.agents, p=args.topology_p,
+                        seed=topo_seed)
+    return make_mixing(top, rate=args.topology_dropout,
+                       resample_every=args.topology_resample_every,
+                       seed=topo_seed)
+
+
 def run_training(args, mesh=None) -> dict:
     """Run the driver loop; returns {state, history, resumed_from}.
 
@@ -92,9 +132,9 @@ def run_training(args, mesh=None) -> dict:
     """
     cfg = get_config(args.arch)
     bundle = build_model(cfg)
-    top = make_topology(args.topology, args.agents)
+    mixing = build_mixing(args)
     sched = warmup_harmonic(args.lr, hold=args.warmup_hold)
-    step = make_decentralized_step(bundle.loss_fn, top, sched,
+    step = make_decentralized_step(bundle.loss_fn, mixing, sched,
                                    algorithm=args.algorithm,
                                    sigma_dp=args.sigma_dp)
     pipeline = make_lm_pipeline(cfg.vocab_size, args.agents,
@@ -118,12 +158,14 @@ def run_training(args, mesh=None) -> dict:
     # checkpoints must neither poison retention GC nor get handed to a
     # later --resume.
     manager = None
+    mixing_fp = mixing.fingerprint()
     if args.checkpoint_dir:
         manager = CheckpointManager(args.checkpoint_dir,
                                     keep_last=args.keep_last,
                                     keep_every=args.keep_every,
                                     async_writes=not args.checkpoint_sync,
-                                    fresh=not args.resume)
+                                    fresh=not args.resume,
+                                    run_meta={"mixing": mixing_fp})
 
     start = 0
     history: list[dict] = []
@@ -160,6 +202,26 @@ def run_training(args, mesh=None) -> dict:
                     f"--resume: no checkpoint found under "
                     f"{args.checkpoint_dir!r}; drop --resume for a fresh "
                     "run")
+            stored_fp = read_run_meta(args.checkpoint_dir,
+                                      last).get("mixing")
+            if stored_fp is None:
+                # Pre-fingerprint checkpoint: consistency CANNOT be
+                # verified (notably `--topology erdos` runs, whose graph
+                # seed the old CLI silently pinned to 0) — warn loudly
+                # instead of silently proceeding.
+                print(json.dumps({
+                    "warning": "checkpoint records no mixing fingerprint "
+                               "(written pre-PR4); cannot verify the "
+                               "--topology* flags match the original run"}))
+            elif stored_fp != mixing_fp:
+                # A resumed run walking a DIFFERENT graph/mixing stream
+                # would silently diverge from the trajectory it claims to
+                # continue (and re-key W_k draws) — refuse loudly.
+                raise ValueError(
+                    f"--resume: checkpoint step_{last:08d} was written "
+                    f"with mixing config {stored_fp}, but this run built "
+                    f"{mixing_fp}; pass matching --topology* flags (or "
+                    "start a fresh run without --resume)")
             state = load_checkpoint(args.checkpoint_dir, last, like=state)
             if int(state.step) != last:
                 # batches/keys would be driven by the directory index while

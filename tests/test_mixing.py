@@ -1,0 +1,507 @@
+"""The time-varying mixing subsystem (`repro.core.mixing`).
+
+Three contracts pinned here:
+
+1. **Assumption 2 per realization** — every realized W_k (dropout or
+   resample, any draw) is doubly stochastic and symmetric with w_ii > 0,
+   support inside the allowed graph, and the base graph is recovered in
+   expectation (connectivity-in-expectation).
+2. **Static bit-identity** — `MixingProcess(mode="static")` and
+   ``mode="dropout"`` with rate 0 walk bit-for-bit the trajectory of the
+   frozen-`Topology` path on every execution path: eager, fused Pallas,
+   scanned, and the ring schedule (dense fallback here; the true
+   shard_map ppermute path runs in a 16-fake-device subprocess).
+3. **Path agreement under dropout** — the eager jnp realization, the
+   fused mask->reweight->gossip Pallas kernel, and the masked ring
+   exchange all apply the SAME realized W_k.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core import (init_state, make_decentralized_step, make_mixing,
+                        make_scanned_steps, make_topology, gossip_mix)
+from repro.core import mixing as MX
+from repro.core import schedules as S
+from repro.core.topology import (Topology, erdos_renyi, metropolis_weights,
+                                 spectral_gap, torus2d)
+from repro.dist import collectives as C
+
+
+def _step_i32(k):
+    return jnp.asarray(k, jnp.int32)
+
+
+def _check_realization(Wn, base_adj):
+    m = Wn.shape[0]
+    assert np.allclose(Wn.sum(0), 1.0, atol=1e-6)
+    assert np.allclose(Wn.sum(1), 1.0, atol=1e-6)
+    assert np.all(np.diag(Wn) > 0)
+    assert np.allclose(Wn, Wn.T, atol=1e-7)
+    off = Wn.copy()
+    np.fill_diagonal(off, 0.0)
+    if base_adj is not None:
+        base_off = base_adj & ~np.eye(m, dtype=bool)
+        assert np.all((off > 0) <= base_off), "support escaped base graph"
+
+
+# -- 1. per-realization Assumption 2 ------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(m=st.integers(4, 16), rate10=st.integers(0, 9),
+       seed=st.integers(0, 1000))
+def test_dropout_realizations_doubly_stochastic(m, rate10, seed):
+    adj = erdos_renyi(m, p=0.5, seed=seed)
+    top = Topology(name="er", adjacency=adj,
+                   weights=metropolis_weights(adj))
+    proc = make_mixing(top, rate=rate10 / 10.0, seed=seed)
+    for k in (0, 1, 17):
+        W, support, mask = proc.realize(_step_i32(k))
+        _check_realization(np.asarray(W), adj)
+        # support is exactly where W is nonzero (incl. diagonal)
+        assert np.array_equal(np.asarray(support) > 0, np.asarray(W) > 0)
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=st.integers(4, 12), seed=st.integers(0, 1000))
+def test_resample_realizations_doubly_stochastic(m, seed):
+    top = make_topology("complete", m)
+    proc = make_mixing(top, resample_every=3, resample_p=0.5, seed=seed)
+    for k in (0, 2, 3, 10):
+        W, _, _ = proc.realize(_step_i32(k))
+        _check_realization(np.asarray(W), None)
+
+
+def test_dropout_connected_in_expectation():
+    """Every base edge survives with prob 1-rate > 0, so the EXPECTED
+    realized graph is the base graph: the averaged W over draws has the
+    full base support and rho < 1 whenever the base graph is connected."""
+    top = make_topology("paper_fig1", 5)
+    proc = make_mixing(top, rate=0.4, seed=0)
+    Ws = np.stack([np.asarray(proc.realize(_step_i32(k))[0])
+                   for k in range(64)])
+    W_bar = Ws.mean(0)
+    assert np.array_equal(W_bar > 0, np.asarray(top.adjacency))
+    assert spectral_gap(W_bar) < 1.0
+    # and the draw actually varies step to step
+    assert not np.array_equal(Ws[0], Ws[1])
+
+
+def test_metropolis_from_mask_matches_host_metropolis():
+    """The in-trace re-weighting agrees with the numpy builder on the same
+    (sub)graph — only the f64->f32 rounding of the host path separates
+    them."""
+    adj = erdos_renyi(9, p=0.5, seed=3)
+    off = adj & ~np.eye(9, dtype=bool)
+    W = np.asarray(MX.metropolis_from_mask(jnp.asarray(off, jnp.float32)))
+    np.testing.assert_allclose(W, metropolis_weights(adj).astype(np.float32),
+                               atol=1e-6)
+
+
+def test_symmetric_edge_mask_is_symmetric_offdiag():
+    mask = np.asarray(MX.symmetric_edge_mask(jax.random.key(0), 8, 0.5))
+    assert np.array_equal(mask, mask.T)
+    assert np.all(np.diag(mask) == 0)
+    assert set(np.unique(mask)) <= {0.0, 1.0}
+
+
+def test_resample_epoch_structure():
+    proc = make_mixing(make_topology("complete", 6), resample_every=4,
+                       resample_p=0.6, seed=1)
+    W0, W3, W4 = (proc.realized_weights(k) for k in (0, 3, 4))
+    np.testing.assert_array_equal(W0, W3)   # same epoch
+    assert not np.array_equal(W0, W4)       # redrawn at the boundary
+
+
+# -- 2. static / rate-0 bit-identity on every path ----------------------
+
+def _quadratic(m=5, d=3):
+    top = make_topology("paper_fig1", m)
+    rng = np.random.default_rng(0)
+    batch = jnp.asarray(rng.normal(size=(m, d)).astype(np.float32))
+
+    def loss(p, b):
+        return jnp.sum((p - b) ** 2)
+
+    return top, loss, batch, d
+
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+@pytest.mark.parametrize("make_proc", [
+    lambda top: MX.MixingProcess(mode="static", topology=top),
+    lambda top: make_mixing(top, rate=0.0),
+], ids=["static", "dropout0"])
+def test_process_bit_identical_to_frozen_topology(use_pallas, make_proc):
+    """Eager and fused-Pallas paths: the process-built step walks the
+    EXACT trajectory of the frozen-Topology step."""
+    top, loss, batch, d = _quadratic()
+    kw = dict(use_pallas=use_pallas, donate=False)
+    step_t = make_decentralized_step(loss, top, S.paper_experiment(0.1), **kw)
+    step_p = make_decentralized_step(loss, make_proc(top),
+                                     S.paper_experiment(0.1), **kw)
+    a = init_state(jnp.zeros((d,)), top.num_agents)
+    b = init_state(jnp.zeros((d,)), top.num_agents)
+    for i in range(8):
+        key = jax.random.key(i)
+        a, aux_a = step_t(a, batch, key)
+        b, aux_b = step_p(b, batch, key)
+    np.testing.assert_array_equal(np.asarray(a.params), np.asarray(b.params))
+    assert float(aux_a["loss"]) == float(aux_b["loss"])
+
+
+def test_process_bit_identical_scanned():
+    top, loss, batch, d = _quadratic()
+    n = 10
+    keys = jax.random.split(jax.random.key(4), n)
+    batches = jnp.broadcast_to(batch[None], (n,) + batch.shape)
+
+    def run(topology_or_process):
+        step = make_decentralized_step(loss, topology_or_process,
+                                       S.harmonic(0.2))
+        scanned = make_scanned_steps(step, n)
+        state, aux = scanned(init_state(jnp.zeros((d,)), top.num_agents),
+                             batches, keys)
+        return np.asarray(jax.tree.leaves(state.params)[0])
+
+    np.testing.assert_array_equal(run(top), run(make_mixing(top, rate=0.0)))
+
+
+def test_ring_dense_fallback_static_process_bit_identical():
+    """Ring schedule (single-host dense fallback): passing the static W0
+    explicitly must reproduce the scalar-weight path bit-for-bit."""
+    n_pod, n_data = 2, 4
+    m = n_pod * n_data
+    adj = torus2d(n_pod, n_data)
+    top = Topology(name="torus", adjacency=adj,
+                   weights=metropolis_weights(adj))
+    rng = np.random.default_rng(1)
+    params = {"w": jnp.asarray(rng.normal(size=(m, 4)).astype(np.float32))}
+    u = {"w": jnp.asarray(rng.normal(size=(m, 4)).astype(np.float32))}
+    b = C.sample_b_draws(jax.random.key(0), m, n_data, n_pod)
+    out0 = C.torus_gossip_pdsgd(None, params, u, b,
+                                n_data=n_data, n_pod=n_pod)
+    W0 = jnp.asarray(top.weights, jnp.float32)
+    out1 = C.torus_gossip_pdsgd(None, params, u, b,
+                                n_data=n_data, n_pod=n_pod, W=W0)
+    np.testing.assert_allclose(np.asarray(out0["w"]), np.asarray(out1["w"]),
+                               rtol=1e-6, atol=1e-7)
+
+
+# -- 3. path agreement under dropout ------------------------------------
+
+def test_dropout_fused_matches_eager_trajectory():
+    top, loss, batch, d = _quadratic()
+    proc = make_mixing(top, rate=0.3, seed=2)
+    step_e = make_decentralized_step(loss, proc, S.paper_experiment(0.1),
+                                     use_pallas=False)
+    step_f = make_decentralized_step(loss, proc, S.paper_experiment(0.1),
+                                     use_pallas=True)
+    a = init_state(jnp.zeros((d,)), top.num_agents)
+    b = init_state(jnp.zeros((d,)), top.num_agents)
+    for i in range(8):
+        key = jax.random.key(i)
+        a, _ = step_e(a, batch, key)
+        b, _ = step_f(b, batch, key)
+    np.testing.assert_allclose(np.asarray(a.params), np.asarray(b.params),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_masked_gossip_kernel_matches_reference():
+    from repro.kernels import masked_gossip_update
+    rng = np.random.default_rng(0)
+    m, n = 8, 1024
+    adj = erdos_renyi(m, p=0.6, seed=0)
+    off = (adj & ~np.eye(m, dtype=bool)).astype(np.float32)
+    drop = rng.random((m, m)) < 0.4
+    drop = np.triu(drop, 1); drop = drop | drop.T
+    mask = jnp.asarray(off * ~drop)
+    B = jnp.asarray(rng.dirichlet(np.ones(m), m).T.astype(np.float32))
+    X = jnp.asarray(rng.normal(size=(m, n)).astype(np.float32))
+    U = jnp.asarray(rng.normal(size=(m, n)).astype(np.float32))
+    out = masked_gossip_update(mask, B, X, U)
+    W = MX.metropolis_from_mask(mask)
+    ref = W @ X - B @ U
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_ring_masked_matches_dense_realization():
+    """Single-host fallback: the masked ring coupling (per-direction
+    weights + re-normalized b) equals the dense realized (W_k, B_k)."""
+    n_pod, n_data = 2, 4
+    m = n_pod * n_data
+    adj = torus2d(n_pod, n_data)
+    top = Topology(name="torus", adjacency=adj,
+                   weights=metropolis_weights(adj))
+    proc = make_mixing(top, rate=0.35, seed=7)
+    W, support, mask = proc.realize(_step_i32(11))
+    rng = np.random.default_rng(2)
+    params = {"w": jnp.asarray(rng.normal(size=(m, 6, 2)).astype(np.float32))}
+    u = {"w": jnp.asarray(rng.normal(size=(m, 6, 2)).astype(np.float32))}
+    b = C.sample_b_draws(jax.random.key(0), m, n_data, n_pod)
+    keep = C.directional_keep(support, n_data, n_pod)
+    bm = C.mask_b_draws(b, keep)
+    out = C.torus_gossip_pdsgd(None, params, u, bm,
+                               n_data=n_data, n_pod=n_pod, W=W)
+    Wd, B = C.dense_coupling(bm, n_data, n_pod, W=W)
+    ref = jax.tree.map(lambda a, c: a - c, gossip_mix(Wd, params),
+                       gossip_mix(B, u))
+    np.testing.assert_allclose(np.asarray(out["w"]), np.asarray(ref["w"]),
+                               rtol=1e-6, atol=1e-6)
+    # the realized B^k stays column-stochastic on the realized support
+    Bn = np.asarray(B)
+    np.testing.assert_allclose(Bn.sum(0), np.ones(m), rtol=1e-6)
+    assert np.all((Bn > 0) <= (np.asarray(support) > 0))
+
+
+_RING_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
+    import sys; sys.path.insert(0, {src!r})
+    import json
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.core import make_mixing, gossip_mix
+    from repro.core.topology import Topology, metropolis_weights, torus2d
+    from repro.dist import collectives as C
+    mesh = jax.make_mesh((2, 4, 2), ("pod", "data", "model"))
+    m, n_pod, n_data = 8, 2, 4
+    adj = torus2d(n_pod, n_data)
+    top = Topology(name="torus", adjacency=adj,
+                   weights=metropolis_weights(adj))
+    proc = make_mixing(top, rate=0.3, seed=5)
+    W, support, mask = proc.realize(jnp.asarray(7, jnp.int32))
+    rng = np.random.default_rng(0)
+    params = {{"w": jnp.asarray(rng.normal(size=(m, 6, 4)).astype(np.float32))}}
+    grads = {{"w": jnp.asarray(rng.normal(size=(m, 6, 4)).astype(np.float32))}}
+    b = C.sample_b_draws(jax.random.key(0), m, n_data, n_pod)
+    bm = C.mask_b_draws(b, C.directional_keep(support, n_data, n_pod))
+    sh = NamedSharding(mesh, P(("pod", "data"), None, None))
+    ps = jax.tree.map(lambda x: jax.device_put(x, sh), params)
+    gs = jax.tree.map(lambda x: jax.device_put(x, sh), grads)
+    out = jax.jit(lambda p, g, b, W: C.torus_gossip_pdsgd(
+        mesh, p, g, b, agent_axes=("pod", "data"), W=W))(ps, gs, bm, W)
+    Wd, B = C.dense_coupling(bm, n_data, n_pod, W=W)
+    ref = jax.tree.map(lambda a, c: a - c, gossip_mix(Wd, params),
+                       gossip_mix(B, grads))
+    err = float(np.abs(np.asarray(out["w"]) - np.asarray(ref["w"])).max())
+    # static: the per-agent table path must bit-match the scalar path
+    out0 = jax.jit(lambda p, g, b: C.torus_gossip_pdsgd(
+        mesh, p, g, b, agent_axes=("pod", "data")))(ps, gs, b)
+    W0 = jnp.asarray(top.weights, jnp.float32)
+    outW = jax.jit(lambda p, g, b, W: C.torus_gossip_pdsgd(
+        mesh, p, g, b, agent_axes=("pod", "data"), W=W))(ps, gs, b, W0)
+    bit = bool(np.array_equal(np.asarray(out0["w"]), np.asarray(outW["w"])))
+    print(json.dumps({{"err": err, "static_bit_equal": bit}}))
+""")
+
+
+def test_ring_shard_map_masked_matches_dense_multidevice():
+    """The REAL shard_map ppermute path under 16 fake devices: masked ring
+    == dense realization, and the static table path bit-matches the
+    scalar path (subprocess — the main test process keeps one device)."""
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    script = _RING_SCRIPT.format(src=os.path.abspath(src))
+    out = subprocess.run([sys.executable, "-c", script], capture_output=True,
+                         text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert res["err"] < 1e-5
+    assert res["static_bit_equal"] is True
+
+
+def test_dropout_converges_on_estimation_problem():
+    """Fig. 2 workload with unreliable links: PDSGD under 30% per-step
+    link dropout still drives the mean estimate to theta_opt."""
+    from repro.data import estimation_problem
+    m, d = 5, 2
+    top = make_topology("paper_fig1", m)
+    prob = estimation_problem(m, d=d, s=3, n_per_agent=100, seed=0)
+    Z, M = jnp.asarray(prob["Z"]), jnp.asarray(prob["M"])
+
+    def loss_fn(p, batch):
+        z, Mi = batch
+        return jnp.mean(jnp.sum((z - p @ Mi.T) ** 2, -1))
+
+    proc = make_mixing(top, rate=0.3, seed=3)
+    step = make_decentralized_step(loss_fn, proc, S.paper_experiment(0.05))
+    state = init_state(jnp.zeros((d,)), m)
+    key = jax.random.key(0)
+    rng = np.random.default_rng(0)
+    for k in range(800):
+        idx = jnp.asarray(rng.integers(0, 100, (m, 8)))
+        state, aux = step(state, (Z[jnp.arange(m)[:, None], idx], M),
+                          jax.random.fold_in(key, k))
+    xbar = np.asarray(jax.tree.leaves(state.params)[0]).mean(0)
+    err = float(np.linalg.norm(xbar - prob["theta_opt"]))
+    assert err < 0.25, err
+    assert float(aux["consensus_error"]) < 0.1
+
+
+class _FakeMesh:
+    """Duck-typed mesh: the dense-gossip path of make_train_step only reads
+    .shape (a dict), so no multi-device runtime is needed."""
+
+    def __init__(self, **axes):
+        self.shape = axes
+
+
+def test_make_train_step_mixing_dense():
+    """Mesh-path wiring: a static process is bit-identical to mixing=None,
+    a dropout process trains, and a process on the wrong base graph (or
+    resample over the ring schedule) is refused."""
+    import types
+
+    from repro.launch.steps import make_train_step, torus_topology
+    m, d = 4, 3
+    mesh = _FakeMesh(data=m, model=1)
+    tt = torus_topology(mesh)
+    bundle = types.SimpleNamespace(
+        loss_fn=lambda p, b: jnp.mean(jnp.sum((p - b) ** 2, -1)))
+    rng = np.random.default_rng(0)
+    targets = jnp.asarray(rng.normal(size=(m, d)).astype(np.float32))
+
+    def run(mixing):
+        step = jax.jit(make_train_step(bundle, mesh, mixing=mixing,
+                                       lam_base=0.1))
+        p = jnp.zeros((m, d))
+        for k in range(6):
+            p, loss = step(p, targets, jnp.int32(0), jnp.int32(k))
+        return np.asarray(p), float(loss)
+
+    p_none, _ = run(None)
+    p_stat, _ = run(make_mixing(tt))
+    np.testing.assert_array_equal(p_none, p_stat)
+
+    p_drop, loss_drop = run(make_mixing(tt, rate=0.3, seed=1))
+    assert not np.array_equal(p_none, p_drop)
+    assert np.isfinite(loss_drop)
+
+    with pytest.raises(ValueError, match="agent torus"):
+        make_train_step(bundle, mesh,
+                        mixing=make_mixing(make_topology("complete", m)))
+    with pytest.raises(ValueError, match="resample"):
+        make_train_step(bundle, mesh, gossip="ring",
+                        mixing=make_mixing(tt, resample_every=4))
+
+
+# -- config / driver plumbing -------------------------------------------
+
+def test_make_mixing_validation():
+    top = make_topology("ring", 4)
+    with pytest.raises(ValueError, match="separate modes"):
+        make_mixing(top, rate=0.2, resample_every=5)
+    with pytest.raises(ValueError, match="rate"):
+        make_mixing(top, rate=1.0)
+    with pytest.raises(ValueError, match="resample_every"):
+        MX.MixingProcess(mode="resample", topology=top)
+    with pytest.raises(ValueError, match="unknown mixing mode"):
+        MX.MixingProcess(mode="bogus", topology=top)
+    # a knob foreign to the explicit mode is refused, not silently ignored
+    # (a stray value would be fingerprinted and break --resume matching)
+    with pytest.raises(ValueError, match="dropout-mode knob"):
+        make_mixing(top, rate=0.2, resample_every=10, mode="resample")
+    with pytest.raises(ValueError, match="resample-mode knobs"):
+        make_mixing(top, rate=0.2, resample_every=10, mode="dropout")
+    with pytest.raises(ValueError, match="resample-mode knobs"):
+        make_mixing(top, resample_p=0.5)
+    with pytest.raises(TypeError):
+        MX.as_process(np.ones((3, 3)))
+    assert MX.as_process(top).is_static
+    assert make_mixing(top, rate=0.0).is_static
+    assert not make_mixing(top, rate=0.1).is_static
+
+
+def test_fingerprint_identity():
+    top = make_topology("paper_fig1", 5)
+    a = make_mixing(top, rate=0.2, seed=1).fingerprint()
+    b = make_mixing(top, rate=0.2, seed=1).fingerprint()
+    assert a == b
+    assert a == json.loads(json.dumps(a))  # JSON-stable
+    assert a != make_mixing(top, rate=0.3, seed=1).fingerprint()
+    assert a != make_mixing(top, rate=0.2, seed=2).fingerprint()
+    other = make_topology("ring", 5)
+    assert a != make_mixing(other, rate=0.2, seed=1).fingerprint()
+
+
+def test_fingerprint_normalizes_inert_knobs():
+    """Behaviorally identical static configs must fingerprint equal: the
+    seed drives no draw stream in static mode, and dropout rate 0 IS the
+    static process — neither may block a --resume of the same
+    trajectory."""
+    top = make_topology("paper_fig1", 5)
+    base = make_mixing(top).fingerprint()
+    assert make_mixing(top, seed=3).fingerprint() == base
+    assert make_mixing(top, rate=0.0, seed=7).fingerprint() == base
+    assert base["mode"] == "static" and base["seed"] is None
+
+
+def test_build_mixing_cli_wiring():
+    """--topology-p / --topology-seed reach the erdos builder (the seed CLI
+    silently dropped them: every run got p=0.4, seed=0) and the mixing
+    seed defaults to --seed."""
+    from repro.launch.train import build_mixing, build_parser
+    base = ["--agents", "12", "--topology", "erdos"]
+    args = build_parser().parse_args(base + ["--topology-p", "0.9",
+                                             "--seed", "5"])
+    dense = build_mixing(args)
+    sparse = build_mixing(build_parser().parse_args(
+        base + ["--topology-p", "0.2", "--seed", "5"]))
+    assert dense.topology.adjacency.sum() > sparse.topology.adjacency.sum()
+    assert dense.seed == 5  # defaulted from --seed
+    reseeded = build_mixing(build_parser().parse_args(
+        base + ["--topology-p", "0.9", "--seed", "5",
+                "--topology-seed", "6"]))
+    assert reseeded.seed == 6
+    assert not np.array_equal(reseeded.topology.adjacency,
+                              dense.topology.adjacency)
+
+
+def test_checkpoint_records_and_rejects_mixing_fingerprint(tmp_path):
+    """Satellite: --resume under a different mixing config fails fast
+    instead of silently walking a different graph."""
+    from repro.checkpoint import read_run_meta
+    from repro.launch.train import build_parser, run_training
+    base = ["--arch", "stablelm-3b-smoke", "--agents", "4", "--steps", "2",
+            "--per-agent-batch", "1", "--seq-len", "16",
+            "--checkpoint-dir", str(tmp_path), "--checkpoint-every", "2"]
+    run_training(build_parser().parse_args(base + ["--topology-dropout",
+                                                   "0.2"]))
+    meta = read_run_meta(str(tmp_path), 2)
+    assert meta["mixing"]["mode"] == "dropout"
+    assert meta["mixing"]["rate"] == 0.2
+    with pytest.raises(ValueError, match="mixing config"):
+        run_training(build_parser().parse_args(
+            base + ["--topology-dropout", "0.5", "--resume"]))
+    # matching config resumes fine
+    out = run_training(build_parser().parse_args(
+        base + ["--topology-dropout", "0.2", "--resume"]))
+    assert out["resumed_from"] == 2
+    # a pre-fingerprint checkpoint (no "run" meta) still resumes — the
+    # driver warns instead of refusing (consistency CANNOT be verified)
+    meta_path = os.path.join(str(tmp_path), "step_00000002", "tree.json")
+    with open(meta_path) as f:
+        meta = json.load(f)
+    del meta["run"]
+    with open(meta_path, "w") as f:
+        json.dump(meta, f)
+    out = run_training(build_parser().parse_args(
+        base + ["--topology-dropout", "0.5", "--resume"]))  # unverifiable
+    assert out["resumed_from"] == 2
+
+
+def test_save_checkpoint_run_meta_roundtrip(tmp_path):
+    from repro.checkpoint import read_run_meta, save_checkpoint
+    save_checkpoint(str(tmp_path), 3, {"w": jnp.ones((2,))},
+                    run_meta={"mixing": {"mode": "static"}})
+    assert read_run_meta(str(tmp_path), 3) == {"mixing": {"mode": "static"}}
+    save_checkpoint(str(tmp_path), 4, {"w": jnp.ones((2,))})
+    assert read_run_meta(str(tmp_path), 4) == {}
