@@ -20,6 +20,10 @@ Prints ``name,us_per_call,derived`` CSV rows:
   * bench_dynamic_topology : time-varying mixing — static W vs per-step
                        link dropout through the fused mask->reweight->
                        gossip kernel (merged into BENCH_pdsgd.json)
+  * bench_privacy_audit : wire-tap observation capture — capture-off vs
+                       the external-eavesdropper and full-auditor taps on
+                       the scanned hot loop; reports the capture overhead
+                       (merged into BENCH_pdsgd.json)
 
 ``--only NAME`` runs a single benchmark (substring match).
 """
@@ -706,6 +710,97 @@ def bench_dynamic_topology(iters=600, unroll_k=100, rate=0.1):
          f"dropout_vs_static={payload['dropout_overhead_vs_static']}x")
 
 
+def bench_privacy_audit(iters=600, unroll_k=100):
+    """Wire-tap capture tax on the Fig. 2 scanned hot loop: capture-off vs
+    the external-eavesdropper tap (the v_ij tensor riding the scan's aux)
+    vs the full auditor record (v + x/u/g/W/B ground truth).
+
+    The ROADMAP's scenario-diversity north star wants the adversary's
+    view to be a FIRST-CLASS benchmarked scenario, so the overhead of
+    observing must be a committed number, not a guess: each step's
+    capture adds one (m, m, D) outer-product tensor + the scan's aux
+    stacking (T copies on device).  Rows are interleaved across repeats
+    so a load spike inflates all three rather than skewing the ratio;
+    the derived column carries capture_overhead (capture-on us / off us)
+    — the acceptance bar is the eavesdropper tap within 25% of
+    capture-off steps/s on this dispatch-bound worst case (a model-bound
+    workload hides it entirely).
+    """
+    from repro.core import (init_state, make_decentralized_step,
+                            make_scanned_steps, make_topology)
+    from repro.core.schedules import paper_experiment
+    from repro.data import estimation_problem
+    from repro.privacy import observe as O
+
+    m, d = 5, 2
+    top = make_topology("paper_fig1", m)
+    prob = estimation_problem(m, d=d, s=3, n_per_agent=100, seed=0)
+    Z, M = jnp.asarray(prob["Z"]), jnp.asarray(prob["M"])
+
+    def loss_fn(p, batch):
+        z, Mi = batch
+        return jnp.mean(jnp.sum((z - p @ Mi.T) ** 2, -1))
+
+    rng = np.random.default_rng(0)
+    idx = jnp.asarray(rng.integers(0, 100, size=(iters, m, 8)))
+    batches = (Z[jnp.arange(m)[None, :, None], idx],
+               jnp.broadcast_to(M[None], (iters,) + M.shape))
+    keys = jax.random.split(jax.random.key(0), iters)
+    chunk = lambda x, c: jax.tree.map(
+        lambda l: l[c * unroll_k:(c + 1) * unroll_k], x)
+    assert iters % unroll_k == 0
+
+    observers = {"capture_off": None,
+                 "eavesdropper": O.external_eavesdropper(),
+                 "auditor": O.auditor()}
+    scans = {
+        name: make_scanned_steps(
+            make_decentralized_step(loss_fn, top, paper_experiment(0.05),
+                                    donate=False, observer=obs),
+            unroll_k, donate=False)
+        for name, obs in observers.items()
+    }
+
+    def run(scanned):
+        state = init_state(jnp.zeros((d,)), m)
+        state, _ = scanned(state, chunk(batches, 0), chunk(keys, 0))
+        state = init_state(jnp.zeros((d,)), m)
+        t0 = time.perf_counter()
+        for c in range(iters // unroll_k):
+            state, aux = scanned(state, chunk(batches, c), chunk(keys, c))
+        jax.block_until_ready(state.params)
+        return (time.perf_counter() - t0) / iters * 1e6
+
+    runs = {name: [] for name in observers}
+    for _ in range(4):
+        for name in observers:
+            runs[name].append(run(scans[name]))
+    results = {name: min(rs) for name, rs in runs.items()}
+
+    payload = {
+        "workload": (f"fig2_estimation d={d} m={m} iters={iters} "
+                     f"adversary=external_eavesdropper/auditor"),
+        "unroll_k": unroll_k,
+        "paths": {
+            name: {"us_per_step": round(us, 2),
+                   "steps_per_s": round(1e6 / us, 1)}
+            for name, us in results.items()
+        },
+        "eavesdropper_overhead_vs_off": round(
+            results["eavesdropper"] / results["capture_off"], 3),
+        "auditor_overhead_vs_off": round(
+            results["auditor"] / results["capture_off"], 3),
+        "backend": jax.default_backend(),
+    }
+    _write_bench_json({"bench_privacy_audit": payload})
+    for name, us in results.items():
+        emit(f"bench_privacy_audit_{name}", us,
+             f"steps_per_s={1e6 / us:.1f}")
+    emit("bench_privacy_audit_overhead", 0.0,
+         f"eavesdropper_vs_off={payload['eavesdropper_overhead_vs_off']}x;"
+         f"auditor_vs_off={payload['auditor_overhead_vs_off']}x")
+
+
 def kernel_benches():
     from repro.kernels import (flash_attention, gossip_update,
                                obfuscate_update, ssd_intra_chunk)
@@ -751,6 +846,7 @@ BENCHES = {
     "bench_pipeline": bench_pipeline,
     "bench_checkpoint": bench_checkpoint,
     "bench_dynamic_topology": bench_dynamic_topology,
+    "bench_privacy_audit": bench_privacy_audit,
     "kernel_benches": kernel_benches,
     "fig3_nonconvex": fig3_nonconvex,
 }

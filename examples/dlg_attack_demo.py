@@ -13,7 +13,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.attacks import dlg_attack
+from repro.privacy.attacks import dlg_attack
 from repro.core.privacy import obfuscated_gradient
 from repro.data import synthetic_digits
 

@@ -39,6 +39,9 @@ python benchmarks/run.py --only bench_checkpoint
 echo "== time-varying topology perf (bench_dynamic_topology) =="
 python benchmarks/run.py --only bench_dynamic_topology
 
+echo "== privacy-audit capture perf (bench_privacy_audit) =="
+python benchmarks/run.py --only bench_privacy_audit
+
 echo "== benchmark regression gate =="
 python scripts/bench_gate.py "$prev_bench" BENCH_pdsgd.json
 

@@ -1,8 +1,10 @@
 """Core: the paper's inherently privacy-preserving decentralized SGD."""
 from .topology import Topology, make_topology, metropolis_weights, spectral_gap
-from .mixing import MixingProcess, make_mixing, as_process, metropolis_from_mask
+from .mixing import (MixingProcess, make_mixing, as_process,
+                     metropolis_from_mask, is_connected_mask)
 from .schedules import Schedule, harmonic, paper_experiment, polynomial, check_conditions
-from .privacy import sample_B, sample_lambda_tree, obfuscated_gradient, agent_key
+from .privacy import (sample_B, sample_lambda_tree, obfuscated_gradient,
+                      agent_key, clip_gradients, lambda_stats)
 from .pdsgd import (
     DecentralizedState,
     make_decentralized_step,
@@ -27,8 +29,10 @@ from .attacks import dlg_attack, DLGResult
 __all__ = [
     "Topology", "make_topology", "metropolis_weights", "spectral_gap",
     "MixingProcess", "make_mixing", "as_process", "metropolis_from_mask",
+    "is_connected_mask",
     "Schedule", "harmonic", "paper_experiment", "polynomial", "check_conditions",
     "sample_B", "sample_lambda_tree", "obfuscated_gradient", "agent_key",
+    "clip_gradients", "lambda_stats",
     "DecentralizedState", "make_decentralized_step", "make_scanned_steps",
     "pdsgd_update",
     "dsgd_update", "dsgt_update", "dp_dsgd_update", "gossip_mix",

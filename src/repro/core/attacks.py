@@ -1,125 +1,20 @@
-"""DLG gradient-inversion attack (Zhu, Liu & Han, NeurIPS'19 [25]) — the
-adversary model used in the paper's Sec. VII privacy evaluation.
+"""Compatibility shim — the attack harness moved to `repro.privacy.attacks`.
 
-The attacker observes a gradient (exact under conventional DSGD, where public
-W and lam make g recoverable from shared messages; obfuscated Lambda∘g under
-PDSGD) and optimizes dummy data/labels so that the dummy gradient matches the
-observation.  We follow the original L2 gradient-matching objective with Adam
-on the dummies (L-BFGS is not available in pure JAX offline).
+`core` carries the algorithm; the adversary that attacks it lives in the
+privacy-audit subsystem (`repro.privacy`), next to the observation models
+and estimators it is evaluated with.  Import from there; this module
+re-exports the old names so existing callers keep working.
+
+Note `eavesdropper_observation` gained a ``mixing=`` parameter there: under
+a time-varying topology it must consume the realized per-step W_k, not the
+frozen base W (the old behavior showed the adversary messages that were
+never sent).
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Callable
+from ..privacy.attacks import (DLGResult, dlg_attack, dlg_attack_grid,
+                               eavesdropper_observation,
+                               gradient_match_loss)
 
-import jax
-import jax.numpy as jnp
-
-from ..optim import adam, apply_updates
-
-__all__ = ["DLGResult", "dlg_attack", "gradient_match_loss",
-           "eavesdropper_observation"]
-
-Pytree = Any
-
-
-@dataclasses.dataclass
-class DLGResult:
-    recon_x: jax.Array
-    recon_label_logits: jax.Array
-    match_history: jax.Array  # (steps,) gradient-matching loss
-    mse_history: jax.Array | None  # (steps,) vs ground truth if provided
-
-
-def gradient_match_loss(g_dummy: Pytree, g_obs: Pytree) -> jax.Array:
-    """Sum of squared differences over all leaves (the DLG objective)."""
-    per_leaf = jax.tree.map(
-        lambda a, b: jnp.sum((a.astype(jnp.float32) - b.astype(jnp.float32)) ** 2),
-        g_dummy, g_obs)
-    return sum(jax.tree.leaves(per_leaf))
-
-
-def eavesdropper_observation(
-    key: jax.Array,
-    step: jax.Array | int,
-    agent: int,
-    x_j: Pytree,
-    grads_j: Pytree,
-    W: jax.Array,
-    support: jax.Array,
-    lam_bar: jax.Array,
-) -> Pytree:
-    """The *strongest* eavesdropper aggregate of the paper's Sec. III:
-    an adversary tapping ALL of agent j's outgoing channels can sum the
-    shared messages to
-
-        sum_{i in N_j, i != j} v_ij = (1 - w_jj) x_j - (1 - b_jj) Lambda_j g_j
-
-    Because v_jj (the self-term) is never transmitted, the residual
-    multiplicative mask (1 - b_jj) Lambda_j — private to agent j — still
-    obfuscates g_j even if the adversary also knows x_j and lam_bar
-    (Remark 8 / Theorem 5).  Returns that aggregate, built from the SAME
-    key derivations the real update uses, so attacks evaluated against it
-    see exactly what a wire-tapper would.
-    """
-    from .privacy import agent_key, sample_B, sample_lambda_tree
-
-    k_lam = agent_key(jax.random.fold_in(key, 1), step, agent)
-    lam_tree = sample_lambda_tree(k_lam, grads_j, lam_bar)
-    B = sample_B(agent_key(jax.random.fold_in(key, 2), step, 0), support)
-    w_jj = W[agent, agent]
-    b_jj = B[agent, agent]
-    return jax.tree.map(
-        lambda x, lam, g: (1.0 - w_jj) * x.astype(jnp.float32)
-        - (1.0 - b_jj) * lam * g.astype(jnp.float32),
-        x_j, lam_tree, grads_j)
-
-
-def dlg_attack(
-    loss_fn: Callable[[Pytree, jax.Array, jax.Array], jax.Array],
-    params: Pytree,
-    observed_grad: Pytree,
-    x_shape: tuple,
-    num_classes: int,
-    *,
-    key: jax.Array,
-    steps: int = 300,
-    lr: float = 0.1,
-    true_x: jax.Array | None = None,
-) -> DLGResult:
-    """Run DLG.  ``loss_fn(params, x, soft_label)`` must be the training loss
-    with a *soft* label (the attacker also reconstructs the label, via logits
-    passed through softmax, as in the original DLG)."""
-
-    kx, kl = jax.random.split(key)
-    dummy = {
-        "x": jax.random.normal(kx, x_shape, dtype=jnp.float32) * 0.1,
-        "label_logits": jax.random.normal(kl, x_shape[:1] + (num_classes,),
-                                          dtype=jnp.float32) * 0.1,
-    }
-
-    def match(dummy):
-        soft = jax.nn.softmax(dummy["label_logits"], axis=-1)
-        g = jax.grad(loss_fn)(params, dummy["x"], soft)
-        return gradient_match_loss(g, observed_grad)
-
-    opt = adam(lr)
-    opt_state = opt.init(dummy)
-
-    def body(carry, _):
-        dummy, opt_state = carry
-        value, g = jax.value_and_grad(match)(dummy)
-        updates, opt_state = opt.update(g, opt_state, dummy)
-        dummy = apply_updates(dummy, updates)
-        mse = (jnp.mean((dummy["x"] - true_x) ** 2)
-               if true_x is not None else jnp.float32(0))
-        return (dummy, opt_state), (value, mse)
-
-    (dummy, _), (hist, mse_hist) = jax.lax.scan(
-        body, (dummy, opt_state), None, length=steps)
-    return DLGResult(
-        recon_x=dummy["x"],
-        recon_label_logits=dummy["label_logits"],
-        match_history=hist,
-        mse_history=mse_hist if true_x is not None else None,
-    )
+__all__ = ["DLGResult", "dlg_attack", "dlg_attack_grid",
+           "gradient_match_loss", "eavesdropper_observation"]

@@ -54,6 +54,7 @@ __all__ = [
     "as_process",
     "metropolis_from_mask",
     "symmetric_edge_mask",
+    "is_connected_mask",
 ]
 
 MODES = ("static", "dropout", "resample")
@@ -75,6 +76,18 @@ def metropolis_from_mask(mask: jax.Array) -> jax.Array:
     denom = 1.0 + jnp.maximum(deg[:, None], deg[None, :])
     w = mask / denom
     return w + jnp.diag(1.0 - w.sum(axis=1))
+
+
+def is_connected_mask(support: jax.Array) -> jax.Array:
+    """Traced connectivity of a 0/1 support matrix: repeated squaring of
+    (A + I) reaches the m-step transitive closure in ceil(log2(m))
+    matmuls, so the check lives on device and can ride inside jit/scan.
+    Returns a scalar bool array."""
+    m = support.shape[0]
+    A = (support + jnp.eye(m, dtype=support.dtype) > 0).astype(jnp.float32)
+    for _ in range(max(1, int(np.ceil(np.log2(max(m, 2)))))):
+        A = (A @ A > 0).astype(jnp.float32)
+    return jnp.all(A > 0)
 
 
 def symmetric_edge_mask(key: jax.Array, m: int, keep_prob: jax.Array | float
@@ -241,6 +254,58 @@ class MixingProcess:
         """Host-side convenience: the realized W_k as numpy (tests/tools)."""
         W, _, _ = self.realize(jnp.asarray(step, jnp.int32))
         return np.asarray(W)
+
+    # -- B-connectivity window diagnostics --------------------------------
+    def union_support(self, step: jax.Array, window: int) -> jax.Array:
+        """Union of the realized supports over steps (step - window, step]
+        (clamped at 0) — the graph of the paper's B-connectivity condition
+        (Assumption 2 holds per iteration; CONVERGENCE additionally wants
+        the union over bounded windows to be connected, the standard
+        B-strongly-connected condition of time-varying consensus, cf.
+        Nedić–Olshevsky).  Fully traced: a `lax.fori_loop` over
+        `realize`, so the monitor can ride the scanned hot loop."""
+        step = jnp.asarray(step, jnp.int32)
+        m = self.num_agents
+        if self.is_static:
+            return self._consts["support0"]
+
+        def body(i, acc):
+            s = step - i
+            _, sup, _ = self.realize(jnp.maximum(s, 0))
+            return acc + sup * (s >= 0).astype(jnp.float32)
+
+        acc = jax.lax.fori_loop(0, int(window), body,
+                                jnp.zeros((m, m), jnp.float32))
+        return (acc > 0).astype(jnp.float32)
+
+    def window_monitor(self, window: int):
+        """Jitted diagnostics over the trailing realization window:
+        ``monitor(step) -> {"connected", "union_min_degree",
+        "union_edges"}`` for the union graph of the last ``window``
+        realized supports ending at ``step``.
+
+        This is the ROADMAP's B-connectivity surface: a single dropout
+        step being disconnected is fine (the per-iteration assumptions
+        still hold), but a connected-union STREAK failure is what
+        silently stalls consensus — `launch.train` logs these fields so
+        pathological streaks show up in the step log, not just in
+        convergence plots after the fact.
+        """
+        if window < 1:
+            raise ValueError(f"window must be >= 1, got {window}")
+
+        @jax.jit
+        def monitor(step):
+            union = self.union_support(step, window)
+            off = union * (1.0 - jnp.eye(self.num_agents,
+                                         dtype=jnp.float32))
+            return {
+                "connected": is_connected_mask(union),
+                "union_min_degree": off.sum(axis=1).min().astype(jnp.int32),
+                "union_edges": (off.sum() / 2.0).astype(jnp.int32),
+            }
+
+        return monitor
 
 
 def make_mixing(topology: Topology, *, rate: float = 0.0,

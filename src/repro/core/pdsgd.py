@@ -133,6 +133,7 @@ def pdsgd_update(
     mask: jax.Array | None = None,
     use_pallas: bool | None = None,
     interpret: bool | None = None,
+    observe: bool = False,
 ) -> Pytree:
     """One iteration of Eq. (4): x^{k+1} = W_k x^k - B^k Lambda^k g^k.
 
@@ -151,6 +152,15 @@ def pdsgd_update(
     TPU, False under the CPU interpreter where fused is a correctness path).
     ``mask`` (the realized edge mask) makes the fused path re-derive W_k
     in VMEM (`kernels.masked_gossip_update`) instead of staging it.
+
+    ``observe=True`` additionally returns the auditor-grade observation
+    record of `privacy.observe.full_record` — the wire tensor v_ij plus
+    the private quantities adversary views are restrictions of — as
+    ``(new_params, record)``.  Capture is a pure function of values the
+    update already computes (the fused path emits the KERNEL's own x/u
+    buffers, so a capture there audits what the kernel realized, not a
+    re-derivation), which is what guarantees capture-on never perturbs
+    the trajectory.
     """
     B = sample_B(agent_key(jax.random.fold_in(key, 2), step, 0), support)
     if use_pallas is None:
@@ -159,12 +169,29 @@ def pdsgd_update(
     if use_pallas:
         from ..kernels import fused_pdsgd_tree
         bits = _per_agent_bits(jax.random.fold_in(key, 1), step, grads)
-        return fused_pdsgd_tree(W, B, params, grads, bits, lam_bar,
-                                mask=mask, interpret=interpret)
-    u = _per_agent_obfuscated(jax.random.fold_in(key, 1), step, grads, lam_bar)
-    mixed = gossip_mix(W, params)
-    descent = gossip_mix(B, u)
-    return jax.tree.map(lambda a, b: a - b, mixed, descent)
+        out = fused_pdsgd_tree(W, B, params, grads, bits, lam_bar,
+                               mask=mask, interpret=interpret,
+                               observe=observe)
+        if not observe:
+            return out
+        new_params, flats = out
+        x_flat, u_flat = flats["x"], flats["u"]
+    else:
+        u = _per_agent_obfuscated(jax.random.fold_in(key, 1), step, grads,
+                                  lam_bar)
+        mixed = gossip_mix(W, params)
+        descent = gossip_mix(B, u)
+        new_params = jax.tree.map(lambda a, b: a - b, mixed, descent)
+        if not observe:
+            return new_params
+        from ..privacy import observe as O
+        x_flat, u_flat = O.flatten_agents(params), O.flatten_agents(u)
+    from ..privacy import observe as O
+    record = O.full_record(
+        v=O.wire_messages(W, B, x_flat, u_flat), support=support,
+        x_flat=x_flat, u_flat=u_flat, g_flat=O.flatten_agents(grads),
+        W=W, B=B)
+    return new_params, record
 
 
 def dsgd_update(
@@ -242,6 +269,8 @@ def make_decentralized_step(
     interpret: bool | None = None,
     track_mean: bool = False,
     force_host_schedule: bool = False,
+    observer=None,
+    grad_clip: float | None = None,
 ):
     """Build a jitted decentralized training step.
 
@@ -267,9 +296,28 @@ def make_decentralized_step(
     ``use_pallas``/``interpret`` select the fused-kernel PDSGD path (see
     `pdsgd_update`); ``track_mean`` adds the agent-mean parameters to aux
     (what rate tests integrate — cheap for small models, off by default).
+
+    ``observer`` (a `privacy.observe.Adversary`) turns on traced wire-tap
+    capture: ``aux["observation"]`` carries that adversary's view of this
+    step's messages (pdsgd: the v_ij tensor; dsgd/dp_dsgd: the broadcast
+    states) as ordinary device arrays — under `make_scanned_steps` the
+    scan stacks them into a (unroll_k, ...) observation buffer for free.
+    Capture never changes the update (bit-parity pinned by
+    tests/test_privacy_audit.py); dsgt is refused (its two-variable wire
+    is not an audited scenario).
+
+    ``grad_clip`` (kappa > 0) clips every gradient element to [-kappa,
+    kappa] BEFORE the update and the capture — enforcing the bounded-
+    gradient premise |g| <= kappa under which Theorem 5's uniform
+    analysis states its entropy/MSE guarantees (`privacy.clip_gradients`).
     """
     if algorithm not in ("pdsgd", "dsgd", "dsgt", "dp_dsgd"):
         raise ValueError(f"unknown algorithm {algorithm!r}")
+    if observer is not None and algorithm == "dsgt":
+        raise ValueError("observation capture supports pdsgd/dsgd/dp_dsgd; "
+                         "dsgt's two-variable exchange is not audited")
+    if grad_clip is not None and not grad_clip > 0.0:
+        raise ValueError(f"grad_clip must be > 0, got {grad_clip}")
     process = as_process(topology)
 
     grad_fn = jax.vmap(jax.value_and_grad(loss_fn))
@@ -277,12 +325,23 @@ def make_decentralized_step(
     def apply_update(state, batch, key, lam_bar):
         W, support, mask = process.realize(state.step)
         losses, grads = grad_fn(state.params, batch)
+        if grad_clip is not None:
+            from .privacy import clip_gradients
+            grads = clip_gradients(grads, grad_clip)
         new_tracker = state.tracker
+        observation = None
         if algorithm == "pdsgd":
-            new_params = pdsgd_update(
+            out = pdsgd_update(
                 state.params, grads, key=key, step=state.step, W=W,
                 support=support, lam_bar=lam_bar, mask=mask,
-                use_pallas=use_pallas, interpret=interpret)
+                use_pallas=use_pallas, interpret=interpret,
+                observe=observer is not None)
+            if observer is not None:
+                new_params, record = out
+                from ..privacy import observe as O
+                observation = O.adversary_view(observer, record)
+            else:
+                new_params = out
         elif algorithm == "dsgd":
             new_params = dsgd_update(state.params, grads, W=W, lam=lam_bar)
         elif algorithm == "dsgt":
@@ -311,10 +370,20 @@ def make_decentralized_step(
                 lam=lam_bar, sigma_dp=sigma_dp)
         else:
             raise ValueError(f"unknown algorithm {algorithm!r}")
+        if observer is not None and algorithm in ("dsgd", "dp_dsgd"):
+            # State-sharing baselines: the wire carries x_j in the clear
+            # (dp_dsgd noises the GRADIENT, not the transmitted state).
+            from ..privacy import observe as O
+            record = O.state_record(
+                support=support, x_flat=O.flatten_agents(state.params),
+                g_flat=O.flatten_agents(grads), W=W, lam=lam_bar)
+            observation = O.adversary_view(observer, record)
         aux = {
             "loss": losses.mean(),
             "consensus_error": consensus_error(new_params),
         }
+        if observation is not None:
+            aux["observation"] = observation
         if track_mean:
             aux["params_mean"] = jax.tree.map(lambda p: p.mean(axis=0),
                                               new_params)

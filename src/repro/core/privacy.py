@@ -20,6 +20,7 @@ __all__ = [
     "sample_lambda_tree",
     "obfuscated_gradient",
     "sample_B",
+    "clip_gradients",
     "lambda_stats",
 ]
 
@@ -89,6 +90,33 @@ def sample_B(key: jax.Array, support: jax.Array) -> jax.Array:
     return e / jnp.maximum(col_sums, 1e-30)
 
 
-def lambda_stats(lam_bar: float) -> dict:
-    """Mean/std of the U[0,2 lam_bar] stepsize (used in tests/docs)."""
-    return {"mean": lam_bar, "std": lam_bar / np.sqrt(3.0), "var": lam_bar**2 / 3.0}
+def clip_gradients(grads: Pytree, kappa: float) -> Pytree:
+    """Elementwise clip to [-kappa, kappa]: the bounded-gradient premise
+    |g| <= kappa under which Theorem 5 states its per-element entropy and
+    MSE guarantees (the uniform-g analysis needs a finite support to be
+    the maximum-entropy reference).  Enforced BEFORE obfuscation so every
+    transmitted y = lam * g element provably lies in [-2 lam_bar kappa,
+    2 lam_bar kappa] — see ``lambda_stats(lam_bar, kappa)["y_max"]``."""
+    kappa = jnp.float32(kappa)
+    return jax.tree.map(
+        lambda g: jnp.clip(g, -kappa, kappa).astype(g.dtype), grads)
+
+
+def lambda_stats(lam_bar: float, kappa: float | None = None) -> dict:
+    """Mean/std of the U[0,2 lam_bar] stepsize (used in tests/docs).
+
+    With ``kappa`` (the `clip_gradients` bound), also reports the induced
+    observation envelope and Theorem-5 strength: ``y_max`` = 2 lam_bar
+    kappa (the largest magnitude any wire element lam*g can take once
+    gradients are clipped), ``theta`` = log(kappa) - gamma_EM, and
+    ``mse_bound`` = e^{2 theta} / (2 pi e) — so the clipping knob and the
+    privacy accounting stay one object.
+    """
+    stats = {"mean": lam_bar, "std": lam_bar / np.sqrt(3.0),
+             "var": lam_bar**2 / 3.0}
+    if kappa is not None:
+        from . import entropy as E
+        theta = E.theta_closed(lam_bar, kappa)
+        stats.update(y_max=2.0 * lam_bar * kappa, kappa=float(kappa),
+                     theta=theta, mse_bound=E.mse_lower_bound(theta))
+    return stats

@@ -37,6 +37,7 @@ __all__ = [
     "directional_keep",
     "directional_weights",
     "mask_b_draws",
+    "rows_from_dense",
 ]
 
 Pytree = Any
@@ -152,6 +153,20 @@ def directional_weights(W: jax.Array, n_data: int, n_pod: int) -> dict:
     return {"w_self": jnp.diagonal(W), "w_dir": w_dir}
 
 
+def rows_from_dense(B: jax.Array, n_data: int, n_pod: int) -> jax.Array:
+    """Inverse of `dense_coupling`'s B reconstruction: extract the per-agent
+    (m, 1 + ndirs) rows [b_jj, b_{i_1 j}, ...] from a dense column-
+    stochastic B on the torus support.  ``dense_coupling(rows_from_dense
+    (B))[1] == B`` exactly (each entry is copied, never recombined), which
+    is what lets the privacy audit drive the ring path with the SAME B^k
+    realization as the dense/eager/fused paths and pin all four
+    observation streams bit-for-bit."""
+    mats = _perm_matrices(n_data, n_pod)
+    cols = [jnp.diagonal(B)] + [
+        jnp.einsum("ij,ij->j", jnp.asarray(Pm), B) for Pm in mats]
+    return jnp.stack(cols, axis=1)
+
+
 def mask_b_draws(b: jax.Array, keep_dir: jax.Array) -> jax.Array:
     """Re-normalize `sample_b_draws` rows onto the realized neighbor set:
     dropped directions get weight zero and the row (self + survivors) is
@@ -170,7 +185,8 @@ def torus_gossip_pdsgd(mesh, params: Pytree, u: Pytree, b: jax.Array, *,
                        n_data: int | None = None,
                        n_pod: int | None = None,
                        leaf_specs: Pytree | None = None,
-                       W: jax.Array | None = None) -> Pytree:
+                       W: jax.Array | None = None,
+                       capture: bool = False) -> Pytree:
     """x' = W x - B^k u via neighbor-only exchanges on the mesh torus.
 
     params/u: pytrees with leading agent axis (m, ...); b: (m, 1+ndirs)
@@ -199,7 +215,22 @@ def torus_gossip_pdsgd(mesh, params: Pytree, u: Pytree, b: jax.Array, *,
     the same realized links; a dropped edge then contributes an exactly
     zero v_ij (the permute still runs — the collective keeps a static
     shape under jit — but nothing of x_j or u_j crosses the dead link).
+
+    ``capture=True`` wire-taps the exchange for the privacy audit:
+    returns ``(out, V)`` with V (m, m, D) holding exactly the per-edge
+    messages v_ij this path transmits — on the shard_map path the
+    sender-side v of each ppermute (tapped BEFORE the collective, i.e.
+    what crosses the link), scattered into the dense layout of
+    `privacy.observe.wire_messages`; on the dense fallback the same
+    tensor from the equivalent `dense_coupling` matrices.  D is the
+    flattened trailing size per agent, so capture requires the leaves
+    un-sharded in their non-agent dims (``leaf_specs=None``).
     """
+    if capture and leaf_specs is not None:
+        raise ValueError(
+            "capture=True flattens each agent's leaves to (m, D) and so "
+            "requires replicated non-agent dims (leaf_specs=None); audit "
+            "workloads replicate per agent")
     m = jax.tree.leaves(params)[0].shape[0]
     axes = tuple(a for a in agent_axes
                  if mesh is not None and a in getattr(mesh, "shape", {}))
@@ -227,7 +258,13 @@ def torus_gossip_pdsgd(mesh, params: Pytree, u: Pytree, b: jax.Array, *,
         Wd, B = dense_coupling(b, n_data, n_pod, W=W)
         mixed = gossip_mix(Wd, params)
         desc = gossip_mix(B, u)
-        return jax.tree.map(lambda a, c: a - c, mixed, desc)
+        out = jax.tree.map(lambda a, c: a - c, mixed, desc)
+        if not capture:
+            return out
+        from ..privacy import observe as O
+        V = O.wire_messages(Wd, B, O.flatten_agents(params),
+                            O.flatten_agents(u))
+        return out, V
 
     agent_spec = axes[0] if len(axes) == 1 else axes
     if leaf_specs is None:
@@ -250,6 +287,12 @@ def torus_gossip_pdsgd(mesh, params: Pytree, u: Pytree, b: jax.Array, *,
         w_tab = jnp.concatenate([tabs["w_self"][:, None], tabs["w_dir"]],
                                 axis=1)
 
+    if capture:
+        # THE flatten convention (leaf order, ravel, f32) — shared with
+        # every other path's capture so the streams stay comparable;
+        # applied per shard, where each leaf is (1, ...).
+        from ..privacy.observe import flatten_agents as _flat_local
+
     def body(b_loc, w_loc, x_loc, u_loc):
         # One agent per shard: every leaf is (1, ...), b_loc/w_loc are
         # (1, 1+ndirs) — column 0 is the self term, 1+d the directions.
@@ -259,6 +302,7 @@ def torus_gossip_pdsgd(mesh, params: Pytree, u: Pytree, b: jax.Array, *,
         out = jax.tree.map(
             lambda x, uu: (coeff(w_loc, 0, x) * x
                            - coeff(b_loc, 0, x) * uu), x_loc, u_loc)
+        taps = []
         for di, (axis, size, shift) in enumerate(dirs):
             perm = [(d, (d + shift) % size) for d in range(size)]
             # The sender computes the mixed v_ij; only v crosses the link.
@@ -266,14 +310,30 @@ def torus_gossip_pdsgd(mesh, params: Pytree, u: Pytree, b: jax.Array, *,
                 lambda x, uu: (coeff(w_loc, 1 + di, x) * x
                                - coeff(b_loc, 1 + di, x) * uu),
                 x_loc, u_loc)
+            if capture:
+                # Tap at the SENDER, before the collective: this is the
+                # exact buffer the ppermute puts on the wire.
+                taps.append(_flat_local(v))
             shifted = jax.tree.map(
                 lambda leaf: jax.lax.ppermute(leaf, axis, perm), v)
             out = jax.tree.map(lambda a, c: a + c, out, shifted)
+        if capture:
+            return out, jnp.stack(taps, axis=1)  # (1, ndirs, D)
         return out
 
-    return shard_map(
+    out_specs = (leaf_spec, P(agent_spec)) if capture else leaf_spec
+    result = shard_map(
         body, mesh=mesh,
         in_specs=(P(agent_spec), P(agent_spec), leaf_spec, leaf_spec),
-        out_specs=leaf_spec,
+        out_specs=out_specs,
         check_rep=False,
     )(b, w_tab, params, u)
+    if not capture:
+        return result
+    out, v_dir = result  # v_dir: (m, ndirs, D) — sender-major taps
+    # Scatter to the dense v_ij layout: V[i, j] = v_dir[j, d] where
+    # i = shift_d(j) (P_d[i, j] == 1), matching `observe.wire_messages`.
+    mats = _perm_matrices(n_data, n_pod)
+    V = sum(jnp.asarray(Pm)[:, :, None] * v_dir[None, :, di, :]
+            for di, Pm in enumerate(mats))
+    return out, V

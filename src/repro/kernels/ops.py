@@ -81,7 +81,8 @@ def gossip_tree(W: jax.Array, B: jax.Array, x_tree: Pytree, u_tree: Pytree,
 def fused_pdsgd_tree(W: jax.Array, B: jax.Array, x_tree: Pytree,
                      g_tree: Pytree, bits_tree: Pytree, lam_bar,
                      mask: jax.Array | None = None,
-                     interpret: bool | None = None) -> Pytree:
+                     interpret: bool | None = None,
+                     observe: bool = False) -> Pytree:
     """Full Eq. (4) update through both fused kernels in one flattened pass:
 
         u = Lambda(bits) ∘ g          (obfuscate kernel, w_self=0, b_self=-1)
@@ -97,6 +98,14 @@ def fused_pdsgd_tree(W: jax.Array, B: jax.Array, x_tree: Pytree,
     time-varying path: the gossip stage becomes `masked_gossip_update`,
     which re-derives the doubly-stochastic W_k from the realized edge mask
     in VMEM — ``W`` is ignored and W_k never staged from HBM.
+
+    ``observe=True`` returns ``(out_tree, {"x": (m, D), "u": (m, D)})`` —
+    the kernel's OWN flattened state and obfuscated-gradient buffers
+    (padding stripped), which the privacy-audit wire-tap layer turns into
+    the v_ij observation tensor.  Emitting the kernel's u (not an eager
+    re-derivation) is what makes the capture an audit of what this path
+    actually realized; the buffers already exist, so capture adds no
+    kernel work.
     """
     x_flat, sizes, leaves = _flatten_concat(x_tree)
     g_flat, _, _ = _flatten_concat(g_tree)
@@ -116,4 +125,10 @@ def fused_pdsgd_tree(W: jax.Array, B: jax.Array, x_tree: Pytree,
         out = gossip_update(W, B, x_flat, u_flat, interpret=interpret)
     if pad:
         out = out[:, :-pad]
-    return _unflatten(out, sizes, leaves, x_tree)
+    out_tree = _unflatten(out, sizes, leaves, x_tree)
+    if not observe:
+        return out_tree
+    ncols = sum(sizes)
+    flats = {"x": x_flat[:, :ncols].astype(jnp.float32),
+             "u": u_flat[:, :ncols].astype(jnp.float32)}
+    return out_tree, flats

@@ -75,7 +75,8 @@ def make_train_step(bundle: ModelBundle, mesh,
                     gossip: Literal["dense", "ring"] = "dense",
                     algorithm: str = "pdsgd", lam_base: float = 0.1,
                     use_pallas: bool = False,
-                    mixing: MixingProcess | None = None):
+                    mixing: MixingProcess | None = None,
+                    observer=None):
     """Returns train_step(params, batch, key, step) -> (params, loss).
 
     lam_bar follows the paper's 1/k schedule from `lam_base`; the random
@@ -110,11 +111,24 @@ def make_train_step(bundle: ModelBundle, mesh,
     the per-leaf GSPMD sharding (and allocate whole-model temporaries) on
     the multi-billion-param bundles this launch path shards over the mesh.
     Opt in only for bundles that fit replicated per agent.
+
+    ``observer`` (a `privacy.observe.Adversary`) wire-taps the step: the
+    return becomes ``(new_params, {"loss", "observation"})`` with the
+    adversary's view of this step's messages.  The ring schedule taps the
+    sender-side v_ij buffers of the actual ppermute exchange
+    (`collectives.torus_gossip_pdsgd(capture=True)`), so what the audit
+    sees IS what crossed the links; capture therefore requires the
+    replicated-leaf layout (``gossip="ring"`` with per-leaf sharding
+    specs is refused).  pdsgd and dsgd only — the audited scenarios.
     """
     if algorithm == "dsgt" and gossip != "dense":
         raise ValueError(
             "algorithm='dsgt' supports gossip='dense' only (the tracker is "
             "a second gossiped variable; the ring pipeline carries one)")
+    if observer is not None and algorithm not in ("pdsgd", "dsgd"):
+        raise ValueError(
+            f"observation capture supports algorithm pdsgd/dsgd here, "
+            f"not {algorithm!r}")
     m = num_agents(mesh)
     axes = agent_axes(mesh)
     torus = torus_topology(mesh)
@@ -162,6 +176,22 @@ def make_train_step(bundle: ModelBundle, mesh,
         ring_specs = jax.tree.map(
             lambda a, log: logical_spec(mesh, a.shape, log, TRAIN_RULES),
             p_abs, p_log)
+        if observer is not None:
+            # Capture flattens each agent's leaves to one (m, D) buffer,
+            # which only exists if the non-agent dims are replicated.
+            # REFUSE a model-parallel bundle rather than silently
+            # gathering it to full per-agent replicas.
+            from jax.sharding import PartitionSpec
+            specs = jax.tree.leaves(
+                ring_specs, is_leaf=lambda s: isinstance(s, PartitionSpec))
+            if any(any(ax is not None for ax in s[1:]) for s in specs
+                   if isinstance(s, PartitionSpec)):
+                raise ValueError(
+                    "observation capture on gossip='ring' needs the "
+                    "non-agent dims replicated; this bundle shards them "
+                    "(model-parallel PartitionSpecs) — audit a "
+                    "replicated-per-agent bundle instead")
+            ring_specs = None
 
     grad_fn = jax.vmap(jax.value_and_grad(bundle.loss_fn))
 
@@ -182,11 +212,19 @@ def make_train_step(bundle: ModelBundle, mesh,
                 lambda a, t: a - lam_bar * t.astype(a.dtype),
                 pdsgd.gossip_mix(W, params), y)
             return (new_params, (y, grads)), losses.mean()
+        observation = None
         if algorithm == "pdsgd":
             if gossip == "dense":
-                new_params = pdsgd.pdsgd_update(
+                out = pdsgd.pdsgd_update(
                     params, grads, key=key, step=step, W=W, support=support,
-                    lam_bar=lam_bar, mask=mask, use_pallas=use_pallas)
+                    lam_bar=lam_bar, mask=mask, use_pallas=use_pallas,
+                    observe=observer is not None)
+                if observer is not None:
+                    from ..privacy import observe as O
+                    new_params, record = out
+                    observation = O.adversary_view(observer, record)
+                else:
+                    new_params = out
             else:
                 u = pdsgd._per_agent_obfuscated(
                     jax.random.fold_in(key, 1), step, grads, lam_bar)
@@ -207,13 +245,37 @@ def make_train_step(bundle: ModelBundle, mesh,
                     # bit-equal to the scalar path (pinned by the
                     # multi-device subprocess test).
                     W_k = W
-                new_params = collectives.torus_gossip_pdsgd(
+                out = collectives.torus_gossip_pdsgd(
                     mesh, params, u, b, agent_axes=axes,
-                    leaf_specs=ring_specs, W=W_k)
+                    leaf_specs=ring_specs, W=W_k,
+                    capture=observer is not None)
+                if observer is not None:
+                    from ..privacy import observe as O
+                    new_params, V = out
+                    # The ring's implied dense matrices, for the private
+                    # fields of the record (v itself is the tapped wire).
+                    W_rec, B_rec = collectives.dense_coupling(
+                        b, n_data, n_pod, W=W_k)
+                    record = O.full_record(
+                        v=V, support=support, x_flat=O.flatten_agents(params),
+                        u_flat=O.flatten_agents(u),
+                        g_flat=O.flatten_agents(grads), W=W_rec, B=B_rec)
+                    observation = O.adversary_view(observer, record)
+                else:
+                    new_params = out
         elif algorithm == "dsgd":
             new_params = pdsgd.dsgd_update(params, grads, W=W, lam=lam_bar)
+            if observer is not None:
+                from ..privacy import observe as O
+                record = O.state_record(
+                    support=support, x_flat=O.flatten_agents(params),
+                    g_flat=O.flatten_agents(grads), W=W, lam=lam_bar)
+                observation = O.adversary_view(observer, record)
         else:
             raise ValueError(algorithm)
+        if observer is not None:
+            return new_params, {"loss": losses.mean(),
+                                "observation": observation}
         return new_params, losses.mean()
 
     return train_step

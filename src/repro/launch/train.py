@@ -42,9 +42,11 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import time
 
 import jax
+import jax.numpy as jnp
 
 from ..checkpoint import (CheckpointManager, latest_step, load_checkpoint,
                           read_run_meta)
@@ -75,8 +77,24 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--topology-resample-every", type=int, default=0,
                    help="redraw the graph as Erdos-Renyi every N steps "
                         "(0 = never); exclusive with --topology-dropout")
+    p.add_argument("--b-window", type=int, default=None,
+                   help="B-connectivity diagnostic window: log whether the "
+                        "union graph of the last N realized supports is "
+                        "connected (default: 8 when the topology is "
+                        "time-varying, off otherwise; 0 disables)")
     p.add_argument("--algorithm", default="pdsgd",
                    choices=["pdsgd", "dsgd", "dsgt", "dp_dsgd"])
+    p.add_argument("--grad-clip-kappa", type=float, default=None,
+                   help="clip every gradient element to [-kappa, kappa] "
+                        "before obfuscation — enforces the bounded-"
+                        "gradient premise of Theorem 5's uniform analysis "
+                        "(see privacy.clip_gradients / lambda_stats)")
+    p.add_argument("--privacy-audit", action="store_true",
+                   help="after training, run the repro.launch.audit "
+                        "adversary suite (parity, Theorem-5 estimators, "
+                        "inversion attacks) and write privacy_report.json "
+                        "next to the checkpoints (or cwd); the audit "
+                        "config is fingerprinted into checkpoint run_meta")
     p.add_argument("--steps", type=int, default=100)
     p.add_argument("--per-agent-batch", type=int, default=2)
     p.add_argument("--seq-len", type=int, default=64)
@@ -136,7 +154,16 @@ def run_training(args, mesh=None) -> dict:
     sched = warmup_harmonic(args.lr, hold=args.warmup_hold)
     step = make_decentralized_step(bundle.loss_fn, mixing, sched,
                                    algorithm=args.algorithm,
-                                   sigma_dp=args.sigma_dp)
+                                   sigma_dp=args.sigma_dp,
+                                   grad_clip=args.grad_clip_kappa)
+
+    # B-connectivity window diagnostics (ROADMAP): a single disconnected
+    # dropout realization is fine; a STREAK of disconnected unions is what
+    # silently stalls consensus, so surface it in the step log.
+    b_window = args.b_window
+    if b_window is None:
+        b_window = 8 if not mixing.is_static else 0
+    monitor = mixing.window_monitor(b_window) if b_window > 0 else None
     pipeline = make_lm_pipeline(cfg.vocab_size, args.agents,
                                 args.per_agent_batch, args.seq_len,
                                 seed=args.seed)
@@ -159,13 +186,26 @@ def run_training(args, mesh=None) -> dict:
     # later --resume.
     manager = None
     mixing_fp = mixing.fingerprint()
+    audit_cfg = None
+    run_meta = {"mixing": mixing_fp}
+    if args.privacy_audit:
+        # The audit suite runs on the paper's estimation workload under
+        # THIS run's topology/clipping knobs; its config is part of the
+        # run's identity — a checkpoint records which adversary suite the
+        # trajectory was audited under.
+        from .audit import AuditConfig, audit_fingerprint
+        audit_cfg = AuditConfig(agents=args.agents,
+                                kappa=args.grad_clip_kappa,
+                                dropout=args.topology_dropout,
+                                seed=args.seed)
+        run_meta["privacy_audit"] = audit_fingerprint(audit_cfg)
     if args.checkpoint_dir:
         manager = CheckpointManager(args.checkpoint_dir,
                                     keep_last=args.keep_last,
                                     keep_every=args.keep_every,
                                     async_writes=not args.checkpoint_sync,
                                     fresh=not args.resume,
-                                    run_meta={"mixing": mixing_fp})
+                                    run_meta=run_meta)
 
     start = 0
     history: list[dict] = []
@@ -175,6 +215,12 @@ def run_training(args, mesh=None) -> dict:
         rec = {"step": int(k), "loss": float(loss),
                "consensus_error": float(cons),
                "elapsed_s": round(time.time() - t0, 1)}
+        if monitor is not None:
+            diag = monitor(jnp.asarray(int(k), jnp.int32))
+            rec.update(b_window=b_window,
+                       b_window_connected=bool(diag["connected"]),
+                       b_window_union_min_degree=int(
+                           diag["union_min_degree"]))
         history.append(rec)
         print(json.dumps(rec))
 
@@ -286,7 +332,23 @@ def run_training(args, mesh=None) -> dict:
             # landed.
             manager.close()
 
-    return {"state": state, "history": history, "resumed_from": start or None}
+    audit_report = None
+    if audit_cfg is not None:
+        from .audit import run_audit
+        out_path = os.path.join(args.checkpoint_dir or ".",
+                                "privacy_report.json")
+        audit_report = run_audit(audit_cfg, out=out_path)
+        print(json.dumps({
+            "privacy_audit": "ok" if audit_report["ok"] else "FAILED",
+            "parity_all_pass": audit_report["parity"]["all_pass"],
+            "pdsgd_recovery_mse":
+                audit_report["attacks"]["pdsgd_ls_recovery_mse"],
+            "theorem5_mse_bound":
+                audit_report["attacks"]["theorem5_mse_bound"],
+            "report": out_path}))
+
+    return {"state": state, "history": history, "resumed_from": start or None,
+            "privacy_audit": audit_report}
 
 
 def main(argv=None):

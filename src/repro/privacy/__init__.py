@@ -1,0 +1,45 @@
+"""Privacy-audit subsystem: the adversary's view as a first-class,
+benchmarked scenario.
+
+Three layers, matching the paper's evaluation structure:
+
+* `observe`    — traced wire-tap capture: adversary models (auditor /
+                 external eavesdropper / curious neighbor) and the
+                 observation records every execution path (eager, fused
+                 Pallas, scanned, ring) emits into, bit-parity safe;
+* `estimators` — empirical entropy / theta / MSE-floor estimators
+                 (binned + Kozachenko–Leonenko kNN) validating the
+                 Theorem-5 closed forms of `core.entropy` from sampled
+                 Lambda∘g observations;
+* `attacks`    — DLG gradient inversion (Sec. VII), a vmapped (agent,
+                 step) sweep, and the least-squares inversion that is
+                 exact against conventional DSGD and Theorem-5-floored
+                 against PDSGD.
+
+`repro.launch.audit` drives all three end-to-end and writes the JSON
+privacy report; see README "Privacy auditing".
+"""
+from .observe import (Adversary, adversary_view, auditor, curious_neighbor,
+                      external_eavesdropper, flatten_agents, full_record,
+                      state_record, wire_messages)
+from .estimators import (binned_entropy, empirical_recovery_floor,
+                         estimate_h_y, estimate_theta, knn_entropy,
+                         observations_from_capture, sample_observations)
+from .attacks import (DLGResult, dlg_attack, dlg_attack_grid,
+                      dsgd_exact_recovery, eavesdropper_aggregate,
+                      eavesdropper_observation, gradient_match_loss,
+                      pdsgd_ls_recovery, recovery_mse,
+                      states_from_broadcast)
+
+__all__ = [
+    "Adversary", "auditor", "external_eavesdropper", "curious_neighbor",
+    "adversary_view", "flatten_agents", "wire_messages", "full_record",
+    "state_record",
+    "binned_entropy", "knn_entropy", "estimate_h_y", "estimate_theta",
+    "empirical_recovery_floor", "sample_observations",
+    "observations_from_capture",
+    "DLGResult", "dlg_attack", "dlg_attack_grid", "gradient_match_loss",
+    "eavesdropper_observation", "eavesdropper_aggregate",
+    "dsgd_exact_recovery", "pdsgd_ls_recovery", "recovery_mse",
+    "states_from_broadcast",
+]

@@ -1,0 +1,194 @@
+"""Traced wire-tap observation capture: the adversary's view as data.
+
+The paper's privacy claim (Sec. III, Theorem 5) is a statement about what
+an adversary can compute from the messages that actually cross the wire,
+
+    v_ij = w_ij x_j - b_ij (Lambda_j ∘ g_j),        i in N_j, i != j,
+
+so auditing it requires capturing exactly those messages from the running
+system — not a side model of them.  This module defines the observation
+record every execution path emits (eager `core.pdsgd`, fused Pallas
+`kernels.fused_pdsgd_tree`, the `lax.scan` hot loop, and the ring
+`dist.collectives.torus_gossip_pdsgd`) and the adversary models that
+restrict it:
+
+* ``auditor()``               — the harness itself: full ground truth
+                                (messages + private x, u, g, B, W), what
+                                estimators and attack *evaluation* consume;
+* ``external_eavesdropper()`` — wiretaps every link: sees all v_ij and
+                                which links were live, nothing else (the
+                                paper's Sec. III adversary);
+* ``curious_neighbor(i)``     — honest-but-curious agent i: sees only the
+                                messages on its own incident links, plus
+                                its OWN keys/state (x_i, u_i, its W row
+                                and its chosen B column) — Remark 8's
+                                insider.
+
+Everything here is pure jax on (m, D)-flattened views, so a record rides
+inside jit/scan as ordinary aux output: capture is traced WITH the step,
+never a host-side hook, which is what makes the bit-parity guarantee
+(capture-on never perturbs the trajectory; all paths emit identical
+streams) testable at all.  The flatten convention deliberately matches
+`kernels.ops._flatten_concat` (tree-leaves order, leading agent axis kept,
+trailing dims raveled and concatenated) so the fused kernel's buffers can
+be emitted without a relayout.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "Adversary",
+    "auditor",
+    "external_eavesdropper",
+    "curious_neighbor",
+    "ADVERSARY_KINDS",
+    "flatten_agents",
+    "wire_messages",
+    "broadcast_messages",
+    "full_record",
+    "state_record",
+    "adversary_view",
+]
+
+Pytree = Any
+
+ADVERSARY_KINDS = ("auditor", "external_eavesdropper", "curious_neighbor")
+
+
+@dataclasses.dataclass(frozen=True)
+class Adversary:
+    """Who is looking: selects the restriction applied to the full record.
+
+    ``agent`` is only meaningful for ``curious_neighbor`` (the insider's
+    own index).  Instances are static jit constants — building a step with
+    a different adversary retraces, which is correct: the view is part of
+    the program, not data.
+    """
+
+    kind: str
+    agent: int | None = None
+
+    def __post_init__(self):
+        if self.kind not in ADVERSARY_KINDS:
+            raise ValueError(f"unknown adversary kind {self.kind!r}; "
+                             f"have {ADVERSARY_KINDS}")
+        if self.kind == "curious_neighbor" and self.agent is None:
+            raise ValueError("curious_neighbor needs its agent index")
+        if self.kind != "curious_neighbor" and self.agent is not None:
+            raise ValueError(f"{self.kind} takes no agent index")
+
+
+def auditor() -> Adversary:
+    return Adversary("auditor")
+
+
+def external_eavesdropper() -> Adversary:
+    return Adversary("external_eavesdropper")
+
+
+def curious_neighbor(agent: int) -> Adversary:
+    return Adversary("curious_neighbor", agent=int(agent))
+
+
+def flatten_agents(tree: Pytree) -> jax.Array:
+    """Flatten a pytree with leading agent axis to one (m, D) f32 buffer.
+
+    SAME convention as `kernels.ops._flatten_concat` (jax.tree.leaves
+    order, per-leaf ravel of the trailing dims, concat along axis 1) so a
+    capture built here is positionally identical to one emitted from the
+    fused kernel's already-flattened buffers.
+    """
+    leaves = jax.tree.leaves(tree)
+    flat = [l.reshape(l.shape[0], -1).astype(jnp.float32) for l in leaves]
+    return jnp.concatenate(flat, axis=1) if len(flat) > 1 else flat[0]
+
+
+def wire_messages(W: jax.Array, B: jax.Array, x_flat: jax.Array,
+                  u_flat: jax.Array) -> jax.Array:
+    """The full PDSGD wire tensor: V[i, j] = w_ij x_j - b_ij u_j, i != j.
+
+    The diagonal is zeroed — v_jj is computed by agent j for itself and
+    NEVER transmitted, which is exactly why the residual mask
+    (1 - b_jj) Lambda_j survives the strongest eavesdropper aggregate
+    (Remark 8).  Entries off the realized support are exactly zero for
+    free: both W and B carry exact zeros there, and 0*x - 0*u == 0 in
+    f32, so every path that computes its messages as w*x - b*u emits the
+    bit-identical tensor.
+    """
+    m = W.shape[0]
+    off = 1.0 - jnp.eye(m, dtype=jnp.float32)
+    V = (W.astype(jnp.float32)[:, :, None] * x_flat[None, :, :]
+         - B.astype(jnp.float32)[:, :, None] * u_flat[None, :, :])
+    return V * off[:, :, None]
+
+
+def broadcast_messages(x_flat: jax.Array, support: jax.Array) -> jax.Array:
+    """Conventional-DSGD wire tensor: agent j transmits x_j in the clear
+    to every live neighbor — V[i, j] = x_j on realized off-diagonal links.
+    This is the observation model under which gradients are exactly
+    recoverable (public W and lam; see `privacy.attacks.
+    dsgd_exact_recovery`), the baseline the paper positions against."""
+    m = support.shape[0]
+    off = support.astype(jnp.float32) * (1.0 - jnp.eye(m, dtype=jnp.float32))
+    return off[:, :, None] * x_flat[None, :, :]
+
+
+def full_record(*, v: jax.Array, support: jax.Array, x_flat: jax.Array,
+                u_flat: jax.Array, g_flat: jax.Array, W: jax.Array,
+                B: jax.Array) -> dict:
+    """The auditor-grade PDSGD record: everything any adversary model is a
+    restriction of, plus the ground truth (g) attack evaluation scores
+    against.  A fixed flat dict of arrays so `lax.scan` stacks it into a
+    (T, ...) observation buffer with zero host involvement."""
+    return {"v": v, "support": support.astype(jnp.float32), "x": x_flat,
+            "u": u_flat, "g": g_flat, "W": W.astype(jnp.float32),
+            "B": B.astype(jnp.float32)}
+
+
+def state_record(*, support: jax.Array, x_flat: jax.Array,
+                 g_flat: jax.Array, W: jax.Array,
+                 lam: jax.Array) -> dict:
+    """The auditor-grade record for state-sharing baselines (dsgd /
+    dp_dsgd): the wire carries x_j itself; lam is public."""
+    support = support.astype(jnp.float32)
+    return {"v": broadcast_messages(x_flat, support), "support": support,
+            "x": x_flat, "g": g_flat, "W": W.astype(jnp.float32),
+            "lam": jnp.asarray(lam, jnp.float32)}
+
+
+def adversary_view(adv: Adversary, record: dict) -> dict:
+    """Restrict a full record to what ``adv`` actually observes.
+
+    Traced with the step (the view is a projection, all zeros/gathers), so
+    the un-observed fields never reach the host when a real adversary
+    model is selected — the audit buffer IS the adversary's knowledge.
+    """
+    if adv.kind == "auditor":
+        return record
+    if adv.kind == "external_eavesdropper":
+        # Every wire, nothing private: the messages and which links were
+        # live (an eavesdropper trivially sees silence on a dead link).
+        return {"v": record["v"], "support": record["support"]}
+    # curious_neighbor(i): messages on its OWN incident links only, plus
+    # its own state and key-derived draws — which it of course knows.
+    i = adv.agent
+    m = record["support"].shape[0]
+    inc = jnp.zeros((m, m), jnp.float32).at[i, :].set(1.0).at[:, i].set(1.0)
+    view = {
+        "v": record["v"] * inc[:, :, None],
+        "support": record["support"],
+        "x_self": record["x"][i],
+        "w_row": record["W"][i],
+    }
+    if "u" in record:
+        view["u_self"] = record["u"][i]
+    if "B" in record:
+        view["b_col"] = record["B"][:, i]
+    if "lam" in record:
+        view["lam"] = record["lam"]
+    return view

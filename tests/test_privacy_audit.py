@@ -1,0 +1,535 @@
+"""The privacy-audit subsystem (`repro.privacy` + `repro.launch.audit`):
+
+* estimator-vs-closed-form agreement for theta / h(y) / the MSE floor
+  (Remark 5's kappa=5 numbers),
+* observation-capture bit-parity: capture-on never perturbs the
+  trajectory, and eager / fused / scanned / ring emit identical streams,
+* attack regressions: DSGD's state-in-the-clear wire is exactly
+  invertible while PDSGD's reconstruction MSE respects the Theorem-5
+  floor,
+* the satellite fixes: realized-W_k eavesdropper observations, gradient
+  clipping (`--grad-clip-kappa`), and the B-connectivity window monitor.
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import entropy as E
+from repro.core import (clip_gradients, init_state, lambda_stats,
+                        make_decentralized_step, make_mixing, make_topology)
+from repro.core import schedules as S
+from repro.core.privacy import agent_key, obfuscated_gradient, sample_B
+from repro.launch import audit as AU
+from repro.privacy import attacks as A
+from repro.privacy import estimators as PE
+from repro.privacy import observe as O
+
+
+# -- estimators vs closed forms -----------------------------------------
+
+def test_estimators_match_remark5_closed_forms():
+    """kappa=5: theta = 1.0322, MSE floor 0.4614 (the paper's Remark 5
+    numbers).  Both the histogram and the Kozachenko-Leonenko estimator
+    must land on the closed forms from SAMPLES of y = lam*g alone."""
+    lam_bar, kappa = 0.5, 5.0
+    _, y = PE.sample_observations(lam_bar, kappa, 200_000, seed=1)
+    h_cl = E.product_entropy_closed(lam_bar, kappa)
+    assert abs(PE.binned_entropy(y) - h_cl) < 0.02
+    assert abs(PE.knn_entropy(y) - h_cl) < 0.02
+    th_cl = E.theta_closed(lam_bar, kappa)
+    assert abs(th_cl - 1.0322) < 1e-4
+    assert abs(PE.estimate_theta(y, lam_bar, kappa, method="binned")
+               - th_cl) < 0.02
+    assert abs(PE.estimate_theta(y, lam_bar, kappa, method="knn")
+               - th_cl) < 0.02
+
+
+def test_estimated_theta_is_lam_bar_free():
+    """theta = log(kappa) - gamma_EM independent of lam_bar — the paper's
+    key structural claim; the empirical estimate must see it too."""
+    kappa = 5.0
+    thetas = []
+    for lam_bar in (0.01, 0.5, 5.0):
+        _, y = PE.sample_observations(lam_bar, kappa, 120_000, seed=2)
+        thetas.append(PE.estimate_theta(y, lam_bar, kappa, method="knn"))
+    assert max(thetas) - min(thetas) < 0.04
+    assert abs(np.mean(thetas) - E.theta_closed(1.0, kappa)) < 0.03
+
+
+def test_empirical_recovery_floor_respects_bound():
+    lam_bar, kappa = 0.5, 5.0
+    g, y = PE.sample_observations(lam_bar, kappa, 200_000, seed=3)
+    mse = PE.empirical_recovery_floor(g, y)
+    bound = E.mse_lower_bound(E.theta_closed(lam_bar, kappa))
+    assert mse >= bound, (mse, bound)
+
+
+def test_knn_entropy_2d_gaussian():
+    """The kNN estimator in d=2 (used for joint-entropy checks): standard
+    bivariate normal has h = 1 + log(2 pi)."""
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(8_000, 2))
+    h = PE.knn_entropy(x, k=4)
+    assert abs(h - (1.0 + np.log(2.0 * np.pi))) < 0.05
+
+
+# -- observation capture: bit parity across all four paths ---------------
+
+@pytest.fixture(scope="module")
+def parity_runs():
+    cfg = AU.AuditConfig(agents=5, dim=3, parity_steps=6)
+    return AU.capture_trajectories(cfg)
+
+
+def test_capture_never_perturbs_trajectory(parity_runs):
+    runs = parity_runs
+    for name in ("eager", "fused", "ring"):
+        np.testing.assert_array_equal(runs[name]["traj"],
+                                      runs[name + "_off"]["traj"])
+    np.testing.assert_array_equal(runs["scanned"]["final"],
+                                  runs["scanned_off"]["final"])
+    np.testing.assert_array_equal(runs["scanned"]["loss_stream"],
+                                  runs["scanned_off"]["loss_stream"])
+
+
+def test_all_paths_emit_identical_observations(parity_runs):
+    runs = parity_runs
+    ref = runs["eager"]["obs"]
+    assert set(ref) == {"v", "support", "x", "u", "g", "W", "B"}
+    for name in ("fused", "scanned", "ring"):
+        obs = runs[name]["obs"]
+        for field in ref:
+            np.testing.assert_array_equal(
+                obs[field], ref[field],
+                err_msg=f"{name} vs eager differ on {field!r}")
+
+
+def test_capture_parity_under_dropout():
+    """The time-varying scenario: realized W_k per step, dropped links
+    carry exactly-zero messages, and the four paths still agree."""
+    cfg = AU.AuditConfig(agents=5, dim=2, parity_steps=5, dropout=0.4)
+    rep = AU.parity_report(cfg)
+    assert rep["all_pass"], rep
+    # at rate 0.4 some step must actually have dropped an edge
+    runs = AU.capture_trajectories(cfg)
+    sup = runs["eager"]["obs"]["support"]
+    base = make_topology("ring", 5).adjacency.astype(np.float32)
+    assert (sup < base[None]).any(), "dropout never realized a failure"
+
+
+def test_wire_tensor_matches_eq3_messages(parity_runs):
+    """v[i, j] must be w_ij x_j - b_ij u_j for every realized edge — the
+    exact Sec. III wire content — and zero on the diagonal (v_jj never
+    transmitted) and off the support."""
+    obs = parity_runs["eager"]["obs"]
+    v, W, B, x, u, sup = (obs[k] for k in ("v", "W", "B", "x", "u",
+                                           "support"))
+    T, m, _, D = v.shape
+    for k in (0, T - 1):
+        expect = (W[k][:, :, None] * x[k][None, :, :]
+                  - B[k][:, :, None] * u[k][None, :, :])
+        expect *= (1.0 - np.eye(m))[:, :, None]
+        # allclose, not array_equal: XLA fuses the multiply-subtract into
+        # an FMA, so a host numpy recomputation differs by ~1 ulp (the
+        # cross-PATH streams are pinned bitwise in the parity tests —
+        # every path runs the same fused op)
+        np.testing.assert_allclose(v[k], expect.astype(np.float32),
+                                   rtol=1e-6, atol=1e-8)
+        assert np.all(v[k][np.eye(m, dtype=bool)] == 0.0)
+        off_support = (sup[k] == 0.0)
+        assert np.all(v[k][off_support] == 0.0)
+
+
+def test_adversary_views():
+    """The external eavesdropper sees wires only; the curious neighbor
+    sees its incident links plus its own keys/state."""
+    cfg = AU.AuditConfig(agents=4, dim=2, parity_steps=1)
+    rec = {k: jnp.asarray(v[0]) for k, v in
+           AU.capture_trajectories(cfg)["eager"]["obs"].items()}
+    ext = O.adversary_view(O.external_eavesdropper(), rec)
+    assert set(ext) == {"v", "support"}
+    np.testing.assert_array_equal(np.asarray(ext["v"]),
+                                  np.asarray(rec["v"]))
+
+    i = 2
+    cur = O.adversary_view(O.curious_neighbor(i), rec)
+    v = np.asarray(cur["v"])
+    m = v.shape[0]
+    for a in range(m):
+        for b in range(m):
+            if a != i and b != i:
+                assert np.all(v[a, b] == 0.0), (a, b)
+    np.testing.assert_array_equal(np.asarray(cur["x_self"]),
+                                  np.asarray(rec["x"][i]))
+    np.testing.assert_array_equal(np.asarray(cur["b_col"]),
+                                  np.asarray(rec["B"][:, i]))
+    with pytest.raises(ValueError, match="agent"):
+        O.Adversary("curious_neighbor")
+    with pytest.raises(ValueError, match="unknown adversary"):
+        O.Adversary("nsa")
+
+
+def test_make_train_step_observer_dense():
+    """The mesh driver's capture plumbing: observer switches the aux to
+    {loss, observation} and the dsgd record carries the broadcast wire."""
+    import types
+
+    from repro.launch.steps import make_train_step
+
+    class _FakeMesh:
+        def __init__(self, **axes):
+            self.shape = axes
+
+    m, d = 4, 3
+    mesh = _FakeMesh(data=m, model=1)
+    bundle = types.SimpleNamespace(
+        loss_fn=lambda p, b: jnp.mean(jnp.sum((p - b) ** 2, -1)))
+    rng = np.random.default_rng(0)
+    targets = jnp.asarray(rng.normal(size=(m, d)).astype(np.float32))
+
+    step_off = jax.jit(make_train_step(bundle, mesh, lam_base=0.1))
+    step_on = jax.jit(make_train_step(bundle, mesh, lam_base=0.1,
+                                      observer=O.external_eavesdropper()))
+    p0 = jnp.zeros((m, d))
+    p_off, loss_off = step_off(p0, targets, jnp.int32(0), jnp.int32(0))
+    p_on, aux = step_on(p0, targets, jnp.int32(0), jnp.int32(0))
+    np.testing.assert_array_equal(np.asarray(p_on), np.asarray(p_off))
+    assert float(aux["loss"]) == float(loss_off)
+    assert set(aux["observation"]) == {"v", "support"}
+    assert aux["observation"]["v"].shape == (m, m, d)
+
+    step_d = jax.jit(make_train_step(bundle, mesh, algorithm="dsgd",
+                                     lam_base=0.1, observer=O.auditor()))
+    _, aux_d = step_d(p0, targets, jnp.int32(0), jnp.int32(0))
+    # dsgd's wire is the state itself, broadcast to every live neighbor
+    v = np.asarray(aux_d["observation"]["v"])
+    sup = np.asarray(aux_d["observation"]["support"])
+    j = 1
+    recv = [i for i in range(m) if i != j and sup[i, j] > 0]
+    for i in recv:
+        np.testing.assert_array_equal(v[i, j], np.asarray(p0[j]))
+
+    with pytest.raises(ValueError, match="pdsgd/dsgd"):
+        make_train_step(bundle, mesh, algorithm="dsgt",
+                        observer=O.auditor())
+
+
+def test_observer_rejects_dsgt_in_core():
+    top = make_topology("ring", 4)
+    with pytest.raises(ValueError, match="dsgt"):
+        make_decentralized_step(lambda p, b: jnp.sum(p ** 2), top,
+                                S.harmonic(0.1), algorithm="dsgt",
+                                observer=O.auditor())
+
+
+# -- attacks: DSGD recovers, PDSGD is floored ----------------------------
+
+@pytest.fixture(scope="module")
+def attack_reports():
+    cfg = AU.AuditConfig(agents=5, attack_steps=30)
+    return AU.attack_report(cfg)
+
+
+def test_dsgd_wire_is_exactly_invertible(attack_reports):
+    """Conventional DSGD: public W and lam make the gradient recoverable
+    from two observed rounds, up to f32 rounding — the privacy failure
+    the paper opens with."""
+    rep = attack_reports
+    assert rep["dsgd_recovery_rel_err"] < 1e-6, rep
+
+
+def test_pdsgd_recovery_respects_theorem5_floor(attack_reports):
+    """The least-squares inversion of the eavesdropper aggregate (granted
+    even x_j and W_k) must sit above e^{2 theta} / (2 pi e)."""
+    rep = attack_reports
+    assert rep["pdsgd_respects_bound"], rep
+    assert rep["pdsgd_ls_recovery_mse"] >= rep["theorem5_mse_bound"]
+    # and the gap to DSGD's exact recovery is astronomical
+    assert rep["recovery_gap"] > 1e6, rep
+
+
+def test_ls_recovery_on_synthetic_uniform():
+    """On the exact Theorem-5 model (uniform g, uniform lam) the bound
+    applies verbatim: any estimator's MSE >= the floor; the LS inversion
+    lands above it while the DSGD-style exact observation is error-free."""
+    lam_bar, kappa = 0.5, 5.0
+    g, y = PE.sample_observations(lam_bar, kappa, 100_000, seed=4)
+    mse_ls = float(np.mean((y / lam_bar - g) ** 2))
+    bound = E.mse_lower_bound(E.theta_closed(lam_bar, kappa))
+    assert mse_ls >= bound
+
+
+def test_eavesdropper_observation_uses_realized_Wk():
+    """Satellite regression: under dropout the observation model must sum
+    only messages that were actually sent — the realized W_k/support_k
+    from the MixingProcess, not the frozen topology."""
+    m, j = 5, 2
+    top = make_topology("paper_fig1", m)
+    mix = make_mixing(top, rate=0.5, seed=3)
+    key, lam_bar = jax.random.key(7), jnp.float32(0.1)
+    rng = np.random.default_rng(0)
+    x_j = {"w": jnp.asarray(rng.normal(size=(4,)).astype(np.float32))}
+    g_j = {"w": jnp.asarray(rng.normal(size=(4,)).astype(np.float32))}
+
+    # find a step where one of j's links actually dropped
+    step = None
+    for k in range(40):
+        _, sup, _ = mix.realize(jnp.int32(k))
+        if np.asarray(sup[:, j]).sum() < top.adjacency[:, j].sum():
+            step = k
+            break
+    assert step is not None
+    W_k, sup_k, _ = mix.realize(jnp.int32(step))
+
+    obs = A.eavesdropper_observation(key, jnp.int32(step), j, x_j, g_j,
+                                     lam_bar=lam_bar, mixing=mix)["w"]
+    # manual wire sum on the REALIZED graph, same key derivations
+    k_j = agent_key(jax.random.fold_in(key, 1), jnp.int32(step), j)
+    u_j = obfuscated_gradient(k_j, {"w": g_j["w"]}, lam_bar)["w"]
+    B = sample_B(agent_key(jax.random.fold_in(key, 2), jnp.int32(step), 0),
+                 sup_k)
+    v_sum = sum(float(W_k[i, j]) * x_j["w"] - B[i, j] * u_j
+                for i in range(m)
+                if i != j and float(sup_k[i, j]) > 0)
+    np.testing.assert_allclose(np.asarray(obs), np.asarray(v_sum),
+                               rtol=1e-5, atol=1e-6)
+    # the frozen-W model would differ (that was the bug)
+    obs_frozen = A.eavesdropper_observation(
+        key, jnp.int32(step), j, x_j, g_j,
+        W=jnp.asarray(top.weights, jnp.float32),
+        support=jnp.asarray(top.adjacency, jnp.float32), lam_bar=lam_bar)
+    assert not np.allclose(np.asarray(obs), np.asarray(obs_frozen["w"]))
+    with pytest.raises(ValueError, match="not both"):
+        A.eavesdropper_observation(key, 0, j, x_j, g_j,
+                                   W=W_k, support=sup_k, lam_bar=lam_bar,
+                                   mixing=mix)
+    with pytest.raises(ValueError, match="lam_bar"):
+        A.eavesdropper_observation(key, 0, j, x_j, g_j, mixing=mix)
+
+
+def test_states_from_broadcast_guards():
+    """An isolated sender transmitted nothing — refuse to decode zeros —
+    and a per-step support stream picks receivers per step."""
+    m, D, T = 4, 2, 3
+    sup = np.ones((m, m), np.float32)
+    x = np.arange(T * m * D, dtype=np.float32).reshape(T, m, D)
+    v_stream = np.stack([np.asarray(O.broadcast_messages(
+        jnp.asarray(x[t]), jnp.asarray(sup))) for t in range(T)])
+    got = np.asarray(A.states_from_broadcast(v_stream, sup))
+    np.testing.assert_array_equal(got, x)
+    # per-step supports: drop a different edge each step, still decodable
+    sup_stream = np.stack([sup] * T)
+    sup_stream[1, 0, 1] = sup_stream[1, 1, 0] = 0.0
+    v2 = np.stack([np.asarray(O.broadcast_messages(
+        jnp.asarray(x[t]), jnp.asarray(sup_stream[t]))) for t in range(T)])
+    got2 = np.asarray(A.states_from_broadcast(v2, sup_stream))
+    np.testing.assert_array_equal(got2, x)
+    # isolated sender: column 2 has no live receiver at step 1
+    sup_iso = np.stack([sup] * T)
+    sup_iso[1, :, 2] = 0.0
+    sup_iso[1, 2, 2] = 1.0
+    with pytest.raises(ValueError, match="no live receiver"):
+        A.states_from_broadcast(v2, sup_iso)
+
+
+def test_ring_capture_refuses_sharded_leaf_specs():
+    from jax.sharding import PartitionSpec as P
+
+    from repro.dist import collectives as C
+    m = 4
+    params = {"w": jnp.zeros((m, 3))}
+    b = C.sample_b_draws(jax.random.key(0), m, m, 1)
+    with pytest.raises(ValueError, match="leaf_specs"):
+        C.torus_gossip_pdsgd(None, params, params, b, n_data=m, n_pod=1,
+                             leaf_specs={"w": P("data", None)},
+                             capture=True)
+
+
+@pytest.mark.slow
+def test_dlg_attack_grid_sweeps_agents():
+    """The vmapped DLG sweep: per-agent observations attacked in one
+    dispatch; exact gradients reconstruct, obfuscated ones degrade."""
+    from repro.data import synthetic_digits
+
+    rng = np.random.default_rng(0)
+    params = {
+        "w1": jnp.asarray(rng.normal(size=(36, 24)).astype(np.float32) * .3),
+        "b1": jnp.zeros((24,)),
+        "w2": jnp.asarray(rng.normal(size=(24, 4)).astype(np.float32) * .3),
+        "b2": jnp.zeros((4,)),
+    }
+
+    def loss(p, x, soft):
+        h = jnp.tanh(x.reshape(x.shape[0], -1) @ p["w1"] + p["b1"])
+        return -jnp.mean(jnp.sum(
+            soft * jax.nn.log_softmax(h @ p["w2"] + p["b2"]), -1))
+
+    x, y = synthetic_digits(1, seed=3, size=6, classes=4)
+    x = jnp.asarray(x)
+    soft = jax.nn.one_hot(jnp.asarray(y), 4)
+    g = jax.grad(loss)(params, x, soft)
+    # batch of three observations: exact, and two obfuscated draws
+    obs = jax.tree.map(
+        lambda e, o1, o2: jnp.stack([e, o1, o2]), g,
+        obfuscated_gradient(jax.random.key(1), g, jnp.float32(0.05)),
+        obfuscated_gradient(jax.random.key(2), g, jnp.float32(0.05)))
+    res = A.dlg_attack_grid(loss, params, obs, x.shape, 4,
+                            key=jax.random.key(0), steps=400, lr=0.1,
+                            true_x=x)
+    assert res.recon_x.shape == (3,) + x.shape
+    mses = [float(jnp.mean((res.recon_x[i] - x) ** 2)) for i in range(3)]
+    assert mses[0] < 0.02, mses
+    assert min(mses[1], mses[2]) > 2.5 * mses[0], mses
+
+
+# -- gradient clipping (--grad-clip-kappa) -------------------------------
+
+def test_grad_clip_enforces_theorem5_premise():
+    """Clipping bounds |g| <= kappa, so every wire element lam*g lands in
+    [-y_max, y_max] with y_max = 2 lam_bar kappa from lambda_stats — the
+    premise Theorem 5's uniform analysis needs."""
+    kappa, lam_bar = 2.0, 0.25
+    rng = np.random.default_rng(0)
+    g = {"w": jnp.asarray(rng.normal(size=(256,)).astype(np.float32) * 50)}
+    clipped = clip_gradients(g, kappa)
+    assert float(jnp.max(jnp.abs(clipped["w"]))) <= kappa
+    stats = lambda_stats(lam_bar, kappa)
+    assert stats["y_max"] == pytest.approx(2 * lam_bar * kappa)
+    assert stats["theta"] == pytest.approx(E.theta_closed(lam_bar, kappa))
+    assert stats["mse_bound"] == pytest.approx(
+        E.mse_lower_bound(stats["theta"]))
+    u = obfuscated_gradient(jax.random.key(0), clipped, lam_bar)
+    assert float(jnp.max(jnp.abs(u["w"]))) <= stats["y_max"] * (1 + 1e-6)
+    # kappa-free call unchanged (back-compat)
+    assert set(lambda_stats(lam_bar)) == {"mean", "std", "var"}
+
+
+def test_grad_clip_in_step_caps_captured_wire():
+    """End-to-end: a step built with grad_clip must emit u within the
+    lambda_stats envelope even when raw gradients are enormous."""
+    m, d, kappa = 4, 3, 1.5
+    top = make_topology("ring", m)
+    rng = np.random.default_rng(1)
+    batch = jnp.asarray(rng.normal(size=(m, d)).astype(np.float32) * 100)
+
+    def loss(p, b):
+        return jnp.sum((p - b) ** 2)  # grads ~ 200 at init, way past kappa
+
+    sched = S.paper_experiment(0.1)
+    step = make_decentralized_step(loss, top, sched, donate=False,
+                                   observer=O.auditor(), grad_clip=kappa)
+    state = init_state(jnp.zeros((d,)), m)
+    state, aux = step(state, batch, jax.random.key(0))
+    obs = aux["observation"]
+    assert float(jnp.max(jnp.abs(obs["g"]))) <= kappa
+    lam0 = float(sched(np.asarray(0.0), 0))
+    y_max = lambda_stats(lam0, kappa)["y_max"]
+    assert float(jnp.max(jnp.abs(obs["u"]))) <= y_max * (1 + 1e-6)
+    with pytest.raises(ValueError, match="grad_clip"):
+        make_decentralized_step(loss, top, sched, grad_clip=-1.0)
+
+
+def test_grad_clip_cli_wiring():
+    from repro.launch.train import build_parser
+    args = build_parser().parse_args(["--grad-clip-kappa", "3.5",
+                                      "--b-window", "16",
+                                      "--privacy-audit"])
+    assert args.grad_clip_kappa == 3.5
+    assert args.b_window == 16
+    assert args.privacy_audit
+    assert build_parser().parse_args([]).grad_clip_kappa is None
+
+
+# -- B-connectivity window diagnostics -----------------------------------
+
+def test_window_monitor_static_always_connected():
+    mix = make_mixing(make_topology("ring", 5))
+    mon = mix.window_monitor(4)
+    out = mon(jnp.int32(17))
+    assert bool(out["connected"])
+    assert int(out["union_min_degree"]) == 2
+    assert int(out["union_edges"]) == 5
+
+
+def test_window_monitor_matches_numpy_union():
+    """The traced union over the window must equal the numpy union of the
+    per-step realized supports, and connectivity must match a host BFS."""
+    mix = make_mixing(make_topology("ring", 6), rate=0.6, seed=7)
+    window = 5
+    for step in (4, 11, 23):
+        sups = [np.asarray(mix.realize(jnp.int32(s))[1])
+                for s in range(max(0, step - window + 1), step + 1)]
+        union = (np.sum(sups, axis=0) > 0).astype(np.float32)
+        traced = np.asarray(mix.union_support(jnp.int32(step), window))
+        np.testing.assert_array_equal(traced, union)
+        # host-side connectivity of the union graph
+        from repro.core.topology import _connected
+        expect = _connected(union.astype(bool))
+        got = bool(mix.window_monitor(window)(jnp.int32(step))["connected"])
+        assert got == expect, (step, got, expect)
+
+
+def test_window_monitor_sees_disconnection():
+    """A high dropout rate with window 1 must show SOME disconnected
+    realizations (per-step disconnection is allowed by the theory; the
+    monitor's job is to make streaks visible)."""
+    mix = make_mixing(make_topology("ring", 6), rate=0.7, seed=1)
+    mon = mix.window_monitor(1)
+    flags = [bool(mon(jnp.int32(k))["connected"]) for k in range(30)]
+    assert not all(flags)
+    # a wide union window heals it
+    mon_wide = mix.window_monitor(20)
+    assert bool(mon_wide(jnp.int32(25))["connected"])
+    with pytest.raises(ValueError, match="window"):
+        mix.window_monitor(0)
+
+
+def test_train_logs_window_diagnostics():
+    """`--b-window` surfaces in the driver's history records (auto-on for
+    time-varying runs)."""
+    from repro.launch.train import build_mixing, build_parser
+    args = build_parser().parse_args(["--topology-dropout", "0.4",
+                                      "--agents", "5"])
+    mixing = build_mixing(args)
+    assert not mixing.is_static
+    # the driver defaults b_window to 8 for time-varying mixing
+    assert args.b_window is None
+    mon = mixing.window_monitor(8)
+    out = mon(jnp.int32(7))
+    assert set(out) == {"connected", "union_min_degree", "union_edges"}
+
+
+# -- the audit driver ----------------------------------------------------
+
+def test_run_audit_writes_report(tmp_path):
+    cfg = AU.AuditConfig(agents=5, dim=2, parity_steps=3, attack_steps=12,
+                         samples=30_000)
+    out = tmp_path / "privacy_report.json"
+    report = AU.run_audit(cfg, out=str(out))
+    assert report["ok"], report
+    on_disk = json.loads(out.read_text())
+    assert on_disk["parity"]["all_pass"]
+    assert on_disk["theorem5"]["floor_respected"]
+    assert on_disk["attacks"]["pdsgd_respects_bound"]
+    assert on_disk["attacks"]["dsgd_recovery_rel_err"] < 1e-6
+    assert on_disk["audit"]["version"] == AU.AUDIT_VERSION
+    assert on_disk["adversary_models"] == list(O.ADVERSARY_KINDS)
+
+
+def test_audit_fingerprint_in_run_meta(tmp_path):
+    """--privacy-audit stamps the audit config into checkpoint run_meta
+    (alongside the mixing fingerprint)."""
+    from repro.checkpoint import CheckpointManager, read_run_meta
+
+    cfg = AU.AuditConfig(agents=4, kappa=2.0, seed=9)
+    fp = AU.audit_fingerprint(cfg)
+    assert fp["kappa"] == 2.0 and fp["version"] == AU.AUDIT_VERSION
+    mgr = CheckpointManager(str(tmp_path), run_meta={"privacy_audit": fp})
+    state = init_state(jnp.zeros((2,)), 4)
+    mgr.save(3, state)
+    mgr.close()
+    stored = read_run_meta(str(tmp_path), 3)["privacy_audit"]
+    assert stored == json.loads(json.dumps(fp))  # JSON-stable
