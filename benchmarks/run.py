@@ -801,6 +801,117 @@ def bench_privacy_audit(iters=600, unroll_k=100):
          f"auditor_vs_off={payload['auditor_overhead_vs_off']}x")
 
 
+def bench_fault_injection(iters=600, unroll_k=100):
+    """Fault-tolerance tax on the Fig. 2 scanned hot loop, fused-kernel
+    path: fault-free vs nan-sentinels-only vs markov crash churn vs
+    guarded corrupt links.
+
+    Four rows, all `use_pallas=True` over the same workload so each
+    ratio isolates one mechanism: ``sentinel`` adds the traced isfinite
+    reduction over loss+params (nan_policy="skip", no faults);
+    ``crash`` adds the per-step fault realization + in-trace Metropolis
+    re-weighting over survivors + row freezing; ``corrupt_guarded``
+    routes gossip through the per-link finite-guard kernel
+    (`kernels.gossip.guarded_gossip_update`, the (m, m, bn) v tensor
+    in VMEM).  Rows are interleaved across repeats so a load spike
+    inflates all four rather than skewing the ratios.  The derived
+    columns carry the final estimation error of the off and crash runs
+    — convergence evidence that 5% per-step crash onsets still solve
+    the paper's problem (the degraded-but-correct acceptance bar).
+    """
+    from repro.core import (init_state, make_decentralized_step,
+                            make_scanned_steps, make_topology)
+    from repro.core.schedules import paper_experiment
+    from repro.data import estimation_problem
+    from repro.faults import make_faults
+
+    m, d = 5, 2
+    top = make_topology("paper_fig1", m)
+    prob = estimation_problem(m, d=d, s=3, n_per_agent=100, seed=0)
+    Z, M = jnp.asarray(prob["Z"]), jnp.asarray(prob["M"])
+
+    def loss_fn(p, batch):
+        z, Mi = batch
+        return jnp.mean(jnp.sum((z - p @ Mi.T) ** 2, -1))
+
+    rng = np.random.default_rng(0)
+    idx = jnp.asarray(rng.integers(0, 100, size=(iters, m, 8)))
+    batches = (Z[jnp.arange(m)[None, :, None], idx],
+               jnp.broadcast_to(M[None], (iters,) + M.shape))
+    keys = jax.random.split(jax.random.key(0), iters)
+    chunk = lambda x, c: jax.tree.map(
+        lambda l: l[c * unroll_k:(c + 1) * unroll_k], x)
+    assert iters % unroll_k == 0
+
+    modes = {
+        "off": dict(faults=None, nan_policy="off"),
+        "sentinel": dict(faults=None, nan_policy="skip"),
+        "crash": dict(faults=make_faults(m, crash_rate=0.05,
+                                         restart_rate=0.5, seed=1),
+                      nan_policy="skip"),
+        "corrupt_guarded": dict(
+            faults=make_faults(m, corrupt_rate=0.1, corrupt_mode="nan",
+                               guard_clip=1e3, seed=1),
+            nan_policy="skip"),
+    }
+    scans = {
+        name: make_scanned_steps(
+            make_decentralized_step(loss_fn, top, paper_experiment(0.05),
+                                    use_pallas=True, donate=False, **kw),
+            unroll_k, donate=False)
+        for name, kw in modes.items()
+    }
+
+    def run(scanned):
+        state = init_state(jnp.zeros((d,)), m)
+        state, _ = scanned(state, chunk(batches, 0), chunk(keys, 0))
+        state = init_state(jnp.zeros((d,)), m)
+        t0 = time.perf_counter()
+        for c in range(iters // unroll_k):
+            state, aux = scanned(state, chunk(batches, c), chunk(keys, c))
+        jax.block_until_ready(state.params)
+        elapsed = time.perf_counter() - t0
+        err = float(np.linalg.norm(
+            np.asarray(jax.tree.leaves(state.params)[0]).mean(0)
+            - prob["theta_opt"]))
+        return elapsed / iters * 1e6, err
+
+    runs = {name: [] for name in modes}
+    for _ in range(4):
+        for name in modes:
+            runs[name].append(run(scans[name]))
+    results = {name: min(rs)[0] for name, rs in runs.items()}
+    errs = {name: rs[0][1] for name, rs in runs.items()}
+
+    payload = {
+        "workload": (f"fig2_estimation d={d} m={m} iters={iters} "
+                     f"crash=0.05/0.5 corrupt=0.1 use_pallas=True"),
+        "unroll_k": unroll_k,
+        "paths": {
+            name: {"us_per_step": round(us, 2),
+                   "steps_per_s": round(1e6 / us, 1)}
+            for name, us in results.items()
+        },
+        "sentinel_overhead_vs_off": round(
+            results["sentinel"] / results["off"], 3),
+        "crash_overhead_vs_off": round(results["crash"] / results["off"], 3),
+        "corrupt_guarded_overhead_vs_off": round(
+            results["corrupt_guarded"] / results["off"], 3),
+        "final_err_off": errs["off"],
+        "final_err_crash": errs["crash"],
+        "backend": jax.default_backend(),
+    }
+    _write_bench_json({"bench_fault_injection": payload})
+    for name, us in results.items():
+        emit(f"bench_fault_injection_{name}", us,
+             f"steps_per_s={1e6 / us:.1f};final_err={errs[name]:.5f}")
+    emit("bench_fault_injection_overhead", 0.0,
+         f"sentinel_vs_off={payload['sentinel_overhead_vs_off']}x;"
+         f"crash_vs_off={payload['crash_overhead_vs_off']}x;"
+         f"corrupt_guarded_vs_off="
+         f"{payload['corrupt_guarded_overhead_vs_off']}x")
+
+
 def kernel_benches():
     from repro.kernels import (flash_attention, gossip_update,
                                obfuscate_update, ssd_intra_chunk)
@@ -847,6 +958,7 @@ BENCHES = {
     "bench_checkpoint": bench_checkpoint,
     "bench_dynamic_topology": bench_dynamic_topology,
     "bench_privacy_audit": bench_privacy_audit,
+    "bench_fault_injection": bench_fault_injection,
     "kernel_benches": kernel_benches,
     "fig3_nonconvex": fig3_nonconvex,
 }

@@ -42,6 +42,28 @@ python benchmarks/run.py --only bench_dynamic_topology
 echo "== privacy-audit capture perf (bench_privacy_audit) =="
 python benchmarks/run.py --only bench_privacy_audit
 
+echo "== fault-injection perf (bench_fault_injection) =="
+python benchmarks/run.py --only bench_fault_injection
+
+echo "== fault-injection smoke (crash churn + raw NaN chaos, skip-and-hold) =="
+python - <<'EOF'
+import json, subprocess, sys
+out = subprocess.run(
+    [sys.executable, "-m", "repro.launch.train",
+     "--arch", "stablelm-3b-smoke", "--agents", "4", "--steps", "8",
+     "--per-agent-batch", "1", "--seq-len", "16", "--log-every", "4",
+     "--fault-crash-rate", "0.2", "--fault-restart-rate", "0.5",
+     "--fault-corrupt-rate", "0.3", "--fault-guard-clip", "0",
+     "--nan-policy", "skip"],
+    capture_output=True, text=True, check=True)
+summary = next(json.loads(l) for l in out.stdout.splitlines()
+               if l.startswith("{") and "fault_summary" in l)
+totals = summary["fault_summary"]
+assert totals.get("fault_down", 0) > 0, totals       # churn actually happened
+assert totals.get("fault_corrupt", 0) > 0, totals    # poison actually flowed
+print("fault smoke ok:", json.dumps(summary))
+EOF
+
 echo "== benchmark regression gate =="
 python scripts/bench_gate.py "$prev_bench" BENCH_pdsgd.json
 

@@ -53,6 +53,7 @@ class _WriterState:
         self.lock = threading.Lock()
         self.error: BaseException | None = None
         self.completed: set[int] = set(completed)
+        self.retries = 0  # transient commit OSErrors survived (cumulative)
 
 
 def _retained(completed: set[int], keep_last: int | None,
@@ -124,6 +125,7 @@ def _write_manifest(directory: str, state: _WriterState,
         "format": 1,
         "completed": sorted(state.completed),
         "policy": {"keep_last": keep_last, "keep_every": keep_every},
+        "retries": state.retries,
     })
 
 
@@ -142,6 +144,33 @@ def _commit_and_gc(directory: str, step: int, arrays: dict, meta: dict,
                       ignore_errors=True)
 
 
+# Transient-OSError retry policy for commits.  NFS blips, ENOSPC races
+# with a concurrent GC, EINTR-adjacent weirdness: parking the manager
+# fatal on the FIRST such error turns a 100ms filesystem hiccup into a
+# dead train run.  `io.commit_snapshot` cleans up its staging dir on any
+# failure, so re-running it is safe; attempts are bounded and backed off
+# so a genuinely broken disk still fails fast-ish, and the count of
+# survived retries is surfaced in manifest.json for post-mortems.
+COMMIT_RETRIES = 3        # total attempts = 1 + COMMIT_RETRIES
+COMMIT_BACKOFF_S = 0.1    # doubles per retry: 0.1, 0.2, 0.4
+
+
+def _commit_with_retry(directory: str, step: int, arrays: dict, meta: dict,
+                       state: _WriterState, keep_last: int | None,
+                       keep_every: int | None) -> None:
+    for attempt in range(1 + COMMIT_RETRIES):
+        try:
+            _commit_and_gc(directory, step, arrays, meta, state,
+                           keep_last, keep_every)
+            return
+        except OSError:
+            if attempt == COMMIT_RETRIES:
+                raise
+            with state.lock:
+                state.retries += 1
+            _time.sleep(COMMIT_BACKOFF_S * (2 ** attempt))
+
+
 def _writer_loop(directory: str, q: queue.Queue, state: _WriterState,
                  keep_last: int | None, keep_every: int | None) -> None:
     # Module-level (no CheckpointManager reference): the thread must not
@@ -154,8 +183,8 @@ def _writer_loop(directory: str, q: queue.Queue, state: _WriterState,
             if state.error is not None:
                 continue  # park the first error, drain the rest unwritten
             step, arrays, meta = job
-            _commit_and_gc(directory, step, arrays, meta, state,
-                           keep_last, keep_every)
+            _commit_with_retry(directory, step, arrays, meta, state,
+                               keep_last, keep_every)
         except BaseException as e:
             state.error = e
         finally:
@@ -246,6 +275,12 @@ class CheckpointManager:
         steps = self.completed_steps
         return steps[-1] if steps else None
 
+    @property
+    def retries(self) -> int:
+        """Transient commit OSErrors survived so far (also in manifest)."""
+        with self._state.lock:
+            return self._state.retries
+
     # -- error plumbing ---------------------------------------------------
     def _raise_pending(self) -> None:
         err = self._state.error
@@ -269,8 +304,8 @@ class CheckpointManager:
         arrays, meta = io.snapshot_tree(step, tree, run_meta=self.run_meta)
         self._submitted.add(step)
         if self._queue is None:
-            _commit_and_gc(self.directory, step, arrays, meta, self._state,
-                           self.keep_last, self.keep_every)
+            _commit_with_retry(self.directory, step, arrays, meta,
+                               self._state, self.keep_last, self.keep_every)
             return True
         while True:  # bounded put that notices a dying writer
             self._raise_pending()

@@ -171,6 +171,14 @@ class MixingProcess:
                                          and self.rate == 0.0)
 
     @property
+    def base_mask(self) -> jax.Array:
+        """The base graph's off-diagonal 0/1 adjacency as a device f32
+        constant — what `faults.realize_coupling` composes an alive mask
+        into when the process itself is static (no per-step mask to
+        reuse)."""
+        return self._consts["adj_off"]
+
+    @property
     def edge_prob(self) -> float:
         """Resample-mode ER edge probability (defaults to the base graph's
         off-diagonal edge density, so a redraw preserves expected degree)."""

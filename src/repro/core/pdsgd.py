@@ -134,6 +134,10 @@ def pdsgd_update(
     use_pallas: bool | None = None,
     interpret: bool | None = None,
     observe: bool = False,
+    corrupt: jax.Array | None = None,
+    corrupt_mode: str = "nan",
+    corrupt_scale: float = 1e4,
+    guard_clip: float = 1e3,
 ) -> Pytree:
     """One iteration of Eq. (4): x^{k+1} = W_k x^k - B^k Lambda^k g^k.
 
@@ -161,7 +165,18 @@ def pdsgd_update(
     buffers, so a capture there audits what the kernel realized, not a
     re-derivation), which is what guarantees capture-on never perturbs
     the trajectory.
+
+    ``corrupt`` (an (m,) 0/1 vector from `faults.FaultProcess.realize`)
+    selects the fault-tolerant gossip: corrupt agents' transmit buffers
+    are poisoned per ``corrupt_mode``/``corrupt_scale`` and every
+    per-link contribution is finite-guarded + clipped to
+    ``guard_clip`` at the receiver (`faults.inject.guarded_gossip_mix`
+    eagerly, `kernels.guarded_gossip_update` fused).  Incompatible with
+    ``observe`` — a poisoned wire is not an audited scenario.
     """
+    if corrupt is not None and observe:
+        raise ValueError("observation capture with corrupt links is not "
+                         "an audited scenario")
     B = sample_B(agent_key(jax.random.fold_in(key, 2), step, 0), support)
     if use_pallas is None:
         from ..kernels import default_use_pallas
@@ -171,7 +186,10 @@ def pdsgd_update(
         bits = _per_agent_bits(jax.random.fold_in(key, 1), step, grads)
         out = fused_pdsgd_tree(W, B, params, grads, bits, lam_bar,
                                mask=mask, interpret=interpret,
-                               observe=observe)
+                               observe=observe, corrupt=corrupt,
+                               corrupt_mode=corrupt_mode,
+                               corrupt_scale=corrupt_scale,
+                               guard_clip=guard_clip)
         if not observe:
             return out
         new_params, flats = out
@@ -179,6 +197,11 @@ def pdsgd_update(
     else:
         u = _per_agent_obfuscated(jax.random.fold_in(key, 1), step, grads,
                                   lam_bar)
+        if corrupt is not None:
+            from ..faults.inject import guarded_gossip_mix
+            return guarded_gossip_mix(W, B, params, u, corrupt,
+                                      mode=corrupt_mode,
+                                      scale=corrupt_scale, clip=guard_clip)
         mixed = gossip_mix(W, params)
         descent = gossip_mix(B, u)
         new_params = jax.tree.map(lambda a, b: a - b, mixed, descent)
@@ -271,6 +294,10 @@ def make_decentralized_step(
     force_host_schedule: bool = False,
     observer=None,
     grad_clip: float | None = None,
+    faults=None,
+    nan_policy: str = "off",
+    aggregation: str = "gossip",
+    trim: int = 1,
 ):
     """Build a jitted decentralized training step.
 
@@ -310,6 +337,29 @@ def make_decentralized_step(
     kappa] BEFORE the update and the capture — enforcing the bounded-
     gradient premise |g| <= kappa under which Theorem 5's uniform
     analysis states its entropy/MSE guarantees (`privacy.clip_gradients`).
+
+    ``faults`` (a `faults.FaultProcess`) makes agent failure part of the
+    traced step: the coupling is composed per step through
+    `faults.realize_coupling` (every realized W_k doubly stochastic over
+    the survivors), down agents hold their state frozen via traced
+    ``jnp.where``, markov-rejoin agents optionally warm start from their
+    stable neighbors (``rejoin='neighbor-avg'``), and corrupt transmits
+    are neutralized by the per-link finite guard.  An inert process
+    (all rates 0) is normalized to no-faults, so the rate-0 trajectory
+    is byte-for-byte the fault-free code path.  pdsgd only.
+
+    ``nan_policy`` adds traced isfinite sentinels on loss and updated
+    params: ``"warn"`` only counts (``aux["fault_nonfinite"]``),
+    ``"skip"`` additionally holds the pre-update state on a non-finite
+    step — ``jnp.where(finite, new, old)`` is bitwise ``new`` when
+    finite, so sentinels-on at fault rate 0 stays bit-identical.
+
+    ``aggregation="trimmed_mean"`` swaps the W-gossip for coordinate-
+    wise trimmed-mean robust aggregation over neighbor states
+    (`faults.inject.trimmed_mean_mix`) with self-applied obfuscated
+    descent; tolerates up to ``trim`` byzantine neighbors per agent but
+    broadcasts raw states (see the privacy caveat there) — refused with
+    ``observer``.
     """
     if algorithm not in ("pdsgd", "dsgd", "dsgt", "dp_dsgd"):
         raise ValueError(f"unknown algorithm {algorithm!r}")
@@ -318,32 +368,112 @@ def make_decentralized_step(
                          "dsgt's two-variable exchange is not audited")
     if grad_clip is not None and not grad_clip > 0.0:
         raise ValueError(f"grad_clip must be > 0, got {grad_clip}")
+    if nan_policy not in ("off", "warn", "skip"):
+        raise ValueError(f"unknown nan_policy {nan_policy!r}; "
+                         f"have ('off', 'warn', 'skip')")
+    if aggregation not in ("gossip", "trimmed_mean"):
+        raise ValueError(f"unknown aggregation {aggregation!r}; "
+                         f"have ('gossip', 'trimmed_mean')")
     process = as_process(topology)
+    if faults is not None and faults.is_inert:
+        faults = None  # the rate-0 path IS the fault-free path
+    if faults is not None:
+        if algorithm != "pdsgd":
+            raise ValueError(
+                "fault injection composes with the paper's pdsgd update; "
+                f"algorithm={algorithm!r} is not a fault scenario")
+        if faults.num_agents != process.num_agents:
+            raise ValueError(
+                f"faults built for {faults.num_agents} agents but the "
+                f"topology has {process.num_agents}")
+        if observer is not None and faults.has_corruption:
+            raise ValueError("observation capture with corrupt links is "
+                             "not an audited scenario")
+    if aggregation == "trimmed_mean":
+        if algorithm != "pdsgd":
+            raise ValueError("aggregation='trimmed_mean' is a pdsgd mode")
+        if observer is not None:
+            raise ValueError(
+                "trimmed-mean aggregation broadcasts raw neighbor states "
+                "(conventional-DSGD wire); capture of it is not an "
+                "audited scenario")
+        m_ = process.num_agents
+        if not (1 <= trim and m_ - 2 * trim >= 1):
+            raise ValueError(
+                f"trim must satisfy 1 <= trim and m - 2*trim >= 1; "
+                f"got trim={trim}, m={m_}")
 
     grad_fn = jax.vmap(jax.value_and_grad(loss_fn))
+    num_agents = process.num_agents
+
+    def _rowwise(vec):
+        """where-select rows of (m, ...)-leading leaves by an (m,) 0/1."""
+        def f(new, old):
+            c = vec.reshape(vec.shape + (1,) * (new.ndim - 1))
+            return jnp.where(c > 0, new, old)
+        return f
 
     def apply_update(state, batch, key, lam_bar):
-        W, support, mask = process.realize(state.step)
-        losses, grads = grad_fn(state.params, batch)
+        alive = corrupt = rejoin = None
+        if faults is None:
+            W, support, mask = process.realize(state.step)
+        else:
+            from ..faults import realize_coupling
+            W, support, mask, alive, corrupt = realize_coupling(
+                process, faults, state.step)
+        # `held` is this step's hold/rollback anchor: the pre-update
+        # state, with rejoining agents already warm started — what down
+        # agents freeze to and what a skipped non-finite step reverts to.
+        held = state.params
+        if faults is not None and faults.has_crash and not faults.is_failstop:
+            prev = jnp.where(
+                state.step > 0,
+                faults.alive_at(jnp.maximum(state.step - 1, 0)),
+                jnp.ones_like(alive))
+            rejoin = alive * (1.0 - prev)
+            if faults.rejoin == "neighbor-avg":
+                from ..faults.inject import neighbor_avg_warmstart
+                held, _ = neighbor_avg_warmstart(state.params, mask,
+                                                 alive, prev)
+        losses, grads = grad_fn(held, batch)
         if grad_clip is not None:
             from .privacy import clip_gradients
             grads = clip_gradients(grads, grad_clip)
         new_tracker = state.tracker
         observation = None
         if algorithm == "pdsgd":
-            out = pdsgd_update(
-                state.params, grads, key=key, step=state.step, W=W,
-                support=support, lam_bar=lam_bar, mask=mask,
-                use_pallas=use_pallas, interpret=interpret,
-                observe=observer is not None)
-            if observer is not None:
-                new_params, record = out
-                from ..privacy import observe as O
-                observation = O.adversary_view(observer, record)
+            if aggregation == "trimmed_mean":
+                from ..faults.inject import trimmed_mean_mix
+                u = _per_agent_obfuscated(jax.random.fold_in(key, 1),
+                                          state.step, grads, lam_bar)
+                cz = (corrupt if corrupt is not None
+                      else jnp.zeros((num_agents,), jnp.float32))
+                new_params = trimmed_mean_mix(
+                    held, u, support, cz, trim=trim,
+                    mode=faults.corrupt_mode if faults is not None else "nan",
+                    scale=(faults.corrupt_scale if faults is not None
+                           else 1e4))
             else:
-                new_params = out
+                corrupting = faults is not None and faults.has_corruption
+                out = pdsgd_update(
+                    held, grads, key=key, step=state.step, W=W,
+                    support=support, lam_bar=lam_bar, mask=mask,
+                    use_pallas=use_pallas, interpret=interpret,
+                    observe=observer is not None,
+                    corrupt=corrupt if corrupting else None,
+                    corrupt_mode=(faults.corrupt_mode if corrupting
+                                  else "nan"),
+                    corrupt_scale=(faults.corrupt_scale if corrupting
+                                   else 1e4),
+                    guard_clip=(faults.guard_clip if corrupting else 1e3))
+                if observer is not None:
+                    new_params, record = out
+                    from ..privacy import observe as O
+                    observation = O.adversary_view(observer, record)
+                else:
+                    new_params = out
         elif algorithm == "dsgd":
-            new_params = dsgd_update(state.params, grads, W=W, lam=lam_bar)
+            new_params = dsgd_update(held, grads, W=W, lam=lam_bar)
         elif algorithm == "dsgt":
             if state.tracker is None:
                 raise ValueError(
@@ -362,11 +492,11 @@ def make_decentralized_step(
                              gossip_mix(W, y_prev), grads, g_prev)
             new_params = jax.tree.map(
                 lambda a, t: a - lam_bar * t.astype(a.dtype),
-                gossip_mix(W, state.params), y)
+                gossip_mix(W, held), y)
             new_tracker = (y, grads)
         elif algorithm == "dp_dsgd":
             new_params = dp_dsgd_update(
-                state.params, grads, key=jax.random.fold_in(key, 3), W=W,
+                held, grads, key=jax.random.fold_in(key, 3), W=W,
                 lam=lam_bar, sigma_dp=sigma_dp)
         else:
             raise ValueError(f"unknown algorithm {algorithm!r}")
@@ -375,13 +505,48 @@ def make_decentralized_step(
             # (dp_dsgd noises the GRADIENT, not the transmitted state).
             from ..privacy import observe as O
             record = O.state_record(
-                support=support, x_flat=O.flatten_agents(state.params),
+                support=support, x_flat=O.flatten_agents(held),
                 g_flat=O.flatten_agents(grads), W=W, lam=lam_bar)
             observation = O.adversary_view(observer, record)
+        # Degradation: down agents neither transmit (the composed W/B
+        # already guarantee that) nor update — their rows freeze to the
+        # held state.  Applied BEFORE the sentinels so a frozen agent
+        # can't be dragged backward by somebody else's non-finite step.
+        if alive is not None:
+            new_params = jax.tree.map(_rowwise(alive), new_params, held)
+        nonfinite = None
+        if nan_policy != "off":
+            finite = jnp.isfinite(losses).all()
+            for leaf in jax.tree.leaves(new_params):
+                finite &= jnp.isfinite(leaf).all()
+            if new_tracker is not None:
+                for leaf in jax.tree.leaves(new_tracker):
+                    finite &= jnp.isfinite(leaf).all()
+            nonfinite = (~finite).astype(jnp.int32)
+            if nan_policy == "skip":
+                # skip-and-hold: a non-finite step advances the counter
+                # but leaves the state at the held anchor.  where(True,
+                # new, old) is bitwise `new`, so this is exact identity
+                # on every finite step.
+                new_params = jax.tree.map(
+                    lambda n, o: jnp.where(finite, n, o), new_params, held)
+                if new_tracker is not None:
+                    new_tracker = jax.tree.map(
+                        lambda n, o: jnp.where(finite, n, o), new_tracker,
+                        state.tracker)
         aux = {
             "loss": losses.mean(),
             "consensus_error": consensus_error(new_params),
         }
+        if alive is not None:
+            aux["fault_down"] = (
+                jnp.float32(num_agents) - alive.sum()).astype(jnp.int32)
+            aux["fault_corrupt"] = corrupt.sum().astype(jnp.int32)
+            aux["fault_rejoin"] = (
+                rejoin.sum().astype(jnp.int32) if rejoin is not None
+                else jnp.zeros((), jnp.int32))
+        if nonfinite is not None:
+            aux["fault_nonfinite"] = nonfinite
         if observation is not None:
             aux["observation"] = observation
         if track_mean:

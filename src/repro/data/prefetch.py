@@ -111,10 +111,35 @@ class Prefetcher:
     def __iter__(self):
         return self
 
+    # Between polls of the queue, check that the worker is still able to
+    # ever satisfy the get: `_worker_loop` posts its END sentinel from a
+    # finally, but a thread killed without unwinding (interpreter
+    # teardown racing a daemon, an out-of-band kill) posts nothing, and
+    # an untimed get() would then park the train loop forever.
+    _POLL_S = 1.0
+
     def __next__(self):
         if self._exhausted or self._stop.is_set():
             raise StopIteration
-        item, err = self._queue.get()
+        while True:
+            try:
+                item, err = self._queue.get(timeout=self._POLL_S)
+                break
+            except queue.Empty:
+                if self._thread.is_alive():
+                    continue
+            # Dead worker: drain once more without blocking — it may have
+            # posted between the timeout and the liveness check.
+            try:
+                item, err = self._queue.get_nowait()
+                break
+            except queue.Empty:
+                self._exhausted = True
+                raise RuntimeError(
+                    "prefetch worker thread died without posting "
+                    "end-of-stream; the chunk stream is torn (not an "
+                    "exhausted source — those end with a sentinel)"
+                ) from None
         if err is not None:
             self._exhausted = True
             raise err

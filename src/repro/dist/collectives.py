@@ -186,7 +186,8 @@ def torus_gossip_pdsgd(mesh, params: Pytree, u: Pytree, b: jax.Array, *,
                        n_pod: int | None = None,
                        leaf_specs: Pytree | None = None,
                        W: jax.Array | None = None,
-                       capture: bool = False) -> Pytree:
+                       capture: bool = False,
+                       finite_guard: bool = False) -> Pytree:
     """x' = W x - B^k u via neighbor-only exchanges on the mesh torus.
 
     params/u: pytrees with leading agent axis (m, ...); b: (m, 1+ndirs)
@@ -225,6 +226,17 @@ def torus_gossip_pdsgd(mesh, params: Pytree, u: Pytree, b: jax.Array, *,
     tensor from the equivalent `dense_coupling` matrices.  D is the
     flattened trailing size per agent, so capture requires the leaves
     un-sharded in their non-agent dims (``leaf_specs=None``).
+
+    ``finite_guard=True`` zeroes every RECEIVED per-link contribution
+    that is not finite before accumulating — the wire-level defense a
+    real multi-controller deployment needs against a crashed or
+    byzantine peer emitting NaN/Inf (`launch.steps.make_train_step`
+    enables it whenever faults are injected).  ``where(isfinite(v), v,
+    0)`` is bitwise identity on finite inputs, so the guard never
+    perturbs a healthy exchange; on the dense fallback the same per-link
+    semantics route through `faults.inject.guarded_gossip_mix` (clip
+    disabled), whose explicit link-sum ordering is allclose- but not
+    bit-comparable to the einsum.
     """
     if capture and leaf_specs is not None:
         raise ValueError(
@@ -256,9 +268,15 @@ def torus_gossip_pdsgd(mesh, params: Pytree, u: Pytree, b: jax.Array, *,
         # Dense single-host fallback: same math, explicit matrices.
         from ..core.pdsgd import gossip_mix
         Wd, B = dense_coupling(b, n_data, n_pod, W=W)
-        mixed = gossip_mix(Wd, params)
-        desc = gossip_mix(B, u)
-        out = jax.tree.map(lambda a, c: a - c, mixed, desc)
+        if finite_guard:
+            from ..faults.inject import guarded_gossip_mix
+            out = guarded_gossip_mix(
+                Wd, B, params, u, jnp.zeros((m,), jnp.float32),
+                mode="nan", scale=1.0, clip=float("inf"))
+        else:
+            mixed = gossip_mix(Wd, params)
+            desc = gossip_mix(B, u)
+            out = jax.tree.map(lambda a, c: a - c, mixed, desc)
         if not capture:
             return out
         from ..privacy import observe as O
@@ -316,6 +334,12 @@ def torus_gossip_pdsgd(mesh, params: Pytree, u: Pytree, b: jax.Array, *,
                 taps.append(_flat_local(v))
             shifted = jax.tree.map(
                 lambda leaf: jax.lax.ppermute(leaf, axis, perm), v)
+            if finite_guard:
+                # Receive-side guard: a non-finite incoming contribution
+                # is dropped as if the link were down (exact zero).
+                shifted = jax.tree.map(
+                    lambda leaf: jnp.where(jnp.isfinite(leaf), leaf,
+                                           jnp.zeros_like(leaf)), shifted)
             out = jax.tree.map(lambda a, c: a + c, out, shifted)
         if capture:
             return out, jnp.stack(taps, axis=1)  # (1, ndirs, D)

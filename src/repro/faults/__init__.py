@@ -1,0 +1,34 @@
+"""Agent-level fault injection, degradation and healing for the
+decentralized training loop.
+
+`process.FaultProcess` realizes per-step (alive, corrupt) vectors on
+device from the absolute step index — the same random-access fold_in
+contract as `core.mixing.MixingProcess` — and `realize_coupling`
+composes a fault realization with a mixing realization so every
+surviving W_k stays doubly stochastic (Assumption 2 per realization).
+`inject` holds the traced degradation mechanics (transmit poisoning,
+finite-guarded gossip, trimmed-mean robust aggregation, neighbor-avg
+rejoin warm start); `audit` measures what the rejoin broadcast leaks
+through the `repro.privacy` observation models.
+"""
+from .process import FaultProcess, make_faults, realize_coupling
+from .inject import (
+    finite_guard,
+    guarded_gossip_mix,
+    neighbor_avg_warmstart,
+    poison_transmit,
+    trimmed_mean_mix,
+)
+from .audit import rejoin_leakage_report
+
+__all__ = [
+    "FaultProcess",
+    "make_faults",
+    "realize_coupling",
+    "poison_transmit",
+    "finite_guard",
+    "guarded_gossip_mix",
+    "trimmed_mean_mix",
+    "neighbor_avg_warmstart",
+    "rejoin_leakage_report",
+]

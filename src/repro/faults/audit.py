@@ -1,0 +1,70 @@
+"""What does a neighbor-avg rejoin leak?  Measured, not asserted.
+
+The ``rejoin='neighbor-avg'`` warm start has every stable neighbor j of
+a rejoining agent i transmit its raw state x_j in the clear for one
+step — structurally the conventional-DSGD wire of
+`privacy.observe.broadcast_messages`, restricted to the rejoin links.
+An external eavesdropper on those links recovers each broadcast x_j
+EXACTLY (MSE 0), whereas the ordinary PDSGD wire on the same links only
+yields x_j through the residual (b_ij / w_ij) u_j mask that Theorem 5's
+guarantees ride on.  This module computes both numbers from a live
+realization so the tradeoff is a measurement in the test suite and the
+README, not a footnote.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..privacy import observe as O
+
+__all__ = ["rejoin_links", "rejoin_leakage_report"]
+
+
+def rejoin_links(mask: jax.Array, alive: jax.Array,
+                 alive_prev: jax.Array) -> jax.Array:
+    """(m, m) 0/1: entry (i, j) is 1 iff stable neighbor j broadcasts
+    its state to rejoining agent i this step over a realized link."""
+    rejoin = alive * (1.0 - alive_prev)
+    stable = alive * alive_prev
+    return mask * (rejoin[:, None] * stable[None, :])
+
+
+def rejoin_leakage_report(*, params, u, W: jax.Array, B: jax.Array,
+                          mask: jax.Array, alive: jax.Array,
+                          alive_prev: jax.Array) -> dict:
+    """Eavesdropper recovery error of each broadcast x_j, under the two
+    wire models, restricted to this step's rejoin links.
+
+    * ``broadcast_mse`` — neighbor-avg warm start: the wire IS x_j, so
+      recovery is exact (0 up to float identity);
+    * ``pdsgd_wire_mse`` — the ordinary masked wire v_ij = w_ij x_j -
+      b_ij u_j on the same links, inverted with the public-W naive
+      estimator x̂_j = v_ij / w_ij, leaving the (b_ij / w_ij) u_j
+      residual Theorem 5 quantifies.
+
+    Returns scalars plus ``links`` (how many broadcasts happened); all
+    traced, so the report can ride inside jit.
+    """
+    links = rejoin_links(mask, alive, alive_prev)
+    x_flat = O.flatten_agents(params)
+    u_flat = O.flatten_agents(u)
+    n = links.sum()
+
+    # Neighbor-avg wire: V[i, j] = x_j on rejoin links, exact recovery.
+    V_bc = O.broadcast_messages(x_flat, links)
+    err_bc = (V_bc - links[:, :, None] * x_flat[None, :, :]) ** 2
+
+    # PDSGD wire on the same links, naive public-W inversion.
+    V_pd = O.wire_messages(W, B, x_flat, u_flat) * links[:, :, None]
+    w_safe = jnp.where(W > 0, W, 1.0)
+    est = V_pd / w_safe[:, :, None]
+    err_pd = ((est - x_flat[None, :, :]) ** 2) * links[:, :, None]
+
+    d = jnp.asarray(x_flat.shape[1], jnp.float32)
+    denom = jnp.maximum(n, 1.0) * d
+    return {
+        "links": n,
+        "broadcast_mse": err_bc.sum() / denom,
+        "pdsgd_wire_mse": err_pd.sum() / denom,
+    }

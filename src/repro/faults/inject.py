@@ -1,0 +1,170 @@
+"""Traced degradation and healing mechanics.
+
+Everything here is a pure function over (m, ...)-leading pytrees so it
+rides inside jit/scan with the step.  Corruption is modeled at the
+TRANSMIT side — a corrupt sender poisons the buffers it puts on the
+wire, never its own state — and neutralized at the RECEIVE side by a
+per-link finite-guard (`finite_guard`) applied to each v_ij before the
+sum, or out-voted by coordinate-wise trimmed-mean aggregation.  The
+diagonal terms (w_ii x_i, b_ii u_i) never cross a wire and always use
+the clean values, mirroring `privacy.observe.wire_messages` zeroing the
+diagonal for the same reason.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "poison_transmit",
+    "finite_guard",
+    "guarded_gossip_mix",
+    "trimmed_mean_mix",
+    "neighbor_avg_warmstart",
+]
+
+
+def _col(vec: jax.Array, ndim: int) -> jax.Array:
+    """Reshape an (m,) vector to broadcast over an (m, ...) buffer."""
+    return vec.reshape(vec.shape + (1,) * (ndim - 1))
+
+
+def poison_transmit(x: jax.Array, corrupt: jax.Array, mode: str,
+                    scale: float) -> jax.Array:
+    """Poison the rows of an (m, ...)-leading TRANSMIT buffer for corrupt
+    senders: NaN, +inf, or a multiplicative blow-up.  The sender's own
+    state is untouched — corruption lives on the wire."""
+    c = _col(corrupt, x.ndim) > 0
+    if mode == "nan":
+        bad = jnp.full_like(x, jnp.nan)
+    elif mode == "inf":
+        bad = jnp.full_like(x, jnp.inf)
+    elif mode == "scale":
+        bad = x * jnp.asarray(scale, x.dtype)
+    else:
+        raise ValueError(f"unknown corrupt mode {mode!r}")
+    return jnp.where(c, bad, x)
+
+
+def finite_guard(v: jax.Array, clip: float) -> jax.Array:
+    """Per-link receive guard: non-finite contributions become exact
+    zeros (the link might as well have been down), finite ones are
+    clipped to [-clip, clip].  ``jnp.clip`` propagates NaN, so the
+    ``where`` on ``isfinite`` must pick the zero branch — keep the
+    order."""
+    clipped = jnp.clip(v, -clip, clip)
+    return jnp.where(jnp.isfinite(v), clipped, jnp.zeros_like(v))
+
+
+def guarded_gossip_mix(W: jax.Array, B: jax.Array, params, u,
+                       corrupt: jax.Array, *, mode: str, scale: float,
+                       clip: float | None):
+    """Eager PDSGD update with per-link receive guards:
+
+        x_i' = w_ii x_i - b_ii u_i + sum_{j != i} guard(w_ij xt_j - b_ij ut_j)
+
+    where (xt, ut) are the transmit buffers after `poison_transmit`.
+    This is the eager twin of `kernels.gossip.guarded_gossip_update`:
+    it materializes the per-link (m, m, ...) tensor per leaf, which is
+    fine at the paper's scales (the fused kernel keeps it in VMEM).
+    Summation order differs from the einsum of `core.pdsgd.gossip_mix`,
+    so this path is allclose- but not bit-comparable to the unguarded
+    update — it is only ever built when corruption is configured.
+
+    ``clip=None`` DISABLES the guard: poisoned transmits hit receivers
+    raw.  That is the chaos scenario the nan-sentinel / rollback layer
+    is tested against — an unprotected receiver plus ``nan_policy`` —
+    never a production configuration.
+    """
+    m = W.shape[0]
+    eye = jnp.eye(m, dtype=jnp.float32)
+    w_diag, b_diag = jnp.diag(W), jnp.diag(B)
+    w_off, b_off = W * (1.0 - eye), B * (1.0 - eye)
+
+    def leaf(x, uu):
+        x32 = x.astype(jnp.float32)
+        u32 = uu.astype(jnp.float32)
+        xt = poison_transmit(x32, corrupt, mode, scale)
+        ut = poison_transmit(u32, corrupt, mode, scale)
+        self_term = _col(w_diag, x.ndim) * x32 - _col(b_diag, x.ndim) * u32
+        link = (m, m) + (1,) * (x.ndim - 1)
+        v = (w_off.reshape(link) * xt[None]
+             - b_off.reshape(link) * ut[None])
+        if clip is not None:
+            v = finite_guard(v, clip)
+        return (self_term + v.sum(axis=1)).astype(x.dtype)
+
+    return jax.tree.map(leaf, params, u)
+
+
+def trimmed_mean_mix(params, u, support: jax.Array, corrupt: jax.Array, *,
+                     trim: int, mode: str, scale: float):
+    """Coordinate-wise trimmed-mean robust aggregation:
+
+        x_i' = TM_trim({x_i} ∪ {xt_j : j in N_i}) - u_i
+
+    Each agent's candidate set is its own (clean) state plus every live
+    neighbor's TRANSMITTED state; non-neighbors and non-finite entries
+    are replaced by the agent's own value before the coordinate-wise
+    sort, then ``trim`` entries are dropped from each end and the rest
+    averaged.  Up to ``trim`` arbitrarily-corrupt neighbors per agent
+    are out-voted even when the poison is large-but-finite (which the
+    finite-guard alone cannot catch).  The descent is the agent's OWN
+    obfuscated gradient u_i = Λ_i ∘ g_i — B-distribution over a wire a
+    byzantine sender controls is pointless.
+
+    PRIVACY CAVEAT: this aggregation needs neighbors' raw states on the
+    wire (like conventional DSGD), trading the paper's masked-wire
+    privacy for robustness — `make_decentralized_step` refuses to
+    combine it with observation capture, and the README documents the
+    tradeoff.
+    """
+    m = support.shape[0]
+    if not 0 < trim or m - 2 * trim < 1:
+        raise ValueError(
+            f"trim must satisfy 1 <= trim and m - 2*trim >= 1; "
+            f"got trim={trim}, m={m}")
+    eye = jnp.eye(m, dtype=jnp.float32)
+    nb = support * (1.0 - eye)  # off-diagonal neighbor mask
+
+    def leaf(x, uu):
+        x32 = x.astype(jnp.float32)
+        xt = poison_transmit(x32, corrupt, mode, scale)
+        link = (m, m) + (1,) * (x.ndim - 1)
+        use = (nb.reshape(link) > 0) & jnp.isfinite(xt)[None]
+        cand = jnp.where(use,
+                         jnp.broadcast_to(xt[None], (m,) + x.shape),
+                         x32[:, None])
+        core = jnp.sort(cand, axis=1)[:, trim:m - trim]
+        agg = core.mean(axis=1)
+        return (agg - uu.astype(jnp.float32)).astype(x.dtype)
+
+    return jax.tree.map(leaf, params, u)
+
+
+def neighbor_avg_warmstart(params, mask: jax.Array, alive: jax.Array,
+                           alive_prev: jax.Array):
+    """Warm-start rejoining agents from the average of their STABLE
+    neighbors (up both last step and now, over realized links), holding
+    when no such neighbor exists.  Returns ``(params', rejoin)`` with
+    ``rejoin`` the (m,) 0/1 rejoin indicator.
+
+    This is the ``rejoin='neighbor-avg'`` policy: the rejoiner skips the
+    stale-state transient of ``hold`` at the cost of its neighbors
+    broadcasting x_j IN THE CLEAR for that one step — exactly the
+    leakage `audit.rejoin_leakage_report` measures.
+    """
+    rejoin = alive * (1.0 - alive_prev)
+    stable = alive * alive_prev
+    recv = mask * (rejoin[:, None] * stable[None, :])
+    deg = recv.sum(axis=1)
+    coef = recv / jnp.maximum(deg, 1.0)[:, None]
+    use = (rejoin > 0) & (deg > 0)
+
+    def leaf(x):
+        x32 = x.astype(jnp.float32)
+        avg = jnp.einsum("ij,j...->i...", coef, x32,
+                         preferred_element_type=jnp.float32)
+        return jnp.where(_col(use, x.ndim), avg, x32).astype(x.dtype)
+
+    return jax.tree.map(leaf, params), rejoin

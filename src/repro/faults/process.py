@@ -1,0 +1,312 @@
+"""Agent failure as a traced, random-access stochastic process.
+
+The paper's network model (Assumption 2) is per-iteration: each realized
+W_k must be doubly stochastic with w_ii > 0, and nothing pins the agent
+set to be constant — Gao, Wang & Nedić's time-varying analysis
+(PAPERS.md) explicitly covers B-connectivity-preserving node dynamics.
+`FaultProcess` realizes which agents are up and which are emitting
+garbage at each step, entirely on device, and `realize_coupling` folds
+that into the mixing realization: a down agent's incident rows/columns
+are zeroed and Metropolis weights are recomputed IN TRACE over the
+survivors, so every realized W_k still satisfies Assumption 2 (a dead
+agent's row collapses to e_i — it mixes with nobody and holds).
+
+Fault modes:
+
+* **Markov crash-restart** (``crash_rate > 0, restart_rate > 0``): each
+  agent independently draws a crash onset per step; an onset at step s
+  knocks the agent out for a geometric(``restart_rate``) number of steps
+  (truncated at ``max_outage``).  Outages may overlap; the union is what
+  ``realize`` reports.  Because onsets and durations both fold_in from
+  the ABSOLUTE step index, ``realize(step)`` is random access: the eager
+  loop, the scanned loop, and a ``--resume`` replay agree draw-for-draw,
+  and a rejoined agent never replays Λ^k keys (those are derived from
+  the absolute step too, `core.privacy.agent_key`).
+* **Permanent failstop** (``crash_rate > 0, restart_rate == 0``): agent
+  i survives each step with probability 1 - crash_rate and never comes
+  back — its first-crash time T_i is drawn once at construction, making
+  ``alive = step < T_i`` an O(1) lookup instead of an unbounded
+  lookback.
+* **Corrupt links** (``corrupt_rate > 0``): an otherwise-live agent
+  transmits poisoned v_ij this step — NaN, +inf, or scaled by
+  ``corrupt_scale`` (`inject.poison_transmit`) — neutralized at every
+  receiver by the per-link finite-guard (`inject.finite_guard`, the
+  `kernels.gossip.guarded_gossip_update` kernel) or out-voted by
+  trimmed-mean aggregation.
+
+The process is inert (``is_inert``) when both rates are zero; builders
+normalize an inert process to "no faults" so the rate-0 trajectory is
+byte-for-byte the pre-fault code path (tests/test_faults.py pins it).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.mixing import MixingProcess, metropolis_from_mask
+
+__all__ = ["FaultProcess", "make_faults", "realize_coupling",
+           "CORRUPT_MODES", "REJOIN_POLICIES"]
+
+CORRUPT_MODES = ("nan", "inf", "scale")
+REJOIN_POLICIES = ("hold", "neighbor-avg")
+
+
+# eq=False for the same reason as MixingProcess: identity semantics; compare
+# configurations via fingerprint().
+@dataclasses.dataclass(frozen=True, eq=False)
+class FaultProcess:
+    """Traceable per-step agent fault realization.
+
+    ``realize(step)`` returns ``(alive, corrupt)`` for a traced int32
+    step, both (m,) float32 0/1 vectors:
+
+    * ``alive``   — 1 for agents that are up this step; a down agent
+                    neither transmits nor updates (its state is frozen
+                    by the step builders via traced ``jnp.where``);
+    * ``corrupt`` — 1 for live agents whose OUTGOING messages are
+                    poisoned this step (always a subset of ``alive``:
+                    a dead agent transmits nothing at all).
+    """
+
+    num_agents: int
+    crash_rate: float = 0.0      # per-step crash-onset probability
+    restart_rate: float = 0.0    # geometric restart rate (0 => failstop)
+    corrupt_rate: float = 0.0    # per-step corrupt-transmit probability
+    corrupt_mode: str = "nan"    # "nan" | "inf" | "scale"
+    corrupt_scale: float = 1e4   # multiplier for corrupt_mode="scale"
+    rejoin: str = "hold"         # "hold" | "neighbor-avg" warm start
+    guard_clip: float | None = 1e3  # finite-guard clip; None = NO guard
+    #                               (raw chaos for the nan-sentinel layer)
+    max_outage: int = 64         # truncation of the geometric outage
+    seed: int = 0                # private key of the fault draw stream
+
+    def __post_init__(self):
+        if self.num_agents < 1:
+            raise ValueError(f"need num_agents >= 1, got {self.num_agents}")
+        if not 0.0 <= self.crash_rate < 1.0:
+            raise ValueError(f"crash_rate must be in [0, 1), "
+                             f"got {self.crash_rate}")
+        if not 0.0 <= self.restart_rate <= 1.0:
+            raise ValueError(f"restart_rate must be in [0, 1], "
+                             f"got {self.restart_rate}")
+        if not 0.0 <= self.corrupt_rate <= 1.0:
+            raise ValueError(f"corrupt_rate must be in [0, 1], "
+                             f"got {self.corrupt_rate}")
+        if self.corrupt_mode not in CORRUPT_MODES:
+            raise ValueError(f"unknown corrupt_mode {self.corrupt_mode!r}; "
+                             f"have {CORRUPT_MODES}")
+        if self.rejoin not in REJOIN_POLICIES:
+            raise ValueError(f"unknown rejoin policy {self.rejoin!r}; "
+                             f"have {REJOIN_POLICIES}")
+        if self.guard_clip is not None and not self.guard_clip > 0.0:
+            raise ValueError(f"guard_clip must be > 0 (or None to disable "
+                             f"the guard), got {self.guard_clip}")
+        if self.max_outage < 1:
+            raise ValueError(f"max_outage must be >= 1, got {self.max_outage}")
+        # Knobs that drive nothing are refused, not silently ignored —
+        # the same contract as MixingProcess: a stray value would change
+        # no behavior yet alter fingerprint(), making behaviorally
+        # identical runs refuse to --resume into each other.
+        if self.restart_rate > 0.0 and self.crash_rate == 0.0:
+            raise ValueError("restart_rate is a crash-mode knob; set "
+                             "crash_rate > 0 to use it")
+        if self.rejoin != "hold":
+            if self.crash_rate == 0.0 or self.restart_rate == 0.0:
+                raise ValueError(
+                    "rejoin='neighbor-avg' needs a crash-restart process "
+                    "(crash_rate > 0 AND restart_rate > 0); failstop "
+                    "agents never rejoin")
+        if self.corrupt_rate == 0.0 and (self.corrupt_mode != "nan"
+                                         or self.corrupt_scale != 1e4):
+            raise ValueError(
+                f"corrupt_mode/corrupt_scale are corruption knobs; "
+                f"corrupt_rate=0 ignores them")
+        self._build_consts()
+
+    # -- static config ----------------------------------------------------
+    @property
+    def is_inert(self) -> bool:
+        """True when realize() is constantly (ones, zeros) — no faults."""
+        return self.crash_rate == 0.0 and self.corrupt_rate == 0.0
+
+    @property
+    def has_crash(self) -> bool:
+        return self.crash_rate > 0.0
+
+    @property
+    def has_corruption(self) -> bool:
+        return self.corrupt_rate > 0.0
+
+    @property
+    def is_failstop(self) -> bool:
+        return self.crash_rate > 0.0 and self.restart_rate == 0.0
+
+    def fingerprint(self) -> dict:
+        """JSON-stable identity of the fault config for checkpoint
+        ``run_meta`` — ``--resume`` under a different fault scenario
+        refuses instead of silently walking a different trajectory.
+        Inert knobs are normalized out (same contract as
+        `MixingProcess.fingerprint`)."""
+        crash, corrupt = self.has_crash, self.has_corruption
+        return {
+            "num_agents": int(self.num_agents),
+            "crash_rate": float(self.crash_rate),
+            "restart_rate": float(self.restart_rate) if crash else 0.0,
+            "rejoin": self.rejoin if crash else None,
+            "max_outage": (int(self.max_outage)
+                           if crash and self.restart_rate > 0.0 else 0),
+            "corrupt_rate": float(self.corrupt_rate),
+            "corrupt_mode": self.corrupt_mode if corrupt else None,
+            "corrupt_scale": (float(self.corrupt_scale)
+                              if corrupt and self.corrupt_mode == "scale"
+                              else None),
+            "guard_clip": ((float(self.guard_clip)
+                            if self.guard_clip is not None else "off")
+                           if corrupt else None),
+            "seed": None if self.is_inert else int(self.seed),
+        }
+
+    # -- device constants (built once, closed over by traces) -------------
+    def _build_consts(self) -> None:
+        """Eager at construction, outside any transformation — same
+        tracer-leak rationale as `MixingProcess._build_consts`."""
+        root = jax.random.key(self.seed)
+        consts = {
+            "key_crash": jax.random.fold_in(root, 0),
+            "key_dur": jax.random.fold_in(root, 1),
+            "key_corrupt": jax.random.fold_in(root, 2),
+            "ones": jnp.ones((self.num_agents,), jnp.float32),
+            "zeros": jnp.zeros((self.num_agents,), jnp.float32),
+        }
+        if self.is_failstop:
+            # First-crash time per agent: survive each step w.p.
+            # 1 - crash_rate, so T_i ~ Geometric(crash_rate) (support
+            # >= 1) drawn once on host — alive(step) = step < T_i is an
+            # exact O(1) realization of the unbounded process.
+            rng = np.random.default_rng(self.seed)
+            t = rng.geometric(self.crash_rate, size=self.num_agents)
+            consts["t_fail"] = jnp.asarray(t, jnp.int32)
+        object.__setattr__(self, "_consts", consts)
+
+    # -- the realization --------------------------------------------------
+    def _markov_down(self, step: jax.Array) -> jax.Array:
+        """Union of active outages at ``step``: lookback over the last
+        ``max_outage`` potential onsets, each with its own geometric
+        duration — O(max_outage) traced work, random access in step."""
+        c = self._consts
+        m = self.num_agents
+        rr = float(self.restart_rate)
+        log_keep = np.log1p(-rr) if rr < 1.0 else -np.inf
+
+        def body(d, down):
+            s = step - d
+            sc = jnp.maximum(s, 0)
+            onset = (jax.random.uniform(
+                jax.random.fold_in(c["key_crash"], sc), (m,)) < self.crash_rate)
+            u = jax.random.uniform(jax.random.fold_in(c["key_dur"], sc), (m,))
+            if rr >= 1.0:
+                dur = jnp.ones((m,), jnp.float32)
+            else:
+                # Inverse-CDF geometric: dur = 1 + floor(log(1-u)/log(1-rr)),
+                # truncated so the lookback window provably covers it.
+                dur = 1.0 + jnp.floor(jnp.log1p(-u) / log_keep)
+                dur = jnp.clip(dur, 1.0, float(self.max_outage))
+            live = (s >= 0)
+            return down | (onset & (dur > d) & live)
+
+        down = jax.lax.fori_loop(0, self.max_outage, body,
+                                 jnp.zeros((m,), bool))
+        return down
+
+    def realize(self, step: jax.Array):
+        """(alive, corrupt) for the traced absolute ``step`` — both (m,)
+        float32 0/1.  Random access: fold_in from the absolute step, no
+        carried state (the `launch.steps.per_step_keys` contract)."""
+        step = jnp.asarray(step, jnp.int32)
+        c = self._consts
+        if self.crash_rate == 0.0:
+            alive = c["ones"]
+        elif self.is_failstop:
+            alive = (step < c["t_fail"]).astype(jnp.float32)
+        else:
+            alive = (~self._markov_down(step)).astype(jnp.float32)
+        if self.corrupt_rate == 0.0:
+            corrupt = c["zeros"]
+        else:
+            draws = jax.random.uniform(
+                jax.random.fold_in(c["key_corrupt"], step),
+                (self.num_agents,))
+            corrupt = (draws < self.corrupt_rate).astype(jnp.float32) * alive
+        return alive, corrupt
+
+    def alive_at(self, step: jax.Array) -> jax.Array:
+        alive, _ = self.realize(step)
+        return alive
+
+    def rejoin_mask(self, step: jax.Array) -> jax.Array:
+        """1 for agents up at ``step`` that were down at ``step - 1``
+        (everyone counts as up before step 0, so nothing 'rejoins' at
+        the first step)."""
+        step = jnp.asarray(step, jnp.int32)
+        alive = self.alive_at(step)
+        prev = self.alive_at(jnp.maximum(step - 1, 0))
+        prev = jnp.where(step > 0, prev, jnp.ones_like(prev))
+        return alive * (1.0 - prev)
+
+
+def make_faults(num_agents: int, *, crash_rate: float = 0.0,
+                restart_rate: float = 0.0, corrupt_rate: float = 0.0,
+                corrupt_mode: str = "nan", corrupt_scale: float = 1e4,
+                rejoin: str = "hold", guard_clip: float | None = 1e3,
+                max_outage: int = 64, seed: int = 0) -> FaultProcess:
+    """Build a `FaultProcess`; normalizes the corruption knobs so an
+    inert config never trips the stray-knob validation."""
+    if corrupt_rate == 0.0:
+        corrupt_mode, corrupt_scale = "nan", 1e4
+    if crash_rate == 0.0:
+        restart_rate, rejoin = 0.0, "hold"
+    return FaultProcess(num_agents=num_agents, crash_rate=crash_rate,
+                        restart_rate=restart_rate, corrupt_rate=corrupt_rate,
+                        corrupt_mode=corrupt_mode,
+                        corrupt_scale=corrupt_scale, rejoin=rejoin,
+                        guard_clip=guard_clip, max_outage=max_outage,
+                        seed=seed)
+
+
+def realize_coupling(process: MixingProcess, faults: FaultProcess,
+                     step: jax.Array):
+    """Compose a mixing realization with a fault realization.
+
+    Returns ``(W, support, mask, alive, corrupt)`` where the realized
+    off-diagonal edge mask is the mixing mask with every down agent's
+    incident rows/columns zeroed, and W is re-derived IN TRACE with
+    Metropolis weights over the survivors — doubly stochastic with
+    w_ii > 0 for EVERY realization (a fully isolated or dead agent gets
+    the row e_i: it mixes with nobody and holds its state).  ``support``
+    (mask + I) is what `core.privacy.sample_B` rides, so a dead agent's
+    B column collapses to b_ii = 1 and nobody receives from it.
+
+    Unlike the fault-free static path this never returns ``mask=None``:
+    with faults active every consumer takes the in-trace re-weighting
+    route (the masked/guarded kernels, the ring path's directional
+    masking), which is exactly why the inert case is normalized to
+    ``faults=None`` by the step builders instead of flowing through
+    here.
+    """
+    if process.num_agents != faults.num_agents:
+        raise ValueError(
+            f"mixing has {process.num_agents} agents but faults were "
+            f"built for {faults.num_agents}")
+    step = jnp.asarray(step, jnp.int32)
+    alive, corrupt = faults.realize(step)
+    if process.is_static:
+        base = process.base_mask
+    else:
+        _, _, base = process.realize(step)
+    mask = base * (alive[:, None] * alive[None, :])
+    eye = jnp.eye(process.num_agents, dtype=jnp.float32)
+    return metropolis_from_mask(mask), mask + eye, mask, alive, corrupt

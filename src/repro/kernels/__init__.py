@@ -1,9 +1,9 @@
 from .ops import (flash_attention, gossip_update, masked_gossip_update,
-                  obfuscate_update,
+                  guarded_gossip_update, obfuscate_update,
                   ssd_intra_chunk, obfuscate_tree, gossip_tree,
                   fused_pdsgd_tree, default_interpret, default_use_pallas)
 
 __all__ = ["flash_attention", "gossip_update", "masked_gossip_update",
-           "obfuscate_update",
+           "guarded_gossip_update", "obfuscate_update",
            "ssd_intra_chunk", "obfuscate_tree", "gossip_tree",
            "fused_pdsgd_tree", "default_interpret", "default_use_pallas"]

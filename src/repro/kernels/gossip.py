@@ -120,3 +120,85 @@ def _masked_gossip_update(mask, B, X, U, block_n, interpret):
         out_shape=jax.ShapeDtypeStruct((m, n), X.dtype),
         interpret=interpret,
     )(mask, B, X, U)
+
+
+def _guarded_gossip_kernel(mask_ref, b_ref, x_ref, u_ref, xt_ref, ut_ref,
+                           o_ref, *, clip):
+    """masked_gossip with per-link finite guards: the matmul form cannot
+    survive a NaN/Inf transmit (one poisoned operand contaminates the
+    whole dot-product row), so the off-diagonal accumulation is unrolled
+    to the explicit per-link v_ij = w_ij xt_j - b_ij ut_j tensor, each
+    link guarded BEFORE the sum.  (m, m, bn) f32 lives in VMEM — ~2 MB at
+    m=32, bn=512, comfortably within budget at gossip's tiny m.  The
+    diagonal terms never cross a wire and use the clean x/u buffers."""
+    mask = mask_ref[...].astype(jnp.float32)
+    b = b_ref[...].astype(jnp.float32)
+    m = mask.shape[0]
+    deg = mask.sum(axis=1)
+    denom = 1.0 + jnp.maximum(deg[:, None], deg[None, :])
+    w = mask / denom  # off-diagonal by construction (mask has zero diag)
+    rows = jax.lax.broadcasted_iota(jnp.int32, (m, m), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (m, m), 1)
+    eye = (rows == cols).astype(jnp.float32)
+    w_diag = 1.0 - w.sum(axis=1)
+    b_diag = (b * eye).sum(axis=1)
+    b_off = b * (1.0 - eye)
+    x = x_ref[...].astype(jnp.float32)
+    u = u_ref[...].astype(jnp.float32)
+    self_term = w_diag[:, None] * x - b_diag[:, None] * u
+    xt = xt_ref[...].astype(jnp.float32)
+    ut = ut_ref[...].astype(jnp.float32)
+    v = (w[:, :, None] * xt[None, :, :]
+         - b_off[:, :, None] * ut[None, :, :])
+    if clip is not None:
+        # clip propagates NaN; the isfinite where must pick the zero branch.
+        v = jnp.where(jnp.isfinite(v), jnp.clip(v, -clip, clip),
+                      jnp.zeros_like(v))
+    o_ref[...] = (self_term + v.sum(axis=1)).astype(o_ref.dtype)
+
+
+def guarded_gossip_update(mask: jax.Array, B: jax.Array, X: jax.Array,
+                          U: jax.Array, XT: jax.Array, UT: jax.Array,
+                          clip: float | None,
+                          block_n: int = DEFAULT_BLOCK_N,
+                          interpret: bool | None = None) -> jax.Array:
+    """Fault-tolerant masked gossip: Metropolis re-weighting from the
+    realized edge mask (as `masked_gossip_update`) with every
+    off-diagonal link contribution passed through the finite-guard
+    ``where(isfinite(v), clip(v, ±clip), 0)`` before accumulation
+    (``clip=None`` disables the guard — the raw chaos scenario the
+    nan-sentinel layer is tested against).
+
+    ``X``/``U`` are the agents' own (clean) buffers, consumed only by
+    the diagonal terms; ``XT``/``UT`` are the TRANSMIT buffers (after
+    `faults.inject.poison_transmit`), consumed by the off-diagonal
+    per-link terms — a corrupt sender poisons what it puts on the wire,
+    never its own state.  Mirrors `faults.inject.guarded_gossip_mix`;
+    keep the two in sync."""
+    return _guarded_gossip_update(
+        mask, B, X, U, XT, UT,
+        clip=None if clip is None else float(clip), block_n=block_n,
+        interpret=resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("clip", "block_n", "interpret"))
+def _guarded_gossip_update(mask, B, X, U, XT, UT, clip, block_n, interpret):
+    m, n = X.shape
+    bn = min(block_n, n)
+    assert n % bn == 0, (n, bn)
+    return pl.pallas_call(
+        functools.partial(_guarded_gossip_kernel, clip=clip),
+        grid=(n // bn,),
+        in_specs=[
+            pl.BlockSpec((m, m), lambda i: (0, 0)),
+            pl.BlockSpec((m, m), lambda i: (0, 0)),
+            pl.BlockSpec((m, bn), lambda i: (0, i)),
+            pl.BlockSpec((m, bn), lambda i: (0, i)),
+            pl.BlockSpec((m, bn), lambda i: (0, i)),
+            pl.BlockSpec((m, bn), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((m, bn), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((m, n), X.dtype),
+        interpret=interpret,
+    )(mask, B, X, U, XT, UT)

@@ -12,7 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from .flash_attention import flash_attention
-from .gossip import gossip_update, masked_gossip_update
+from .gossip import gossip_update, guarded_gossip_update, masked_gossip_update
 from .obfuscate import obfuscate_update
 from .runtime import default_interpret, default_use_pallas
 from .ssm_scan import ssd_intra_chunk
@@ -20,7 +20,7 @@ from .ssm_scan import ssd_intra_chunk
 Pytree = Any
 
 __all__ = ["flash_attention", "gossip_update", "masked_gossip_update",
-           "obfuscate_update",
+           "guarded_gossip_update", "obfuscate_update",
            "ssd_intra_chunk", "obfuscate_tree", "gossip_tree",
            "fused_pdsgd_tree", "default_interpret", "default_use_pallas"]
 
@@ -82,7 +82,11 @@ def fused_pdsgd_tree(W: jax.Array, B: jax.Array, x_tree: Pytree,
                      g_tree: Pytree, bits_tree: Pytree, lam_bar,
                      mask: jax.Array | None = None,
                      interpret: bool | None = None,
-                     observe: bool = False) -> Pytree:
+                     observe: bool = False,
+                     corrupt: jax.Array | None = None,
+                     corrupt_mode: str = "nan",
+                     corrupt_scale: float = 1e4,
+                     guard_clip: float = 1e3) -> Pytree:
     """Full Eq. (4) update through both fused kernels in one flattened pass:
 
         u = Lambda(bits) ∘ g          (obfuscate kernel, w_self=0, b_self=-1)
@@ -106,6 +110,16 @@ def fused_pdsgd_tree(W: jax.Array, B: jax.Array, x_tree: Pytree,
     re-derivation) is what makes the capture an audit of what this path
     actually realized; the buffers already exist, so capture adds no
     kernel work.
+
+    ``corrupt`` (an (m,) 0/1 vector from `faults.FaultProcess.realize`)
+    selects the fault-tolerant path: the corrupt agents' TRANSMIT
+    buffers are poisoned (`faults.inject.poison_transmit`) and the
+    gossip stage becomes `gossip.guarded_gossip_update`, which applies
+    the per-link finite-guard + ``guard_clip`` before accumulating —
+    the same program whether this step's corrupt draw fired or not, so
+    corruption stays a traced scenario.  Requires ``mask`` (faults
+    always compose through `faults.realize_coupling`, which provides
+    one); ``observe`` is refused upstream when corruption is on.
     """
     x_flat, sizes, leaves = _flatten_concat(x_tree)
     g_flat, _, _ = _flatten_concat(g_tree)
@@ -118,7 +132,17 @@ def fused_pdsgd_tree(W: jax.Array, B: jax.Array, x_tree: Pytree,
                               jnp.float32(0.0), jnp.float32(-1.0),
                               block=(x_flat.shape[0], 256),
                               interpret=interpret)
-    if mask is not None:
+    if corrupt is not None:
+        if mask is None:
+            raise ValueError(
+                "corrupt injection needs the realized edge mask; compose "
+                "faults through faults.realize_coupling")
+        from ..faults.inject import poison_transmit
+        xt = poison_transmit(x_flat, corrupt, corrupt_mode, corrupt_scale)
+        ut = poison_transmit(u_flat, corrupt, corrupt_mode, corrupt_scale)
+        out = guarded_gossip_update(mask, B, x_flat, u_flat, xt, ut,
+                                    guard_clip, interpret=interpret)
+    elif mask is not None:
         out = masked_gossip_update(mask, B, x_flat, u_flat,
                                    interpret=interpret)
     else:

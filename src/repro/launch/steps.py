@@ -76,7 +76,8 @@ def make_train_step(bundle: ModelBundle, mesh,
                     algorithm: str = "pdsgd", lam_base: float = 0.1,
                     use_pallas: bool = False,
                     mixing: MixingProcess | None = None,
-                    observer=None):
+                    observer=None,
+                    faults=None):
     """Returns train_step(params, batch, key, step) -> (params, loss).
 
     lam_bar follows the paper's 1/k schedule from `lam_base`; the random
@@ -120,7 +121,37 @@ def make_train_step(bundle: ModelBundle, mesh,
     sees IS what crossed the links; capture therefore requires the
     replicated-leaf layout (``gossip="ring"`` with per-leaf sharding
     specs is refused).  pdsgd and dsgd only — the audited scenarios.
+
+    ``faults`` (a `faults.FaultProcess`, pdsgd only) injects agent
+    crashes into BOTH gossip schedules: the coupling composes through
+    `faults.realize_coupling` (down agents' links zeroed, Metropolis
+    re-weighted over survivors), down agents freeze via traced
+    ``jnp.where``, and the exchange runs with the receive-side
+    ``finite_guard`` of `collectives.torus_gossip_pdsgd` — the wire
+    defense an actual multi-controller deployment needs.  Corrupt-link
+    injection and the ``neighbor-avg`` rejoin warm start are
+    single-controller scenarios (`core.pdsgd.make_decentralized_step`);
+    this launch path refuses them rather than pretending a sharded
+    implementation exists.  An inert process is normalized to ``None``
+    (bit-identical to the fault-free step).
     """
+    if faults is not None and faults.is_inert:
+        faults = None
+    if faults is not None:
+        if algorithm != "pdsgd":
+            raise ValueError(
+                "fault injection composes with the paper's pdsgd update; "
+                f"algorithm={algorithm!r} is not a fault scenario")
+        if faults.has_corruption:
+            raise ValueError(
+                "corrupt-link injection is a single-controller scenario "
+                "(core.pdsgd.make_decentralized_step); the mesh launch "
+                "path carries crash faults only")
+        if faults.rejoin != "hold":
+            raise ValueError(
+                "rejoin='neighbor-avg' is a single-controller scenario "
+                "(core.pdsgd.make_decentralized_step); the mesh launch "
+                "path rejoins with 'hold'")
     if algorithm == "dsgt" and gossip != "dense":
         raise ValueError(
             "algorithm='dsgt' supports gossip='dense' only (the tracker is "
@@ -153,16 +184,33 @@ def make_train_step(bundle: ModelBundle, mesh,
                 "mixing process must be built on this mesh's agent torus "
                 "(see launch.steps.torus_topology)")
 
+    compose_process = None
+    if faults is not None:
+        if faults.num_agents != m:
+            raise ValueError(
+                f"faults built for {faults.num_agents} agents but the "
+                f"mesh torus has {m}")
+        from ..core.mixing import as_process
+        compose_process = mixing if mixing is not None else as_process(torus)
+
     def realize(step):
+        """(W, support, mask, alive) for the traced step; alive is None
+        without faults, mask is None only on the fully static path."""
+        if faults is not None:
+            from ..faults import realize_coupling
+            W, support, mask, alive, _ = realize_coupling(
+                compose_process, faults, step)
+            return W, support, mask, alive
         if mixing is None:
-            return W0, support0, None
+            return W0, support0, None, None
         # A static process returns ITS OWN constants (Topology.validate
         # admits any doubly-stochastic weights on the torus support, e.g.
         # a lazy Metropolis variant — substituting W0 here would silently
         # train a different mixing matrix than configured).  A process
         # built on `torus_topology(mesh)` carries exactly W0, so the
         # default remains bit-identical.
-        return mixing.realize(step)
+        W, support, mask = mixing.realize(step)
+        return W, support, mask, None
 
     ring_specs = None
     if gossip == "ring":
@@ -198,7 +246,7 @@ def make_train_step(bundle: ModelBundle, mesh,
     def train_step(params, batch, seed, step):
         key = jax.random.key(seed)
         lam_bar = lam_base / (step.astype(jnp.float32) + 1.0)
-        W, support, mask = realize(step)
+        W, support, mask, alive = realize(step)
         if algorithm == "dsgt":
             params, (y_prev, g_prev) = params
         losses, grads = grad_fn(params, batch)
@@ -248,7 +296,8 @@ def make_train_step(bundle: ModelBundle, mesh,
                 out = collectives.torus_gossip_pdsgd(
                     mesh, params, u, b, agent_axes=axes,
                     leaf_specs=ring_specs, W=W_k,
-                    capture=observer is not None)
+                    capture=observer is not None,
+                    finite_guard=faults is not None)
                 if observer is not None:
                     from ..privacy import observe as O
                     new_params, V = out
@@ -273,6 +322,14 @@ def make_train_step(bundle: ModelBundle, mesh,
                 observation = O.adversary_view(observer, record)
         else:
             raise ValueError(algorithm)
+        if alive is not None:
+            # Down agents neither transmit (the composed coupling already
+            # guarantees that) nor update: freeze their rows to the
+            # pre-update state via traced where.
+            def _hold(n, o):
+                c = alive.reshape(alive.shape + (1,) * (n.ndim - 1))
+                return jnp.where(c > 0, n, o)
+            new_params = jax.tree.map(_hold, new_params, params)
         if observer is not None:
             return new_params, {"loss": losses.mean(),
                                 "observation": observation}

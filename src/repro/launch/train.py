@@ -23,6 +23,21 @@ checkpoint's metadata and a resume under different ``--topology*`` flags
 fails fast.  ``--topology-p`` / ``--topology-seed`` parameterize the
 ``erdos`` base graph.
 
+``--fault-*`` flags inject agent failures as a first-class traced
+scenario (`repro.faults`): Markov crash/restart (or permanent failstop)
+realized on device from the absolute step, corrupt links poisoning the
+transmitted v_ij (NaN/Inf/scaled; ``--fault-guard-clip 0`` disables the
+receive-side finite guard for the raw chaos scenario), and a rejoin
+policy for recovering agents.  ``--nan-policy`` adds traced isfinite
+sentinels: ``warn`` counts non-finite steps (``fault_nonfinite`` in the
+log), ``skip`` additionally holds the last finite state.  When a
+checkpoint manager is active, a streak of ``--rollback-patience``
+non-finite observations triggers a wall-clock rollback to the newest
+durable checkpoint with exponential backoff, bounded by
+``--max-rollbacks`` before the run fails.  The fault config is
+fingerprinted into checkpoint metadata like the mixing config, so a
+``--resume`` under different fault flags fails fast.
+
 Checkpoints persist the FULL `DecentralizedState` — params, the step
 counter, and any algorithm tracker — so ``--resume`` continues schedules
 and, critically, never re-derives `privacy.agent_key(key, step, agent)` for
@@ -47,6 +62,7 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..checkpoint import (CheckpointManager, latest_step, load_checkpoint,
                           read_run_meta)
@@ -95,6 +111,46 @@ def build_parser() -> argparse.ArgumentParser:
                         "inversion attacks) and write privacy_report.json "
                         "next to the checkpoints (or cwd); the audit "
                         "config is fingerprinted into checkpoint run_meta")
+    p.add_argument("--fault-crash-rate", type=float, default=0.0,
+                   help="per-step probability that each live agent "
+                        "crashes (0 = no crash faults; the rate-0 path is "
+                        "byte-identical to the fault-free step)")
+    p.add_argument("--fault-restart-rate", type=float, default=0.0,
+                   help="per-step recovery probability of a crashed agent "
+                        "(geometric outage lengths); 0 with a crash rate "
+                        "= permanent failstop")
+    p.add_argument("--fault-corrupt-rate", type=float, default=0.0,
+                   help="per-step probability that each live agent "
+                        "poisons the v_ij it transmits (0 = off)")
+    p.add_argument("--fault-corrupt-mode", default="nan",
+                   choices=["nan", "inf", "scale"],
+                   help="what a corrupt sender puts on the wire")
+    p.add_argument("--fault-rejoin", default="hold",
+                   choices=["hold", "neighbor-avg"],
+                   help="warm-start policy for a recovering agent; "
+                        "'neighbor-avg' broadcasts neighbor states in the "
+                        "clear for that step (see README privacy caveat)")
+    p.add_argument("--fault-guard-clip", type=float, default=1e3,
+                   help="receive-side per-link finite-guard clip; 0 "
+                        "DISABLES the guard (raw poison reaches "
+                        "receivers — the scenario --nan-policy exists for)")
+    p.add_argument("--fault-seed", type=int, default=None,
+                   help="seed of the fault draw stream (default: --seed)")
+    p.add_argument("--nan-policy", default="off",
+                   choices=["off", "warn", "skip"],
+                   help="traced isfinite sentinels on loss and updated "
+                        "state: 'warn' counts non-finite steps, 'skip' "
+                        "additionally holds the last finite state")
+    p.add_argument("--max-rollbacks", type=int, default=3,
+                   help="checkpoint rollbacks attempted on a sustained "
+                        "non-finite streak before the run fails")
+    p.add_argument("--rollback-patience", type=int, default=2,
+                   help="consecutive non-finite observations (chunks in "
+                        "the scanned loop, steps in the eager loop) "
+                        "before a rollback fires")
+    p.add_argument("--rollback-backoff", type=float, default=0.5,
+                   help="base rollback delay in seconds, doubling per "
+                        "rollback")
     p.add_argument("--steps", type=int, default=100)
     p.add_argument("--per-agent-batch", type=int, default=2)
     p.add_argument("--seq-len", type=int, default=64)
@@ -142,6 +198,30 @@ def build_mixing(args):
                        seed=topo_seed)
 
 
+def build_faults(args):
+    """The run's `faults.FaultProcess` from the CLI fault knobs, or None
+    when no injection is configured — None keeps the byte-identical
+    fault-free code path (`make_decentralized_step` also normalizes an
+    inert process away, so rate 0 can never perturb a trajectory).
+    ``--fault-guard-clip 0`` maps to ``guard_clip=None`` (guard off).
+    Factored out like `build_mixing` so tests can pin the wiring.
+    """
+    if args.fault_crash_rate <= 0.0 and args.fault_corrupt_rate <= 0.0:
+        return None
+    from ..faults import make_faults
+    fault_seed = args.fault_seed if args.fault_seed is not None \
+        else args.seed
+    clip = args.fault_guard_clip if args.fault_guard_clip > 0 else None
+    return make_faults(args.agents,
+                       crash_rate=args.fault_crash_rate,
+                       restart_rate=args.fault_restart_rate,
+                       corrupt_rate=args.fault_corrupt_rate,
+                       corrupt_mode=args.fault_corrupt_mode,
+                       rejoin=args.fault_rejoin,
+                       guard_clip=clip,
+                       seed=fault_seed)
+
+
 def run_training(args, mesh=None) -> dict:
     """Run the driver loop; returns {state, history, resumed_from}.
 
@@ -151,11 +231,14 @@ def run_training(args, mesh=None) -> dict:
     cfg = get_config(args.arch)
     bundle = build_model(cfg)
     mixing = build_mixing(args)
+    faults = build_faults(args)
     sched = warmup_harmonic(args.lr, hold=args.warmup_hold)
     step = make_decentralized_step(bundle.loss_fn, mixing, sched,
                                    algorithm=args.algorithm,
                                    sigma_dp=args.sigma_dp,
-                                   grad_clip=args.grad_clip_kappa)
+                                   grad_clip=args.grad_clip_kappa,
+                                   faults=faults,
+                                   nan_policy=args.nan_policy)
 
     # B-connectivity window diagnostics (ROADMAP): a single disconnected
     # dropout realization is fine; a STREAK of disconnected unions is what
@@ -186,8 +269,11 @@ def run_training(args, mesh=None) -> dict:
     # later --resume.
     manager = None
     mixing_fp = mixing.fingerprint()
+    faults_fp = faults.fingerprint() if faults is not None else None
     audit_cfg = None
     run_meta = {"mixing": mixing_fp}
+    if faults_fp is not None:
+        run_meta["faults"] = faults_fp
     if args.privacy_audit:
         # The audit suite runs on the paper's estimation workload under
         # THIS run's topology/clipping knobs; its config is part of the
@@ -211,6 +297,29 @@ def run_training(args, mesh=None) -> dict:
     history: list[dict] = []
     t0 = time.time()
 
+    # Cumulative fault/sentinel counters (keys exist in aux only when the
+    # corresponding layer is configured, so the fault-free loop never pays
+    # a device->host sync here).
+    fault_totals: dict[str, int] = {}
+    rollbacks = 0
+    streak = 0  # consecutive non-finite observations (chunk/step grain)
+    warned_no_rollback = False
+
+    def tally(aux) -> int:
+        """Accumulate fault counters; returns this observation's
+        non-finite count (0 when sentinels are off).  aux values are
+        scalars in the eager loop, (unroll_k,) stacks in the scanned
+        loop — the sum handles both."""
+        nonf = 0
+        for name in ("fault_down", "fault_corrupt", "fault_rejoin",
+                     "fault_nonfinite"):
+            if name in aux:
+                v = int(np.asarray(aux[name]).sum())
+                fault_totals[name] = fault_totals.get(name, 0) + v
+                if name == "fault_nonfinite":
+                    nonf = v
+        return nonf
+
     def log(k, loss, cons):
         rec = {"step": int(k), "loss": float(loss),
                "consensus_error": float(cons),
@@ -221,6 +330,8 @@ def run_training(args, mesh=None) -> dict:
                        b_window_connected=bool(diag["connected"]),
                        b_window_union_min_degree=int(
                            diag["union_min_degree"]))
+        if fault_totals:
+            rec.update(fault_totals)  # cumulative, not per-interval
         history.append(rec)
         print(json.dumps(rec))
 
@@ -235,6 +346,53 @@ def run_training(args, mesh=None) -> dict:
         return manager is not None and crosses(
             k_prev, k_next, args.checkpoint_every)
 
+    def try_rollback(state):
+        """Sentinel-triggered self-healing: once ``streak`` reaches
+        --rollback-patience, restore the newest DURABLE checkpoint after
+        an exponential backoff.  Bounded by --max-rollbacks — batches,
+        keys, and fault draws are all derived from the absolute step, so
+        a replay hits the identical non-finite state; the retries buy
+        time for transient causes (a flaky host, an operator fixing
+        flags) and then fail the run rather than loop forever.  Returns
+        ``(state, restore_step, rolled)``; without a checkpoint manager
+        rollback is unavailable and the nan-policy sentinels alone carry
+        the run."""
+        nonlocal rollbacks, streak, warned_no_rollback
+        if streak < args.rollback_patience:
+            return state, None, False
+        if manager is None:
+            if not warned_no_rollback:
+                warned_no_rollback = True
+                print(json.dumps({
+                    "warning": "sustained non-finite state but no "
+                               "--checkpoint-dir; rollback unavailable "
+                               "(nan-policy sentinels still hold the "
+                               "last finite state)"}))
+            return state, None, False
+        if rollbacks >= args.max_rollbacks:
+            raise RuntimeError(
+                f"training state stayed non-finite through {rollbacks} "
+                f"rollback(s) (--max-rollbacks={args.max_rollbacks}); "
+                "the failure replays deterministically — fix the fault "
+                "config instead of retrying")
+        manager.wait()  # only committed steps are rollback targets
+        last = latest_step(args.checkpoint_dir)
+        if last is None:
+            if not warned_no_rollback:
+                warned_no_rollback = True
+                print(json.dumps({
+                    "warning": "sustained non-finite state before any "
+                               "durable checkpoint; rollback unavailable"}))
+            return state, None, False
+        time.sleep(args.rollback_backoff * (2 ** rollbacks))
+        rollbacks += 1
+        streak = 0
+        state = load_checkpoint(args.checkpoint_dir, last, like=state)
+        rec = {"rollback": rollbacks, "restored_step": last}
+        history.append(rec)
+        print(json.dumps(rec))
+        return state, last, True
+
     try:
         if args.resume:
             last = latest_step(args.checkpoint_dir)
@@ -248,8 +406,21 @@ def run_training(args, mesh=None) -> dict:
                     f"--resume: no checkpoint found under "
                     f"{args.checkpoint_dir!r}; drop --resume for a fresh "
                     "run")
-            stored_fp = read_run_meta(args.checkpoint_dir,
-                                      last).get("mixing")
+            stored_meta = read_run_meta(args.checkpoint_dir, last)
+            stored_fp = stored_meta.get("mixing")
+            if stored_meta.get("faults") != faults_fp:
+                # A missing key means the trajectory ran WITHOUT fault
+                # injection (pre-fault checkpoints recorded none) — that
+                # IS a fingerprint, so None-vs-present mismatches refuse
+                # too: a resumed run realizing a different fault stream
+                # (or none) silently diverges from the trajectory it
+                # claims to continue.
+                raise ValueError(
+                    f"--resume: checkpoint step_{last:08d} was written "
+                    f"with fault config {stored_meta.get('faults')}, but "
+                    f"this run built {faults_fp}; pass matching "
+                    "--fault-* flags (or start a fresh run without "
+                    "--resume)")
             if stored_fp is None:
                 # Pre-fingerprint checkpoint: consistency CANNOT be
                 # verified (notably `--topology erdos` runs, whose graph
@@ -289,33 +460,65 @@ def run_training(args, mesh=None) -> dict:
                                f"not a multiple of unroll_k={args.unroll_k}: "
                                "checkpoints land on chunk boundaries only"}))
             scanned = make_scanned_steps(step, args.unroll_k)
-            n_chunks = max(0, args.steps - start) // args.unroll_k
-            with prefetch_chunks(pipeline, args.unroll_k, start_step=start,
-                                 num_chunks=n_chunks, place=place,
-                                 depth=args.prefetch_depth) as chunks:
-                for chunk in chunks:
-                    keys = per_step_keys(key, k, args.unroll_k)
-                    state, aux = scanned(state, chunk, keys)
-                    k_next = k + args.unroll_k
-                    # aux is stacked per step; reduce per chunk for logging.
-                    # Honor --log-every at chunk granularity — an unlogged
-                    # chunk costs no device->host sync at all.
-                    if crosses(k, k_next, args.log_every) or k_next >= args.steps:
-                        log(k_next - 1, aux["loss"].mean(),
-                            aux["consensus_error"][-1])
-                    if checkpoint_due(k, k_next):
-                        manager.save(k_next, state)
-                    k = k_next
+            # Outer while: a rollback abandons the in-flight prefetch
+            # stream (its chunks are past the restored step) and restarts
+            # it from the restored step — chunks are synthesized from the
+            # absolute step index, so the replay is the original stream.
+            while args.steps - k >= args.unroll_k:
+                rolled = False
+                n_chunks = (args.steps - k) // args.unroll_k
+                with prefetch_chunks(pipeline, args.unroll_k, start_step=k,
+                                     num_chunks=n_chunks, place=place,
+                                     depth=args.prefetch_depth) as chunks:
+                    for chunk in chunks:
+                        keys = per_step_keys(key, k, args.unroll_k)
+                        state, aux = scanned(state, chunk, keys)
+                        k_next = k + args.unroll_k
+                        nonf = tally(aux)
+                        streak = streak + 1 if nonf else 0
+                        # aux is stacked per step; reduce per chunk for
+                        # logging.  Honor --log-every at chunk granularity
+                        # — an unlogged chunk costs no device->host sync
+                        # at all (tally syncs only when fault counters
+                        # exist in aux).
+                        if (crosses(k, k_next, args.log_every)
+                                or k_next >= args.steps):
+                            log(k_next - 1, aux["loss"].mean(),
+                                aux["consensus_error"][-1])
+                        if nonf:
+                            state, rk, rolled = try_rollback(state)
+                            if rolled:
+                                k = rk
+                                break
+                        if checkpoint_due(k, k_next) and not (
+                                nonf and args.nan_policy == "warn"):
+                            # Under 'warn' a non-finite interval may have
+                            # poisoned the state itself — never make it a
+                            # rollback target.  Under 'skip' the state is
+                            # the held finite anchor and stays durable.
+                            manager.save(k_next, state)
+                        k = k_next
+                if not rolled:
+                    break
 
         # Eager loop: the whole run when --unroll-k 1, the tail otherwise.
-        for k in range(k, args.steps):
+        while k < args.steps:
             sk = jax.random.fold_in(key, k)
             batch = place(pipeline.batch_at(k))
             state, aux = step(state, batch, sk)
+            nonf = tally(aux)
+            streak = streak + 1 if nonf else 0
             if k % args.log_every == 0 or k == args.steps - 1:
                 log(k, aux["loss"], aux["consensus_error"])
-            if checkpoint_due(k, k + 1):
+            if nonf:
+                state, rk, rolled = try_rollback(state)
+                if rolled:
+                    k = rk
+                    continue
+            if checkpoint_due(k, k + 1) and not (
+                    nonf and args.nan_policy == "warn"):
                 manager.save(k + 1, state)
+            k += 1
 
         if manager is not None:
             # Terminal checkpoint: a run whose --steps doesn't cross a
@@ -331,6 +534,14 @@ def run_training(args, mesh=None) -> dict:
             # train loop never reports success on a checkpoint that never
             # landed.
             manager.close()
+
+    if faults is not None or args.nan_policy != "off":
+        summary = {"fault_summary": dict(fault_totals),
+                   "rollbacks": rollbacks}
+        if manager is not None:
+            summary["checkpoint_retries"] = manager.retries
+        history.append(summary)
+        print(json.dumps(summary))
 
     audit_report = None
     if audit_cfg is not None:
@@ -348,7 +559,8 @@ def run_training(args, mesh=None) -> dict:
             "report": out_path}))
 
     return {"state": state, "history": history, "resumed_from": start or None,
-            "privacy_audit": audit_report}
+            "privacy_audit": audit_report, "fault_totals": fault_totals,
+            "rollbacks": rollbacks}
 
 
 def main(argv=None):

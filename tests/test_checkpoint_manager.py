@@ -235,6 +235,71 @@ def test_manifest_records_completed_steps(tmp_path):
     assert manifest["policy"] == {"keep_last": 3, "keep_every": None}
 
 
+def test_writer_retries_transient_oserror(tmp_path, monkeypatch):
+    """Two NFS-blip-style commit failures must not kill the run: the
+    writer retries with backoff (commit_snapshot cleans its staging dir
+    on failure, so a re-run is safe), the save lands, and the survived
+    retry count is surfaced in manifest.json for post-mortems."""
+    real = manager_mod.io.commit_snapshot
+    fails = {"n": 2}
+
+    def flaky(*a, **k):
+        if fails["n"] > 0:
+            fails["n"] -= 1
+            raise OSError("transient blip")
+        return real(*a, **k)
+
+    monkeypatch.setattr(manager_mod.io, "commit_snapshot", flaky)
+    monkeypatch.setattr(manager_mod, "COMMIT_BACKOFF_S", 0.01)
+    with CheckpointManager(str(tmp_path)) as m:
+        m.save(1, _tree(1))
+        m.wait()
+        assert m.retries == 2
+    assert complete_steps(str(tmp_path)) == [1]
+    with open(tmp_path / "manifest.json") as f:
+        assert json.load(f)["retries"] == 2
+
+
+def test_writer_parks_fatal_after_retry_budget(tmp_path, monkeypatch):
+    """A commit failing through every attempt still surfaces in the
+    caller: retries are bounded, so a genuinely broken disk fails the
+    run instead of spinning forever."""
+    calls = {"n": 0}
+
+    def broken(*a, **k):
+        calls["n"] += 1
+        raise OSError("disk gone")
+
+    monkeypatch.setattr(manager_mod.io, "commit_snapshot", broken)
+    monkeypatch.setattr(manager_mod, "COMMIT_BACKOFF_S", 0.01)
+    m = CheckpointManager(str(tmp_path))
+    m.save(1, _tree(1))
+    with pytest.raises(RuntimeError, match="checkpoint writer failed"):
+        m.wait()
+    assert calls["n"] == 1 + manager_mod.COMMIT_RETRIES
+    with pytest.raises(RuntimeError):
+        m.close()
+
+
+def test_sync_mode_retries_transient_oserror(tmp_path, monkeypatch):
+    """async_writes=False takes the same retry path as the writer."""
+    real = manager_mod.io.commit_snapshot
+    fails = {"n": 1}
+
+    def flaky(*a, **k):
+        if fails["n"] > 0:
+            fails["n"] -= 1
+            raise OSError("transient blip")
+        return real(*a, **k)
+
+    monkeypatch.setattr(manager_mod.io, "commit_snapshot", flaky)
+    monkeypatch.setattr(manager_mod, "COMMIT_BACKOFF_S", 0.01)
+    with CheckpointManager(str(tmp_path), async_writes=False) as m:
+        m.save(2, _tree(2))
+        assert m.retries == 1
+    assert complete_steps(str(tmp_path)) == [2]
+
+
 def test_manager_sweeps_stale_tmp_debris_on_open(tmp_path):
     stage = tmp_path / (step_dirname(9) + ".tmp-99999")
     stage.mkdir()

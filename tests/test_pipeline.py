@@ -104,6 +104,28 @@ def test_prefetcher_propagates_worker_exception():
     assert _prefetch_threads() == []
 
 
+def test_prefetcher_dead_worker_raises_instead_of_hanging(monkeypatch):
+    """A worker thread that dies WITHOUT posting its end-of-stream
+    sentinel (hard kill, teardown race — `_worker_loop`'s finally never
+    ran) must surface as an error in the consumer, not park the train
+    loop in an untimed queue.get forever."""
+    import repro.data.prefetch as prefetch_mod
+
+    def dead_loop(it, place, stop, q):
+        q.put((next(it), None))  # one good item, then die sentinel-less
+
+    monkeypatch.setattr(prefetch_mod, "_worker_loop", dead_loop)
+    monkeypatch.setattr(prefetch_mod.Prefetcher, "_POLL_S", 0.05)
+    pf = prefetch_mod.Prefetcher(iter([7, 8, 9]))
+    assert next(pf) == 7
+    with pytest.raises(RuntimeError, match="died without posting"):
+        next(pf)
+    assert pf._exhausted  # the torn stream stays closed
+    with pytest.raises(StopIteration):
+        next(pf)
+    pf.close()
+
+
 def test_prefetcher_overlaps_source_with_consumer():
     """With depth=2 the worker synthesizes ahead: total wall time is
     max(source, consumer)-ish, not their sum."""

@@ -227,6 +227,109 @@ def test_dsgt_state_checkpoints_with_tracker(tmp_path):
     np.testing.assert_array_equal(np.asarray(g_prev["w"]), np.zeros((3, 2)))
 
 
+# -- fault-tolerant runs: resume stays on the SAME fault trajectory -----
+
+FAULT = ["--fault-crash-rate", "0.2", "--fault-restart-rate", "0.5",
+         "--nan-policy", "skip"]
+
+
+@pytest.fixture(scope="module")
+def fault_uninterrupted():
+    """8-step chaos runs (markov crash churn + sentinels), both drivers."""
+    return {"scanned": _run(FAULT + ["--unroll-k", "4"]),
+            "eager": _run(FAULT)}
+
+
+def test_fault_drivers_walk_identical_trajectory(fault_uninterrupted):
+    e, s = fault_uninterrupted["eager"], fault_uninterrupted["scanned"]
+    for a, b in zip(_params(e), _params(s)):
+        np.testing.assert_array_equal(a, b)
+    assert e["fault_totals"] == s["fault_totals"]
+    assert e["fault_totals"].get("fault_down", 0) > 0  # churn happened
+
+
+def test_fault_resume_bit_identical(tmp_path, fault_uninterrupted):
+    """The fault realization folds in from the ABSOLUTE step: a resumed
+    run replays the same crash draws (and never re-issues Lambda keys
+    for a survived step) — bit-for-bit the uninterrupted trajectory."""
+    d = str(tmp_path)
+    _run(FAULT + ["--unroll-k", "4", "--steps", "4",
+                  "--checkpoint-dir", d, "--checkpoint-every", "4"])
+    resumed = _run(FAULT + ["--unroll-k", "4", "--checkpoint-dir", d,
+                            "--checkpoint-every", "4", "--resume"])
+    assert resumed["resumed_from"] == 4
+    for a, b in zip(_params(fault_uninterrupted["scanned"]),
+                    _params(resumed)):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_fault_resume_refuses_mismatched_fault_config(tmp_path):
+    """The fault fingerprint rides in run_meta: resuming under a
+    different fault scenario (or none) refuses instead of silently
+    walking a different trajectory."""
+    d = str(tmp_path)
+    _run(FAULT + ["--steps", "4", "--checkpoint-dir", d,
+                  "--checkpoint-every", "4"])
+    with pytest.raises(ValueError, match="fault config"):
+        _run(["--checkpoint-dir", d, "--checkpoint-every", "4",
+              "--resume"])  # fault flags dropped
+    with pytest.raises(ValueError, match="fault config"):
+        _run(FAULT[:1] + ["0.3"] + FAULT[2:] +
+             ["--checkpoint-dir", d, "--checkpoint-every", "4",
+              "--resume"])  # different crash rate
+    # and the inverse: a fault-free checkpoint refuses fault-flag resume
+    d2 = str(tmp_path / "clean")
+    _run(["--steps", "4", "--checkpoint-dir", d2, "--checkpoint-every", "4"])
+    with pytest.raises(ValueError, match="fault config"):
+        _run(FAULT + ["--checkpoint-dir", d2, "--checkpoint-every", "4",
+                      "--resume"])
+
+
+def test_sigkill_mid_chaos_run_resumes_bit_identical(tmp_path,
+                                                     fault_uninterrupted):
+    """The whole self-healing story end to end: a chaos run is hard-
+    killed (SIGKILL — no finally blocks, no atexit) mid-training, then
+    --resume from the surviving durable checkpoint reproduces the
+    uninterrupted trajectory bit-for-bit."""
+    import subprocess
+    import sys
+    import time
+
+    d = str(tmp_path)
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(root, "src")] +
+        ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else []))
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro.launch.train"] + BASE + FAULT +
+        ["--checkpoint-dir", d, "--checkpoint-every", "2"],
+        env=env, cwd=root,
+        stdout=subprocess.DEVNULL, stderr=subprocess.DEVNULL)
+    try:
+        deadline = time.time() + 180.0
+        while time.time() < deadline and proc.poll() is None:
+            if (latest_step(d) or 0) >= 2:
+                break
+            time.sleep(0.05)
+        killed = proc.poll() is None
+        proc.kill()
+        proc.wait(timeout=30)
+    finally:
+        if proc.poll() is None:
+            proc.terminate()
+    last = latest_step(d)
+    assert last is not None and last >= 2  # a durable checkpoint survived
+    if not killed:  # raced a fast finish: resume is then a pure no-op
+        assert proc.returncode == 0
+    resumed = _run(FAULT + ["--checkpoint-dir", d,
+                            "--checkpoint-every", "2", "--resume"])
+    assert resumed["resumed_from"] == last
+    for a, b in zip(_params(fault_uninterrupted["eager"]),
+                    _params(resumed)):
+        np.testing.assert_array_equal(a, b)
+
+
 class _FakeMesh:
     """Duck-typed mesh: the dense-gossip path of make_train_step only reads
     .shape (a dict), so no multi-device runtime is needed."""
