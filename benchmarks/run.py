@@ -24,6 +24,10 @@ Prints ``name,us_per_call,derived`` CSV rows:
                        the external-eavesdropper and full-auditor taps on
                        the scanned hot loop; reports the capture overhead
                        (merged into BENCH_pdsgd.json)
+  * bench_multihost  : multi-controller deployment tax — the tiny-LM run
+                       driven by launch.multihost as one process vs two
+                       socket-coupled rank processes
+                       (merged into BENCH_pdsgd.json)
 
 ``--only NAME`` runs a single benchmark (substring match).
 """
@@ -912,6 +916,68 @@ def bench_fault_injection(iters=600, unroll_k=100):
          f"{payload['corrupt_guarded_overhead_vs_off']}x")
 
 
+def bench_multihost(steps=8, agents=4):
+    """Multi-controller deployment tax: the same tiny-LM PDSGD run driven
+    by `launch.multihost` as ONE process (in-process dense transport) vs
+    TWO rank processes exchanging framed v_ij over TCP sockets.
+
+    Both runs walk bit-identical trajectories (pinned by
+    tests/test_multihost.py); the rows therefore isolate pure deployment
+    cost — rendezvous, per-step socket framing, and the per-rank
+    checkpoint shards — as us/step from each rank's own wall clock.  The
+    derived column carries the socket-vs-inproc overhead ratio; on this
+    single CPU the two ranks also SHARE the core, so the ratio is an
+    upper bound on what separate hosts see.
+    """
+    import shutil
+    import subprocess
+    import tempfile
+
+    def launch(world):
+        root = tempfile.mkdtemp(prefix=f"bench_mh_w{world}_")
+        try:
+            cmd = [sys.executable, "-m", "repro.launch.multihost",
+                   "--arch", "stablelm-3b-tiny", "--agents", str(agents),
+                   "--world", str(world), "--steps", str(steps),
+                   "--per-agent-batch", "2", "--seq-len", "16",
+                   "--seed", "0", "--checkpoint-dir", root,
+                   "--checkpoint-every", str(steps), "--timeout", "120"]
+            env = dict(os.environ)
+            env["PYTHONPATH"] = os.path.join(REPO_ROOT, "src") + (
+                os.pathsep + env["PYTHONPATH"]
+                if env.get("PYTHONPATH") else "")
+            out = subprocess.run(cmd, capture_output=True, text=True,
+                                 timeout=600, env=env)
+            if out.returncode != 0:
+                raise RuntimeError(f"multihost world={world} failed:\n"
+                                   + out.stderr[-2000:])
+            summary = json.loads(out.stdout.strip().splitlines()[-1])
+            ranks = summary["multihost_summary"]["ranks"]
+            return max(r["us_per_step"] for r in ranks.values()
+                       if r is not None)
+        finally:
+            shutil.rmtree(root, ignore_errors=True)
+
+    results = {"inproc_world1": launch(1), "socket_world2": launch(2)}
+    overhead = results["socket_world2"] / results["inproc_world1"]
+    payload = {
+        "workload": (f"stablelm-3b-tiny m={agents} steps={steps} "
+                     f"per_agent_batch=2 seq=16 via launch.multihost"),
+        "paths": {
+            name: {"us_per_step": round(us, 2),
+                   "steps_per_s": round(1e6 / us, 1)}
+            for name, us in results.items()
+        },
+        "socket_overhead_vs_inproc": round(overhead, 3),
+        "backend": jax.default_backend(),
+    }
+    _write_bench_json({"bench_multihost": payload})
+    for name, us in results.items():
+        emit(f"bench_multihost_{name}", us, f"steps_per_s={1e6 / us:.1f}")
+    emit("bench_multihost_overhead", 0.0,
+         f"socket_vs_inproc={overhead:.3f}x")
+
+
 def kernel_benches():
     from repro.kernels import (flash_attention, gossip_update,
                                obfuscate_update, ssd_intra_chunk)
@@ -959,6 +1025,7 @@ BENCHES = {
     "bench_dynamic_topology": bench_dynamic_topology,
     "bench_privacy_audit": bench_privacy_audit,
     "bench_fault_injection": bench_fault_injection,
+    "bench_multihost": bench_multihost,
     "kernel_benches": kernel_benches,
     "fig3_nonconvex": fig3_nonconvex,
 }

@@ -45,6 +45,41 @@ python benchmarks/run.py --only bench_privacy_audit
 echo "== fault-injection perf (bench_fault_injection) =="
 python benchmarks/run.py --only bench_fault_injection
 
+echo "== multi-controller perf (bench_multihost) =="
+python benchmarks/run.py --only bench_multihost
+
+echo "== multi-controller smoke (2 ranks, SIGKILL rank 1, quorum resume) =="
+python - <<'EOF'
+import json, os, shutil, subprocess, sys, tempfile
+root = tempfile.mkdtemp(prefix="check_mh_")
+try:
+    base = [sys.executable, "-m", "repro.launch.multihost",
+            "--arch", "stablelm-3b-tiny", "--agents", "4", "--world", "2",
+            "--steps", "6", "--per-agent-batch", "2", "--seq-len", "16",
+            "--seed", "0", "--checkpoint-dir", root,
+            "--checkpoint-every", "2", "--timeout", "60"]
+    # pass 1: rank 1 SIGKILLs itself at step 3; survivors must finish
+    out = subprocess.run(base + ["--chaos-kill-rank", "1",
+                                 "--chaos-kill-step", "3"],
+                         capture_output=True, text=True, check=True)
+    s1 = json.loads(out.stdout.strip().splitlines()[-1])["multihost_summary"]
+    assert s1["ok"] and s1["casualties"] == [1], s1
+    # pass 2: resume from the quorum step; every rank completes finite
+    out = subprocess.run(base + ["--resume"],
+                         capture_output=True, text=True, check=True)
+    s2 = json.loads(out.stdout.strip().splitlines()[-1])["multihost_summary"]
+    assert s2["ok"] and s2["casualties"] == [], s2
+    assert s2["generation"] == 1, s2   # fresh Lambda keys post-casualty
+    for r in ("0", "1"):
+        rk = s2["ranks"][r]
+        assert rk is not None and rk["finite"] and rk["final_step"] == 6, s2
+    print("multihost smoke ok:", json.dumps(
+        {"casualties_pass1": s1["casualties"],
+         "generation_pass2": s2["generation"]}))
+finally:
+    shutil.rmtree(root, ignore_errors=True)
+EOF
+
 echo "== fault-injection smoke (crash churn + raw NaN chaos, skip-and-hold) =="
 python - <<'EOF'
 import json, subprocess, sys

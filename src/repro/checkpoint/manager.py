@@ -29,13 +29,16 @@ Single-writer assumption: one live manager owns a checkpoint directory
 """
 from __future__ import annotations
 
+import multiprocessing as mp
 import os
 import queue
 import shutil
 import threading
 import time as _time
 import weakref
-from typing import Any
+from typing import Any, Callable
+
+import numpy as np
 
 from ..data import worker as _w
 from . import io
@@ -172,23 +175,120 @@ def _commit_with_retry(directory: str, step: int, arrays: dict, meta: dict,
 
 
 def _writer_loop(directory: str, q: queue.Queue, state: _WriterState,
-                 keep_last: int | None, keep_every: int | None) -> None:
+                 keep_last: int | None, keep_every: int | None,
+                 commit: Callable | None = None,
+                 shutdown: Callable | None = None) -> None:
     # Module-level (no CheckpointManager reference): the thread must not
     # keep the owning manager alive, or its GC finalizer could never run.
+    # ``commit`` defaults to the in-thread commit; the subprocess writer
+    # substitutes a round-trip through its child (see _spawn_commit_child).
+    if commit is None:
+        def commit(step, arrays, meta):
+            _commit_with_retry(directory, step, arrays, meta, state,
+                               keep_last, keep_every)
     while True:
         job = q.get()
         try:
             if job is _w.END:
+                if shutdown is not None:
+                    try:
+                        shutdown()
+                    except BaseException as e:
+                        if state.error is None:
+                            state.error = e
                 return
             if state.error is not None:
                 continue  # park the first error, drain the rest unwritten
             step, arrays, meta = job
-            _commit_with_retry(directory, step, arrays, meta, state,
-                               keep_last, keep_every)
+            commit(step, arrays, meta)
         except BaseException as e:
             state.error = e
         finally:
             q.task_done()
+
+
+# -- subprocess writer (the GIL-free commit path) -------------------------
+#
+# The thread writer's npz serialization and fsync-adjacent work hold the
+# GIL while the train loop is dispatch-bound (ROADMAP "checkpoint
+# free-threading").  ``writer="subprocess"`` keeps the exact queue/END/
+# error plumbing of the thread writer, but the thread only converts the
+# snapshot to numpy (releasing the GIL during the device->host copy) and
+# round-trips the job through a spawned child process, which runs the very
+# same `_commit_with_retry` + manifest + retention code — so the on-disk
+# semantics are pinned identical by construction (and by tests).
+
+
+def _subprocess_commit_loop(directory: str, keep_last: int | None,
+                            keep_every: int | None, completed0: list[int],
+                            jobq, ackq) -> None:
+    """Child-process main: commit jobs until the None sentinel."""
+    state = _WriterState(completed0)
+    while True:
+        job = jobq.get()
+        if job is None:
+            ackq.put(("end", None, None))
+            return
+        step, arrays, meta = job
+        try:
+            _commit_with_retry(directory, step, arrays, meta, state,
+                               keep_last, keep_every)
+            with state.lock:
+                ackq.put(("ok", sorted(state.completed), state.retries))
+        except BaseException as e:  # surfaced as the writer error upstream
+            ackq.put(("err", repr(e), None))
+
+
+def _spawn_commit_child(directory: str, state: _WriterState,
+                        keep_last: int | None, keep_every: int | None
+                        ) -> tuple[Callable, Callable]:
+    """Start the commit child; returns (commit, shutdown) for _writer_loop."""
+    ctx = mp.get_context("spawn")  # never fork a live jax runtime
+    jobq, ackq = ctx.Queue(), ctx.Queue()
+    with state.lock:
+        completed0 = sorted(state.completed)
+    child = ctx.Process(
+        target=_subprocess_commit_loop,
+        args=(directory, keep_last, keep_every, completed0, jobq, ackq),
+        name="repro-checkpoint-commit", daemon=True)
+    child.start()
+
+    def commit(step, arrays, meta):
+        # Device->host here on the writer thread (np.asarray releases the
+        # GIL for the copy); the child only ever sees plain numpy.
+        jobq.put((step, {k: np.asarray(v) for k, v in arrays.items()},
+                  meta))
+        while True:
+            try:
+                kind, a, b = ackq.get(timeout=1.0)
+                break
+            except queue.Empty:
+                if not child.is_alive():
+                    raise RuntimeError(
+                        "checkpoint commit subprocess died mid-write")
+        if kind == "err":
+            raise RuntimeError(f"checkpoint commit subprocess failed: {a}")
+        with state.lock:  # mirror the child's authoritative view
+            state.completed = set(a)
+            state.retries = b
+
+    def shutdown():
+        try:
+            jobq.put(None)
+            deadline = _time.monotonic() + 60.0
+            while _time.monotonic() < deadline:
+                try:
+                    if ackq.get(timeout=1.0)[0] == "end":
+                        break
+                except queue.Empty:
+                    if not child.is_alive():
+                        break
+        finally:
+            child.join(timeout=10.0)
+            if child.is_alive():  # wedged: daemon child dies with us
+                child.terminate()
+
+    return commit, shutdown
 
 
 class CheckpointManager:
@@ -204,6 +304,13 @@ class CheckpointManager:
     async_writes: False serializes commits on the caller thread (same
                   atomicity/retention, no worker) — the tests' simple mode
                   and a fallback for single-shot tooling.
+    writer:       "thread" (default), "subprocess", or "sync"; overrides
+                  async_writes when given.  "subprocess" keeps the writer
+                  thread as the queue conduit but runs the npz commit +
+                  retention + manifest in a spawned child process, so the
+                  serialization never competes with a dispatch-bound train
+                  loop for the GIL; on-disk semantics are identical (the
+                  child runs the same commit code).
     queue_depth:  bounded in-flight snapshots; a full queue back-pressures
                   `save()` rather than buffering unbounded host copies.
     fresh:        True CLEARS any existing steps/manifest on open (after
@@ -222,13 +329,21 @@ class CheckpointManager:
     def __init__(self, directory: str, *, keep_last: int | None = None,
                  keep_every: int | None = None, async_writes: bool = True,
                  queue_depth: int = 2, fresh: bool = False,
-                 run_meta: dict | None = None):
+                 run_meta: dict | None = None,
+                 writer: str | None = None):
         if keep_last is not None and keep_last < 1:
             raise ValueError(f"keep_last must be >= 1, got {keep_last}")
         if keep_every is not None and keep_every < 1:
             raise ValueError(f"keep_every must be >= 1, got {keep_every}")
         if queue_depth < 1:
             raise ValueError(f"queue_depth must be >= 1, got {queue_depth}")
+        if writer is None:
+            writer = "thread" if async_writes else "sync"
+        if writer not in ("thread", "subprocess", "sync"):
+            raise ValueError(
+                f"writer must be 'thread', 'subprocess' or 'sync', "
+                f"got {writer!r}")
+        self.writer = writer
         self.directory = directory
         self.keep_last = keep_last
         self.keep_every = keep_every
@@ -250,12 +365,16 @@ class CheckpointManager:
         self._closed = False
         self._queue: queue.Queue | None = None
         self._thread = None
-        if async_writes:
+        if writer != "sync":
+            commit = shutdown = None
+            if writer == "subprocess":
+                commit, shutdown = _spawn_commit_child(
+                    directory, self._state, keep_last, keep_every)
             self._queue = queue.Queue(maxsize=queue_depth)
             self._thread = threading.Thread(
                 target=_writer_loop,
                 args=(directory, self._queue, self._state, keep_last,
-                      keep_every),
+                      keep_every, commit, shutdown),
                 name="repro-checkpoint-writer", daemon=True)
             self._thread.start()
             # Abandoned-manager safety net: drops queued (not yet started)

@@ -4,7 +4,8 @@ from __future__ import annotations
 import dataclasses
 import importlib
 
-from .base import ArchConfig, InputShape, INPUT_SHAPES, reduced_variant
+from .base import (ArchConfig, InputShape, INPUT_SHAPES, reduced_variant,
+                   tiny_variant)
 
 _ARCHS = {
     "stablelm-3b": "stablelm_3b",
@@ -27,6 +28,8 @@ LONG_WINDOW = 4096  # sliding window applied for long_500k on windowed archs
 def get_config(name: str) -> ArchConfig:
     if name.endswith("-smoke"):
         return reduced_variant(get_config(name[: -len("-smoke")]))
+    if name.endswith("-tiny"):
+        return tiny_variant(get_config(name[: -len("-tiny")]))
     if name not in _ARCHS:
         raise KeyError(f"unknown arch {name!r}; have {sorted(_ARCHS)}")
     mod = importlib.import_module(f".{_ARCHS[name]}", __package__)
@@ -52,4 +55,5 @@ def config_for_shape(cfg: ArchConfig, shape: InputShape) -> ArchConfig:
 
 
 __all__ = ["ArchConfig", "InputShape", "INPUT_SHAPES", "ARCH_NAMES",
-           "get_config", "config_for_shape", "reduced_variant", "LONG_WINDOW"]
+           "get_config", "config_for_shape", "reduced_variant", "tiny_variant",
+           "LONG_WINDOW"]

@@ -88,6 +88,39 @@ INPUT_SHAPES: dict[str, InputShape] = {
 }
 
 
+def tiny_variant(cfg: ArchConfig) -> ArchConfig:
+    """Minimal same-family variant (suffix ``-tiny``) for multi-process and
+    wire-capture tests: 1 layer, d_model 32, vocab 64 — a few thousand
+    params per agent, so a full (m, m, D) wire tensor over a whole run
+    stays megabytes.  Same code paths as ``-smoke``, just smaller."""
+    base = reduced_variant(cfg)
+    d_model = 32
+    head_dim = 16
+    heads = max(2, d_model // head_dim)
+    kv = max(1, min(base.num_kv_heads, heads))
+    while heads % kv:
+        kv -= 1
+    return dataclasses.replace(
+        base,
+        name=cfg.name + "-tiny",
+        num_layers=1,
+        d_model=d_model,
+        num_heads=heads,
+        num_kv_heads=kv,
+        head_dim=head_dim,
+        d_ff=min(base.d_ff, 64) if base.d_ff else 0,
+        vocab_size=min(base.vocab_size, 64),
+        num_experts=min(base.num_experts, 2) if base.num_experts else 0,
+        num_experts_per_tok=1 if base.num_experts_per_tok else 0,
+        ssm_state=min(base.ssm_state, 8) if base.ssm_state else 0,
+        ssm_head_dim=16 if base.ssm_state else base.ssm_head_dim,
+        num_encoder_layers=1 if base.num_encoder_layers else 0,
+        hybrid_attn_every=1,
+        num_prefix_embeds=min(base.num_prefix_embeds, 4)
+        if base.num_prefix_embeds else 0,
+    )
+
+
 def reduced_variant(cfg: ArchConfig) -> ArchConfig:
     """Reduced same-family variant for CPU smoke tests:
     2 layers, d_model <= 512, <= 4 experts, small vocab."""

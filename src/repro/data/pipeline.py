@@ -2,8 +2,13 @@
 
 Produces numpy batches shaped (agents, per_agent_batch, seq) for training or
 (batch, seq) for serving; the launcher places them onto the mesh with the
-matching NamedSharding.  Deterministic per (seed, step) so every host in a
-multi-controller deployment computes its own slice without coordination.
+matching NamedSharding.  Deterministic per (seed, step, agent) so every host
+in a multi-controller deployment computes its own slice without
+coordination: agent a's stream is drawn from its own
+``np.random.default_rng((seed, step, a))``, which makes the `agent_slice`
+restriction exact *by construction* — a rank that builds agents [lo, hi)
+produces bit-identical rows to the full-batch build, having never touched
+any other agent's draws.
 
 The scanned loop (`core.make_scanned_steps`) consumes *chunks*: the same
 batches stacked along a leading (unroll_k,) axis.  `chunk_at`/`chunks` build
@@ -38,33 +43,55 @@ class DataPipeline:
     seq_len: int
     seed: int = 0
 
-    def batch_at(self, step: int) -> dict:
-        """Batch for a given step — random-access so resume is trivial."""
-        rng = np.random.default_rng((self.seed, step))
-        tokens = self.dataset.batch(
-            rng, self.num_agents * self.per_agent_batch, self.seq_len + 1)
-        tokens = tokens.reshape(self.num_agents, self.per_agent_batch,
-                                self.seq_len + 1)
+    def _slice(self, agent_slice: tuple[int, int] | None) -> tuple[int, int]:
+        if agent_slice is None:
+            return 0, self.num_agents
+        lo, hi = int(agent_slice[0]), int(agent_slice[1])
+        if not (0 <= lo < hi <= self.num_agents):
+            raise ValueError(
+                f"agent_slice {agent_slice} out of range for "
+                f"{self.num_agents} agents")
+        return lo, hi
+
+    def batch_at(self, step: int,
+                 agent_slice: tuple[int, int] | None = None) -> dict:
+        """Batch for a given step — random-access so resume is trivial.
+
+        `agent_slice=(lo, hi)` builds only rows [lo, hi) of the agent
+        axis; row a is drawn from rng (seed, step, a) regardless of the
+        slice, so sliced and full streams agree per-agent bit-for-bit.
+        """
+        lo, hi = self._slice(agent_slice)
+        tokens = np.stack([
+            self.dataset.batch(np.random.default_rng((self.seed, step, a)),
+                               self.per_agent_batch, self.seq_len + 1)
+            for a in range(lo, hi)])
         return {"tokens": tokens[..., :-1], "labels": tokens[..., 1:]}
 
-    def chunk_at(self, start_step: int, unroll_k: int) -> dict:
+    def chunk_at(self, start_step: int, unroll_k: int,
+                 agent_slice: tuple[int, int] | None = None) -> dict:
         """Super-batch for steps [start_step, start_step + unroll_k).
 
         Leaves gain a leading (unroll_k,) axis and are exactly
         ``np.stack([batch_at(start_step + i) for i in range(unroll_k)])``
         leaf-for-leaf, so `make_scanned_steps` consuming chunks walks the
         identical stream as the eager loop consuming `batch_at` — and a
-        resumed run re-chunks from any step boundary without drift.
+        resumed run re-chunks from any step boundary without drift.  An
+        `agent_slice` restricts the agent axis the same way `batch_at`
+        does (each rank prefetches only its own agents).
         """
-        batches = [self.batch_at(start_step + i) for i in range(unroll_k)]
+        batches = [self.batch_at(start_step + i, agent_slice)
+                   for i in range(unroll_k)]
         return {k: np.stack([b[k] for b in batches]) for k in batches[0]}
 
     def chunks(self, unroll_k: int, start_step: int = 0,
-               num_chunks: int | None = None) -> Iterator[dict]:
+               num_chunks: int | None = None,
+               agent_slice: tuple[int, int] | None = None) -> Iterator[dict]:
         """Iterate chunk_at super-batches; finite when num_chunks is given."""
         c = 0
         while num_chunks is None or c < num_chunks:
-            yield self.chunk_at(start_step + c * unroll_k, unroll_k)
+            yield self.chunk_at(start_step + c * unroll_k, unroll_k,
+                                agent_slice)
             c += 1
 
     def __iter__(self) -> Iterator[dict]:

@@ -175,15 +175,18 @@ class Prefetcher:
 def prefetch_chunks(pipeline, unroll_k: int, start_step: int = 0,
                     num_chunks: int | None = None, mesh=None,
                     place: Callable | None = None,
-                    depth: int = 2) -> Prefetcher:
+                    depth: int = 2,
+                    agent_slice: tuple[int, int] | None = None) -> Prefetcher:
     """Prefetching iterator of device-resident (unroll_k, ...) chunks.
 
-    ``place`` defaults to `make_placer(mesh)`.  Use as a context manager so
-    an early exit (exception, KeyboardInterrupt) still joins the worker.
+    ``place`` defaults to `make_placer(mesh)`.  ``agent_slice`` restricts
+    synthesis to the rank's own agents (multi-controller deployments never
+    build other hosts' batches).  Use as a context manager so an early
+    exit (exception, KeyboardInterrupt) still joins the worker.
     """
     if place is None:
         place = make_placer(mesh)
     return Prefetcher(
         pipeline.chunks(unroll_k, start_step=start_step,
-                        num_chunks=num_chunks),
+                        num_chunks=num_chunks, agent_slice=agent_slice),
         place=place, depth=depth)

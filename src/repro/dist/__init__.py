@@ -1,11 +1,16 @@
-"""Distribution subsystem: logical sharding rules and the torus gossip
-collectives for the paper's Eq. (3) exchange.
+"""Distribution subsystem: logical sharding rules, the torus gossip
+collectives, and the multi-controller transport seam for the paper's
+Eq. (3) exchange.
 
 ``sharding``    — logical-axis -> mesh-axis rule tables (train/serve/decode)
                   and the resolver ``logical_spec``.
 ``collectives`` — neighbor-only ring/torus gossip (``torus_gossip_pdsgd``)
                   with a dense-W einsum fallback on a single host.
+``transport``   — the `Transport` interface (`link_message` written once):
+                  in-process numpy reference, shard_map/ppermute, and the
+                  TCP socket channel where only v_ij crosses a process
+                  boundary (`launch.multihost` deployment).
 """
-from . import collectives, sharding
+from . import collectives, sharding, transport
 
-__all__ = ["collectives", "sharding"]
+__all__ = ["collectives", "sharding", "transport"]

@@ -314,19 +314,25 @@ def torus_gossip_pdsgd(mesh, params: Pytree, u: Pytree, b: jax.Array, *,
     def body(b_loc, w_loc, x_loc, u_loc):
         # One agent per shard: every leaf is (1, ...), b_loc/w_loc are
         # (1, 1+ndirs) — column 0 is the self term, 1+d the directions.
+        # The per-link message math itself lives in `transport.link_message`
+        # (the seam every transport shares); this body keeps its historic
+        # direction-order accumulation, which existing tests bit-anchor.
+        from .transport import link_message
+
         def coeff(tab, col, leaf):
             return tab[:, col].reshape((-1,) + (1,) * (leaf.ndim - 1))
 
         out = jax.tree.map(
-            lambda x, uu: (coeff(w_loc, 0, x) * x
-                           - coeff(b_loc, 0, x) * uu), x_loc, u_loc)
+            lambda x, uu: link_message(coeff(w_loc, 0, x),
+                                       coeff(b_loc, 0, x), x, uu),
+            x_loc, u_loc)
         taps = []
         for di, (axis, size, shift) in enumerate(dirs):
             perm = [(d, (d + shift) % size) for d in range(size)]
             # The sender computes the mixed v_ij; only v crosses the link.
             v = jax.tree.map(
-                lambda x, uu: (coeff(w_loc, 1 + di, x) * x
-                               - coeff(b_loc, 1 + di, x) * uu),
+                lambda x, uu: link_message(coeff(w_loc, 1 + di, x),
+                                           coeff(b_loc, 1 + di, x), x, uu),
                 x_loc, u_loc)
             if capture:
                 # Tap at the SENDER, before the collective: this is the

@@ -1,10 +1,27 @@
-"""Production mesh builders (functions, never module-level constants, so
-importing this module never touches jax device state)."""
+"""Mesh builders for single- and multi-controller runs.
+
+Everything here is a function, never a module-level constant, so importing
+this module never touches jax device state.
+
+`make_global_mesh` is the multi-controller entry point: it builds the
+agent mesh from the *global* process view (`jax.process_count()` > 1 when
+`jax.distributed` is initialized — each controller contributes its local
+devices and the "pod" axis follows the process boundary) and falls back
+to the local devices of a single process.  `validate_agent_tiling` is the
+one place that decides whether an agent count fits a mesh, with an error
+that says what would fit.
+"""
 from __future__ import annotations
 
 import jax
 
-__all__ = ["make_production_mesh", "agent_axes", "num_agents"]
+__all__ = [
+    "make_production_mesh",
+    "make_global_mesh",
+    "validate_agent_tiling",
+    "agent_axes",
+    "num_agents",
+]
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -13,6 +30,66 @@ def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return jax.make_mesh(shape, axes)
+
+
+def make_global_mesh(*, model_parallel: int = 1, agents: int | None = None):
+    """Build the agent mesh over every device in the global process view.
+
+    With `jax.process_count() == P > 1` (a jax.distributed multi-controller
+    job) the devices of all processes participate and the leading "pod"
+    axis has extent P, so one process owns exactly one pod row of the
+    agent torus — process boundary == pod boundary, which is what keeps
+    each controller's Λ-keys on its own host.  A single process (the
+    common CPU/dev case) gets a flat ("data", "model") mesh over its local
+    devices.
+
+    `model_parallel` carves a trailing "model" axis out of the device
+    count; the remaining extent hosts the agents.  When `agents` is given
+    the tiling is validated immediately (see `validate_agent_tiling`).
+    """
+    devices = jax.devices()
+    n = len(devices)
+    if model_parallel < 1 or n % model_parallel:
+        raise ValueError(
+            f"model_parallel={model_parallel} does not divide the "
+            f"{n} visible devices")
+    slots = n // model_parallel
+    procs = jax.process_count()
+    if procs > 1:
+        if slots % procs:
+            raise ValueError(
+                f"{slots} agent slots do not split over {procs} processes; "
+                f"each controller must own the same number of agents")
+        shape = (procs, slots // procs, model_parallel)
+        axes = ("pod", "data", "model")
+    else:
+        shape = (slots, model_parallel)
+        axes = ("data", "model")
+    mesh = jax.make_mesh(shape, axes, devices=devices)
+    if agents is not None:
+        validate_agent_tiling(mesh, agents)
+    return mesh
+
+
+def validate_agent_tiling(mesh, agents: int) -> int:
+    """Require `agents` to tile the mesh's agent axes exactly.
+
+    Returns agents-per-slot (1 for the one-agent-per-device deployments;
+    >1 means each mesh slot time-multiplexes that many agents, which the
+    dense fallback supports but the ppermute ring does not).  Raises
+    ValueError with the fitting counts spelled out otherwise.
+    """
+    slots = num_agents(mesh)
+    shape = dict(mesh.shape)
+    if agents < 1:
+        raise ValueError(f"agent count must be positive, got {agents}")
+    if agents % slots:
+        fits = sorted({slots * k for k in (1, 2, 4, 8)})
+        raise ValueError(
+            f"{agents} agents do not tile the {shape} mesh: its agent axes "
+            f"{agent_axes(mesh)} provide {slots} slots, so the agent count "
+            f"must be a multiple of {slots} (e.g. {fits})")
+    return agents // slots
 
 
 def agent_axes(mesh) -> tuple[str, ...]:

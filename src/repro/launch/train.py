@@ -167,6 +167,13 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--checkpoint-sync", action="store_true",
                    help="commit checkpoints on the caller thread (blocks "
                         "the hot loop; default is the async writer)")
+    p.add_argument("--checkpoint-writer", default=None,
+                   choices=["thread", "subprocess"],
+                   help="async writer flavor: 'thread' (default) commits "
+                        "on a daemon thread; 'subprocess' ships the "
+                        "serialization to a spawned child so it never "
+                        "competes with the dispatch loop for the GIL "
+                        "(identical manifest/retention semantics)")
     p.add_argument("--keep-last", type=int, default=None,
                    help="retain only this many newest checkpoints "
                         "(default: keep all)")
@@ -286,10 +293,15 @@ def run_training(args, mesh=None) -> dict:
                                 seed=args.seed)
         run_meta["privacy_audit"] = audit_fingerprint(audit_cfg)
     if args.checkpoint_dir:
+        if args.checkpoint_sync and args.checkpoint_writer:
+            raise ValueError("--checkpoint-sync and --checkpoint-writer "
+                             "are mutually exclusive")
         manager = CheckpointManager(args.checkpoint_dir,
                                     keep_last=args.keep_last,
                                     keep_every=args.keep_every,
                                     async_writes=not args.checkpoint_sync,
+                                    writer=("sync" if args.checkpoint_sync
+                                            else args.checkpoint_writer),
                                     fresh=not args.resume,
                                     run_meta=run_meta)
 

@@ -362,3 +362,57 @@ def test_manager_adopts_existing_checkpoints(tmp_path):
 def test_invalid_knobs_rejected(tmp_path, kwargs):
     with pytest.raises(ValueError):
         CheckpointManager(str(tmp_path), **kwargs)
+
+
+# -- subprocess writer flavor ------------------------------------------------
+
+def test_subprocess_writer_parity_with_thread(tmp_path):
+    """writer="subprocess" must produce byte-identical on-disk semantics
+    to writer="thread": same completed steps, same retention survivors,
+    same manifest, same loaded values."""
+    dirs = {}
+    for flavor in ("thread", "subprocess"):
+        d = str(tmp_path / flavor)
+        m = CheckpointManager(d, keep_last=2, keep_every=4, writer=flavor)
+        for s in (1, 2, 3, 4, 5, 6):
+            m.save(s, _tree(s))
+        m.close()
+        dirs[flavor] = d
+    ct = complete_steps(dirs["thread"])
+    cs = complete_steps(dirs["subprocess"])
+    assert ct == cs == [4, 5, 6]  # keep_last=2 + pinned step 4
+    mt = json.load(open(os.path.join(dirs["thread"], "manifest.json")))
+    ms = json.load(open(os.path.join(dirs["subprocess"], "manifest.json")))
+    assert mt == ms
+    for s in ct:
+        a = load_checkpoint(dirs["thread"], s, _tree())
+        b = load_checkpoint(dirs["subprocess"], s, _tree())
+        assert np.array_equal(np.asarray(a["w"]), np.asarray(b["w"]))
+
+
+def test_subprocess_writer_reopen_adopts(tmp_path):
+    d = str(tmp_path)
+    m = CheckpointManager(d, writer="subprocess", run_meta={"k": 1})
+    m.save(3, _tree(3))
+    m.close()
+    assert latest_step(d) == 3
+    m2 = CheckpointManager(d, writer="subprocess")  # adopt, not fresh
+    m2.save(5, _tree(5))
+    m2.close()
+    assert complete_steps(d) == [3, 5]
+    assert _read_w(d, 3) == 3.0 and _read_w(d, 5) == 5.0
+
+
+def test_subprocess_writer_records_run_meta(tmp_path):
+    from repro.checkpoint import read_run_meta
+    d = str(tmp_path)
+    m = CheckpointManager(d, writer="subprocess",
+                          run_meta={"mixing": {"mode": "static"}})
+    m.save(2, _tree(2))
+    m.close()
+    assert read_run_meta(d, 2) == {"mixing": {"mode": "static"}}
+
+
+def test_writer_choice_validated(tmp_path):
+    with pytest.raises(ValueError, match="writer"):
+        CheckpointManager(str(tmp_path), writer="fork")

@@ -172,3 +172,38 @@ def test_per_step_keys_bit_identical_to_eager_fold_in():
         np.testing.assert_array_equal(
             jax.random.key_data(keys[i]),
             jax.random.key_data(jax.random.fold_in(base, 37 + i)))
+
+
+def test_agent_slice_bit_matches_full_stream(pipeline):
+    """Satellite regression: a rank building only agents [lo, hi) gets
+    bit-identical rows to the full build — per-agent rng streams make
+    the slice exact by construction."""
+    for step in (0, 5, 31):
+        full = pipeline.batch_at(step)
+        for lo, hi in ((0, 2), (1, 3), (3, 4), (0, 4)):
+            part = pipeline.batch_at(step, agent_slice=(lo, hi))
+            for name in ("tokens", "labels"):
+                assert part[name].shape[0] == hi - lo
+                np.testing.assert_array_equal(part[name],
+                                              full[name][lo:hi])
+    chunk_full = pipeline.chunk_at(7, 3)
+    chunk_part = pipeline.chunk_at(7, 3, agent_slice=(1, 3))
+    for name in ("tokens", "labels"):
+        np.testing.assert_array_equal(chunk_part[name],
+                                      chunk_full[name][:, 1:3])
+
+
+def test_agent_slice_validation(pipeline):
+    for bad in ((0, 5), (-1, 2), (3, 3), (2, 1)):
+        with pytest.raises(ValueError, match="agent_slice"):
+            pipeline.batch_at(0, agent_slice=bad)
+
+
+def test_prefetch_chunks_honors_agent_slice(pipeline):
+    with prefetch_chunks(pipeline, 2, start_step=4, num_chunks=2,
+                         agent_slice=(2, 4)) as chunks:
+        got = list(chunks)
+    for c, chunk in enumerate(got):
+        want = pipeline.chunk_at(4 + 2 * c, 2)
+        np.testing.assert_array_equal(np.asarray(chunk["tokens"]),
+                                      want["tokens"][:, 2:4])

@@ -1,0 +1,405 @@
+"""Property tests for the transport seam (`repro.dist.transport`).
+
+The contract under test: all three transports emit bit-identical updated
+blocks AND bit-identical wire streams for the same realized (W, B, x, u)
+— the in-process numpy reference anchors the bits, the socket transport
+is exercised with real TCP frames between threads, and the shard_map
+transport runs under fake devices in a subprocess.  The wire audit test
+additionally proves the socket frames carry the header + raw f32 v_ij
+payload and NOTHING else (no x, no u, no key material).
+"""
+import json
+import os
+import socket
+import struct
+import subprocess
+import sys
+import textwrap
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import make_mixing, make_topology
+from repro.core.mixing import metropolis_from_mask
+from repro.core.privacy import sample_B
+from repro.dist import transport as T
+
+
+def _coupling(rng, adjacency):
+    """A valid f32 (W, B) pair supported on adjacency + diagonal."""
+    m = len(adjacency)
+    sup = (np.asarray(adjacency, np.float32)
+           * (1 - np.eye(m, dtype=np.float32)) + np.eye(m, dtype=np.float32))
+    W = (rng.random((m, m)).astype(np.float32) * sup).astype(np.float32)
+    B = np.asarray(sample_B(jax.random.key(int(rng.integers(1 << 30))),
+                            jnp.asarray(sup)), np.float32)
+    return W, B
+
+
+def _ring(m):
+    A = np.zeros((m, m), np.int64)
+    for i in range(m):
+        A[i, (i + 1) % m] = A[(i + 1) % m, i] = 1
+    return A
+
+
+def _chord(m):
+    """Ring + one chord (the Fig. 1 flavor): asymmetric degrees exercise
+    the sender-order reordering."""
+    A = _ring(m)
+    A[0, m // 2] = A[m // 2, 0] = 1
+    return A
+
+
+def test_link_message_numpy_matches_eager_jnp():
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal(257).astype(np.float32)
+    u = rng.standard_normal(257).astype(np.float32)
+    w, b = np.float32(0.37), np.float32(0.19)
+    host = T.link_message(w, b, x, u)
+    dev = np.asarray(T.link_message(jnp.float32(w), jnp.float32(b),
+                                    jnp.asarray(x), jnp.asarray(u)))
+    assert np.array_equal(host, dev)
+
+
+def test_inproc_matches_dense_and_wire_messages():
+    """Reference transport == dense W x - B u (allclose) and its capture
+    == privacy.observe.wire_messages bitwise."""
+    from repro.privacy.observe import wire_messages
+    rng = np.random.default_rng(1)
+    m, D = 6, 11
+    A = _chord(m)
+    W, B = _coupling(rng, A)
+    x = rng.standard_normal((m, D)).astype(np.float32)
+    u = rng.standard_normal((m, D)).astype(np.float32)
+    tr = T.InProcessTransport(A)
+    out, cap = tr.exchange(x, u, W, B, capture=True)
+    np.testing.assert_allclose(out, W @ x - B @ u, rtol=1e-5, atol=1e-5)
+    ref = np.asarray(wire_messages(jnp.asarray(W), jnp.asarray(B),
+                                   jnp.asarray(x), jnp.asarray(u)))
+    assert np.array_equal(cap, ref)
+
+
+def test_capture_columns_merge_roundtrip():
+    rng = np.random.default_rng(2)
+    m, D = 4, 7
+    A = _ring(m)
+    W, B = _coupling(rng, A)
+    x = rng.standard_normal((m, D)).astype(np.float32)
+    u = rng.standard_normal((m, D)).astype(np.float32)
+    full = T.capture_columns(W, B, x, u, lo=0)
+    blocks = [T.capture_columns(W, B, x[lo:lo + 2], u[lo:lo + 2], lo=lo)
+              for lo in (0, 2)]
+    assert np.array_equal(T.merge_captures(blocks), full)
+
+
+def test_flatten_unflatten_roundtrip_matches_flatten_agents():
+    from repro.privacy.observe import flatten_agents
+    rng = np.random.default_rng(3)
+    tree = {"a": rng.standard_normal((3, 2)).astype(np.float32),
+            "b": rng.standard_normal(5).astype(np.float32)}
+    flat = T.flatten_one(tree)
+    stacked = jax.tree.map(lambda l: jnp.asarray(l)[None], tree)
+    assert np.array_equal(flat, np.asarray(flatten_agents(stacked))[0])
+    back = T.unflatten_one(flat, tree)
+    assert all(np.array_equal(tree[k], back[k]) for k in tree)
+
+
+def test_neighbor_lists_rejects_asymmetric():
+    A = _ring(4)
+    A[0, 1] = 0
+    with pytest.raises(ValueError, match="symmetric"):
+        T.neighbor_lists(A)
+
+
+# -- socket transport (real TCP between threads) --------------------------
+
+
+def _socket_world(world, adjacency, fn, audit=False, timeout=30.0):
+    """Run `fn(transport, rank)` on one thread per rank over real TCP;
+    returns per-rank results, re-raising the first worker error."""
+    socks, endpoints = [], {}
+    for r in range(world):
+        s = socket.socket()
+        s.bind(("127.0.0.1", 0))
+        s.listen(world)
+        socks.append(s)
+        endpoints[r] = ("127.0.0.1", s.getsockname()[1])
+    results, errs = [None] * world, []
+
+    def run(r):
+        try:
+            tr = T.SocketTransport(adjacency, r, world, endpoints, socks[r],
+                                   timeout=timeout, audit_wire=audit)
+            try:
+                results[r] = fn(tr, r)
+            finally:
+                tr.close()
+        except BaseException as e:  # noqa: BLE001 - reported to main thread
+            errs.append((r, e))
+
+    threads = [threading.Thread(target=run, args=(r,), daemon=True)
+               for r in range(world)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=timeout + 30)
+    if errs:
+        raise errs[0][1]
+    return results
+
+
+@pytest.mark.parametrize("world,adj_fn", [(2, _ring), (4, _ring),
+                                          (4, _chord)])
+def test_socket_matches_inproc_bitwise(world, adj_fn):
+    """Multi-step socket exchange == in-process reference, bit for bit —
+    outputs AND captures, with W/B re-realized per step."""
+    m, D, steps = 8, 9, 3
+    A = adj_fn(m)
+    rng = np.random.default_rng(4)
+    WBs = [_coupling(rng, A) for _ in range(steps)]
+    xs = rng.standard_normal((m, D)).astype(np.float32)
+    us = [rng.standard_normal((m, D)).astype(np.float32)
+          for _ in range(steps)]
+
+    ref_tr = T.InProcessTransport(A)
+    ref_out, ref_caps = [], []
+    x = xs.copy()
+    for k in range(steps):
+        W, B = WBs[k]
+        x, cap = ref_tr.exchange(x, us[k], W, B, step=k, capture=True)
+        ref_out.append(x.copy())
+        ref_caps.append(cap)
+
+    L = m // world
+
+    def drive(tr, r):
+        lo = r * L
+        xb = xs[lo:lo + L].copy()
+        caps = []
+        for k in range(steps):
+            W, B = WBs[k]
+            xb, cap = tr.exchange(xb, us[k][lo:lo + L], W, B, step=k,
+                                  capture=True)
+            caps.append(cap)
+        return xb, caps, tr.drops, sorted(tr.dead_ranks)
+
+    results = _socket_world(world, A, drive)
+    for r, (xb, _, drops, dead) in enumerate(results):
+        assert drops == 0 and dead == []
+        assert np.array_equal(xb, ref_out[-1][r * L:(r + 1) * L])
+    for k in range(steps):
+        merged = T.merge_captures([results[r][1][k] for r in range(world)])
+        assert np.array_equal(merged, ref_caps[k])
+
+
+def test_socket_wire_carries_only_v_bytes():
+    """Byte-level audit: every frame a rank puts on the wire is exactly
+    FRAME_HEADER(step, sender, receiver, nbytes) + the f32 v_ij payload
+    the reference transport computes — no x, no u, no keys."""
+    m, D = 4, 6
+    A = _ring(m)
+    rng = np.random.default_rng(5)
+    W, B = _coupling(rng, A)
+    x = rng.standard_normal((m, D)).astype(np.float32)
+    u = rng.standard_normal((m, D)).astype(np.float32)
+    expected_v = T.capture_columns(W, B, x, u, lo=0)  # V[i, j] = v_ij
+
+    def drive(tr, r):
+        lo = r * 2
+        tr.exchange(x[lo:lo + 2], u[lo:lo + 2], W, B, step=7)
+        return list(tr.sent_frames)
+
+    frames = _socket_world(2, A, drive, audit=True)
+    seen = set()
+    for r, sent in enumerate(frames):
+        for frame in sent:
+            hdr, payload = (frame[:T.FRAME_HEADER.size],
+                            frame[T.FRAME_HEADER.size:])
+            step, j, i, nbytes = T.FRAME_HEADER.unpack(hdr)
+            assert step == 7 and nbytes == len(payload) == D * 4
+            # sender must be local to r, receiver remote
+            assert j // 2 == r and i // 2 != r
+            assert payload == expected_v[i, j].tobytes()
+            seen.add((j, i))
+    # every cross-rank directed link was framed exactly once
+    expected_links = {(j, i) for j in range(m)
+                      for i in np.flatnonzero(A[j]) if j // 2 != i // 2}
+    assert seen == expected_links
+
+
+def test_socket_survives_dead_peer_and_overlay_is_doubly_stochastic():
+    """Rank 1 dies after step 0; rank 0 must not deadlock: step 1 marks
+    the peer dead and drops its frames, and the re-realized Metropolis
+    coupling over the survivors stays doubly stochastic."""
+    m, D = 4, 5
+    A = _ring(m)
+    rng = np.random.default_rng(6)
+    W, B = _coupling(rng, A)
+    x = rng.standard_normal((m, D)).astype(np.float32)
+    u = rng.standard_normal((m, D)).astype(np.float32)
+    barrier = threading.Barrier(2, timeout=30)
+
+    def drive(tr, r):
+        xb = x[r * 2:(r + 1) * 2].copy()
+        ub = u[r * 2:(r + 1) * 2]
+        xb = tr.exchange(xb, ub, W, B, step=0)
+        barrier.wait()
+        if r == 1:
+            return None  # dies: transport closed on return
+        # step 1: peer is gone mid-owed -> timeout/EOF path
+        out = tr.exchange(xb, ub, W, B, step=1)
+        assert np.isfinite(out).all()
+        # death surfaces either at send (reset -> no frames owed) or at
+        # pump (EOF/timeout -> owed frames counted as drops)
+        assert 1 in tr.dead_ranks
+        # survivors re-realize the coupling over the alive overlay
+        alive = np.ones(m, np.float32)
+        alive[2:] = 0.0
+        mask = (np.asarray(A, np.float32)
+                * (1 - np.eye(m, dtype=np.float32))
+                * alive[:, None] * alive[None, :])
+        W2 = np.asarray(metropolis_from_mask(jnp.asarray(mask)))
+        live = np.flatnonzero(alive)
+        np.testing.assert_allclose(W2[np.ix_(live, live)].sum(0),
+                                   np.ones(2), atol=1e-6)
+        np.testing.assert_allclose(W2[np.ix_(live, live)].sum(1),
+                                   np.ones(2), atol=1e-6)
+        out2 = tr.exchange(xb, ub, W2,
+                           np.asarray(sample_B(jax.random.key(9),
+                                               jnp.asarray(mask + np.eye(m,
+                                                dtype=np.float32))),
+                                      np.float32)[...], step=2)
+        assert np.isfinite(out2).all()
+        return out
+
+    _socket_world(2, A, drive, timeout=5.0)
+
+
+# -- Fig.-2 trajectory property: all transports walk identical bits -------
+
+
+def _trajectory(transport_factory, mixing, m, D, steps, world=1):
+    """Run the PDSGD recursion over realized (W_k, B^k) with a
+    deterministic per-(step, agent) u stream; returns the final (m, D)
+    state and the per-step captures."""
+    xs = np.random.default_rng(7).standard_normal((m, D)).astype(np.float32)
+
+    def u_at(k):
+        return np.stack([np.random.default_rng((11, k, a))
+                         .standard_normal(D).astype(np.float32)
+                         for a in range(m)])
+
+    WBs = []
+    for k in range(steps):
+        W, support, _ = mixing.realize(jnp.asarray(k, jnp.int32))
+        B = sample_B(jax.random.fold_in(jax.random.key(3), k), support)
+        WBs.append((np.asarray(W, np.float32), np.asarray(B, np.float32)))
+
+    if world == 1:
+        tr = transport_factory()
+        x, caps = xs.copy(), []
+        for k in range(steps):
+            W, B = WBs[k]
+            x, cap = tr.exchange(x, u_at(k), W, B, step=k, capture=True)
+            caps.append(cap)
+        tr.close()
+        return x, caps
+
+    L = m // world
+    A = (np.asarray(mixing.base_mask) > 0).astype(np.int64)
+
+    def drive(tr, r):
+        lo = r * L
+        xb = xs[lo:lo + L].copy()
+        caps = []
+        for k in range(steps):
+            W, B = WBs[k]
+            xb, cap = tr.exchange(xb, u_at(k)[lo:lo + L], W, B, step=k,
+                                  capture=True)
+            caps.append(cap)
+        return xb, caps
+
+    results = _socket_world(world, A, drive)
+    x = np.concatenate([results[r][0] for r in range(world)])
+    caps = [T.merge_captures([results[r][1][k] for r in range(world)])
+            for k in range(steps)]
+    return x, caps
+
+
+@pytest.mark.parametrize("dropout", [0.0, 0.3])
+def test_transports_walk_identical_fig2_trajectories(dropout):
+    """Static AND dropout mixing: the in-process and socket transports
+    produce bit-identical trajectories and wire streams over the
+    realized (W_k, B^k) sequence of the Fig.-2 ring."""
+    m, D, steps = 4, 8, 4
+    top = make_topology("ring", m)
+    mixing = make_mixing(top, rate=dropout, seed=5)
+    A = (np.asarray(mixing.base_mask) > 0).astype(np.int64)
+    x_ref, caps_ref = _trajectory(lambda: T.InProcessTransport(A),
+                                  mixing, m, D, steps)
+    x_sock, caps_sock = _trajectory(None, mixing, m, D, steps, world=2)
+    assert np.array_equal(x_ref, x_sock)
+    for k in range(steps):
+        assert np.array_equal(caps_ref[k], caps_sock[k])
+
+
+# -- shard_map transport under fake devices (subprocess) ------------------
+
+_SHARD_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import sys; sys.path.insert(0, {src!r})
+    import json
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.core.privacy import sample_B
+    from repro.core.topology import metropolis_weights, torus2d
+    from repro.dist import transport as T
+
+    def ring(m):
+        A = np.zeros((m, m), np.int64)
+        for i in range(m):
+            A[i, (i + 1) % m] = A[(i + 1) % m, i] = 1
+        return A
+
+    res = {{}}
+    for name, (n_pod, n_data, mesh_shape, axes) in {{
+            "ring": (1, 8, (8,), ("data",)),
+            "torus": (2, 4, (2, 4), ("pod", "data"))}}.items():
+        m = n_pod * n_data
+        A = ring(m) if n_pod == 1 else torus2d(n_pod, n_data)
+        sup = (A * (1 - np.eye(m, dtype=np.int64))
+               + np.eye(m, dtype=np.int64)).astype(np.float32)
+        rng = np.random.default_rng(13)
+        W = (rng.random((m, m)).astype(np.float32) * sup)
+        B = np.asarray(sample_B(jax.random.key(2), jnp.asarray(sup)),
+                       np.float32)
+        x = rng.standard_normal((m, 6)).astype(np.float32)
+        u = rng.standard_normal((m, 6)).astype(np.float32)
+        ref_tr = T.InProcessTransport(A)
+        ref, ref_cap = ref_tr.exchange(x, u, W, B, capture=True)
+        mesh = jax.make_mesh(mesh_shape, axes)
+        tr = T.ShardMapTransport(mesh, n_data=n_data, n_pod=n_pod)
+        out, cap = tr.exchange(x, u, W, B, capture=True)
+        res[name] = {{
+            "out_bit": bool(np.array_equal(out, ref)),
+            "cap_bit": bool(np.array_equal(cap, ref_cap))}}
+    print(json.dumps(res))
+""")
+
+
+def test_shard_map_transport_matches_inproc_multidevice():
+    """The REAL ppermute path under 8 fake devices: ring and 2x4 torus
+    both bit-match the in-process reference (outputs and captures)."""
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    script = _SHARD_SCRIPT.format(src=os.path.abspath(src))
+    out = subprocess.run([sys.executable, "-c", script], capture_output=True,
+                         text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    for name in ("ring", "torus"):
+        assert res[name]["out_bit"] is True, res
+        assert res[name]["cap_bit"] is True, res
