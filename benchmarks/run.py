@@ -28,6 +28,11 @@ Prints ``name,us_per_call,derived`` CSV rows:
                        driven by launch.multihost as one process vs two
                        socket-coupled rank processes
                        (merged into BENCH_pdsgd.json)
+  * bench_sharded_lm : sharded big-model PDSGD — a >=100M-param/agent LM
+                       on an agents x fsdp mesh (4 fake devices) vs a
+                       pure-data-parallel mean-grad baseline; reports the
+                       gossip+obfuscation overhead ratio
+                       (merged into BENCH_pdsgd.json)
 
 ``--only NAME`` runs a single benchmark (substring match).
 """
@@ -978,6 +983,163 @@ def bench_multihost(steps=8, agents=4):
          f"socket_vs_inproc={overhead:.3f}x")
 
 
+_SHARDED_LM_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import sys; sys.path.insert(0, {src!r})
+import dataclasses, json, time
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.core import init_state, make_decentralized_step, make_topology
+from repro.core.schedules import warmup_harmonic
+from repro.data import make_lm_pipeline
+from repro.dist.sharding import TRAIN_RULES, audit_rules, logical_spec
+from repro.launch.mesh import make_sharded_mesh
+from repro.launch.specs import with_agent_axis
+from repro.models import build_model
+from repro.optim import shard_like
+
+m, pab, seq, steps, lam = {agents}, 1, 16, {steps}, 0.02
+mesh = make_sharded_mesh(agents=m, fsdp={fsdp}, tensor=1)
+
+# ~115M-param LM (>=100M/agent): 100.7M tied embedding (vocab 131072 x 768)
+# + 2 dense layers of ~7.1M.  Kept to 2 layers so the bench isolates what
+# the ISSUE asks for — the per-step UPDATE cost over a big param tree —
+# rather than CPU fwd/bwd flops.
+cfg = dataclasses.replace(
+    get_config("stablelm-3b"), name="sharded-lm-bench",
+    num_layers=2, d_model=768, num_heads=12, num_kv_heads=12, head_dim=64,
+    d_ff=2048, vocab_size=131072, tie_embeddings=True, dtype="float32")
+bundle = build_model(cfg, mesh=mesh)
+assert [f for f in audit_rules(bundle.abstract(), bundle.logical_axes(),
+                               mesh) if f["severity"] == "error"] == []
+params_per_agent = int(sum(np.prod(l.shape)
+                           for l in jax.tree.leaves(bundle.abstract())))
+assert params_per_agent >= 100_000_000, params_per_agent
+
+pipeline = make_lm_pipeline(cfg.vocab_size, m, pab, seq, seed=0)
+base_key = jax.random.key(1)
+
+# --- PDSGD: W-gossip + B/Lambda obfuscation over the sharded pytree -------
+p_abs, p_log = with_agent_axis(bundle.abstract(), bundle.logical_axes(), m)
+leaf_specs = jax.tree.map(
+    lambda a, log: logical_spec(mesh, a.shape, log, TRAIN_RULES),
+    p_abs, p_log)
+params_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), leaf_specs)
+step = make_decentralized_step(
+    bundle.loss_fn, make_topology("ring", m), warmup_harmonic(lam, hold=100),
+    spmd_axis_name="data", kernel_layout="leafwise", mesh=mesh,
+    leaf_specs=leaf_specs, donate=False)
+params0 = bundle.init(jax.random.key(0))
+
+def run_pdsgd():
+    state = init_state(params0, m)
+    state = jax.device_put(state, shard_like(
+        state, state.params, params_sh,
+        scalar_sharding=NamedSharding(mesh, P())))
+    state, aux = step(state, pipeline.batch_at(0), base_key)  # compile
+    t0 = time.perf_counter()
+    for k in range(steps):
+        state, aux = step(state, pipeline.batch_at(k),
+                          jax.random.fold_in(base_key, k))
+    jax.block_until_ready(state.params)
+    n_sharded = sum(0 if l.sharding.is_fully_replicated else 1
+                    for l in jax.tree.leaves(state.params))
+    return ((time.perf_counter() - t0) / steps * 1e6,
+            float(aux["loss"]), n_sharded)
+
+# --- baseline: pure data parallelism (one param copy, mean-grad SGD) ------
+# Same model, mesh, batches, and stepsize; the ONLY difference is the
+# update rule — allreduce-mean gradient + broadcast SGD instead of the
+# m-copy W-gossip + per-agent B/Lambda draws.  The ratio therefore prices
+# exactly what decentralized privacy adds on top of conventional training.
+dp_specs = jax.tree.map(
+    lambda a, log: logical_spec(mesh, a.shape, log, TRAIN_RULES),
+    bundle.abstract(), bundle.logical_axes())
+dp_grad = jax.vmap(jax.value_and_grad(bundle.loss_fn), in_axes=(None, 0))
+
+@jax.jit
+def dp_step(p, batch):
+    losses, grads = dp_grad(p, batch)
+    p = jax.tree.map(lambda x, g: x - lam * g.mean(0), p, grads)
+    return p, losses.mean()
+
+def run_dp():
+    p = jax.device_put(params0, jax.tree.map(
+        lambda s: NamedSharding(mesh, s), dp_specs))
+    p, loss = dp_step(p, pipeline.batch_at(0))  # compile
+    t0 = time.perf_counter()
+    for k in range(steps):
+        p, loss = dp_step(p, pipeline.batch_at(k))
+    jax.block_until_ready(p)
+    return (time.perf_counter() - t0) / steps * 1e6, float(loss)
+
+pdsgd_us, pdsgd_loss, n_sharded = run_pdsgd()
+dp_us, dp_loss = run_dp()
+assert n_sharded > 0, "params never left the replicated layout"
+assert np.isfinite(pdsgd_loss) and np.isfinite(dp_loss)
+print(json.dumps({{"params_per_agent": params_per_agent,
+                   "mesh": dict(mesh.shape),
+                   "pdsgd_us": pdsgd_us, "pure_dp_us": dp_us,
+                   "loss_pdsgd": pdsgd_loss, "loss_dp": dp_loss,
+                   "n_sharded": n_sharded}}))
+"""
+
+
+def bench_sharded_lm(steps=4, agents=2, fsdp=2):
+    """Sharded big-model PDSGD vs pure data parallelism: a ~115M-param LM
+    (>=100M params/agent — the tied 131072x768 embedding dominates) trained
+    for a few steps on an agents=2 x fsdp=2 mesh of 4 fake host devices in
+    a subprocess (the parent pinned jax to 1 device at import).
+
+    Both rows share the model, mesh, batches, and stepsize; they differ
+    only in the update — PDSGD's m param copies + W-gossip einsum +
+    per-agent B/Lambda randomness vs one copy + mean-grad broadcast SGD.
+    The derived ratio is the ISSUE's committed number: what Eq. (3)/(4)
+    privacy costs over conventional data-parallel training at big-model
+    scale.  On this 1-core container the 4 fake devices time-slice, so
+    the ratio (same slicing both rows) is the signal; absolute us/step
+    is not TPU-predictive.
+    """
+    import subprocess
+    src = os.path.join(REPO_ROOT, "src")
+    script = _SHARDED_LM_SCRIPT.format(src=src, agents=agents, fsdp=fsdp,
+                                       steps=steps)
+    out = subprocess.run([sys.executable, "-c", script],
+                         capture_output=True, text=True, timeout=1200)
+    if out.returncode != 0:
+        raise RuntimeError("bench_sharded_lm subprocess failed:\n"
+                           + out.stderr[-3000:])
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    results = {"pure_dp": res["pure_dp_us"], "pdsgd_sharded": res["pdsgd_us"]}
+    overhead = results["pdsgd_sharded"] / results["pure_dp"]
+    payload = {
+        "workload": (f"sharded-lm-bench {res['params_per_agent']} "
+                     f"params/agent m={agents} fsdp={fsdp} "
+                     f"per_agent_batch=1 seq=16 steps={steps}"),
+        "params_per_agent": res["params_per_agent"],
+        "mesh": res["mesh"],
+        "sharded_param_leaves": res["n_sharded"],
+        "paths": {
+            name: {"us_per_step": round(us, 2),
+                   "steps_per_s": round(1e6 / us, 3)}
+            for name, us in results.items()
+        },
+        "gossip_obfuscation_overhead_vs_pure_dp": round(overhead, 3),
+        "final_loss_pdsgd": res["loss_pdsgd"],
+        "final_loss_pure_dp": res["loss_dp"],
+        "backend": jax.default_backend(),
+    }
+    _write_bench_json({"bench_sharded_lm": payload})
+    for name, us in results.items():
+        emit(f"bench_sharded_lm_{name}", us, f"steps_per_s={1e6 / us:.3f}")
+    emit("bench_sharded_lm_overhead", 0.0,
+         f"pdsgd_vs_pure_dp={overhead:.3f}x;"
+         f"params_per_agent={res['params_per_agent']}")
+
+
 def kernel_benches():
     from repro.kernels import (flash_attention, gossip_update,
                                obfuscate_update, ssd_intra_chunk)
@@ -1026,6 +1188,7 @@ BENCHES = {
     "bench_privacy_audit": bench_privacy_audit,
     "bench_fault_injection": bench_fault_injection,
     "bench_multihost": bench_multihost,
+    "bench_sharded_lm": bench_sharded_lm,
     "kernel_benches": kernel_benches,
     "fig3_nonconvex": fig3_nonconvex,
 }

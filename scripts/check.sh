@@ -48,6 +48,36 @@ python benchmarks/run.py --only bench_fault_injection
 echo "== multi-controller perf (bench_multihost) =="
 python benchmarks/run.py --only bench_multihost
 
+echo "== sharded big-model perf (bench_sharded_lm) =="
+python benchmarks/run.py --only bench_sharded_lm
+
+echo "== sharded-LM smoke (agents=2 x fsdp=2 on 4 fake devices) =="
+python - <<'EOF'
+import json, os, subprocess, sys
+env = dict(os.environ)
+env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+out = subprocess.run(
+    [sys.executable, "-m", "repro.launch.train",
+     "--arch", "xlstm-125m-smoke", "--agents", "2", "--mesh-fsdp", "2",
+     "--steps", "6", "--per-agent-batch", "1", "--seq-len", "16",
+     "--log-every", "2", "--seed", "0"],
+    capture_output=True, text=True, check=True, env=env, timeout=1200)
+recs = [json.loads(l) for l in out.stdout.splitlines() if l.startswith("{")]
+audit = next(r for r in recs if "sharding_audit" in r)
+assert audit["sharding_audit"] == "ok", audit
+assert audit["mesh"] == {"data": 2, "fsdp": 2, "model": 1}, audit
+last = [r for r in recs if "loss" in r][-1]
+import math
+assert math.isfinite(last["loss"]), last
+# from a replicated init consensus error starts at 0 and picks up only the
+# per-agent Lambda noise; gossip must keep it bounded, not let it diverge
+assert math.isfinite(last["consensus_error"]), last
+assert last["consensus_error"] < 1.0, last
+print("sharded smoke ok:", json.dumps(
+    {"mesh": audit["mesh"], "final_loss": last["loss"],
+     "consensus_error": last["consensus_error"]}))
+EOF
+
 echo "== multi-controller smoke (2 ranks, SIGKILL rank 1, quorum resume) =="
 python - <<'EOF'
 import json, os, shutil, subprocess, sys, tempfile

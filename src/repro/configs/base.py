@@ -37,6 +37,11 @@ class ArchConfig:
     # TP all-reduces); "save_collectives" checkpoints the post-all-reduce
     # attn/ffn outputs so each fwd collective runs once.
     remat_policy: Literal["full", "save_collectives"] = "full"
+    # §Perf: traverse the stacked layer params with lax.scan instead of the
+    # unrolled Python loop.  Off by default because an unrolled loop keeps
+    # ``compiled.cost_analysis()`` faithful (a scan body is counted once);
+    # the sharded big-model path turns it on to bound compile time.
+    scan_layers: bool = False
     norm: Literal["rmsnorm", "layernorm"] = "rmsnorm"
     mlp: Literal["swiglu", "gelu"] = "swiglu"
     tie_embeddings: bool = True

@@ -138,6 +138,10 @@ def pdsgd_update(
     corrupt_mode: str = "nan",
     corrupt_scale: float = 1e4,
     guard_clip: float = 1e3,
+    kernel_layout: str = "concat",
+    mesh=None,
+    leaf_specs: Pytree | None = None,
+    kernel_rng: bool | None = None,
 ) -> Pytree:
     """One iteration of Eq. (4): x^{k+1} = W_k x^k - B^k Lambda^k g^k.
 
@@ -156,6 +160,19 @@ def pdsgd_update(
     TPU, False under the CPU interpreter where fused is a correctness path).
     ``mask`` (the realized edge mask) makes the fused path re-derive W_k
     in VMEM (`kernels.masked_gossip_update`) instead of staging it.
+
+    ``kernel_layout`` picks the fused path's buffer layout: ``"concat"``
+    (default) is the single flattened (m, ΣD) pass; ``"leafwise"`` is
+    `kernels.sharded_pdsgd_tree` — per-leaf kernels, bit-identical to
+    concat, that keep FSDP/tensor-sharded leaves sharded (with ``mesh``
+    + ``leaf_specs`` the obfuscate kernel runs per shard under shard_map
+    and the gossip contraction stays a GSPMD einsum).  The leafwise
+    layout refuses ``observe`` — capture is defined on the concatenated
+    wire buffer.  ``kernel_rng`` (None defers to
+    `kernels.default_kernel_rng`, i.e. on for real TPUs) moves the
+    Lambda draw in-VMEM on the concat path: the HBM bits staging
+    disappears and the kernel PRNG is seeded from the same per-step
+    Lambda key.
 
     ``observe=True`` additionally returns the auditor-grade observation
     record of `privacy.observe.full_record` — the wire tensor v_ij plus
@@ -181,15 +198,40 @@ def pdsgd_update(
     if use_pallas is None:
         from ..kernels import default_use_pallas
         use_pallas = default_use_pallas()
-    if use_pallas:
-        from ..kernels import fused_pdsgd_tree
+    if kernel_layout not in ("concat", "leafwise"):
+        raise ValueError(f"unknown kernel_layout {kernel_layout!r}")
+    if use_pallas and kernel_layout == "leafwise":
+        if observe:
+            raise ValueError(
+                "observation capture is defined on the concatenated wire "
+                "buffer; kernel_layout='leafwise' does not support it")
+        from ..kernels import sharded_pdsgd_tree
         bits = _per_agent_bits(jax.random.fold_in(key, 1), step, grads)
+        return sharded_pdsgd_tree(W, B, params, grads, bits, lam_bar,
+                                  mask=mask, interpret=interpret,
+                                  corrupt=corrupt,
+                                  corrupt_mode=corrupt_mode,
+                                  corrupt_scale=corrupt_scale,
+                                  guard_clip=guard_clip,
+                                  mesh=mesh, leaf_specs=leaf_specs)
+    if use_pallas:
+        from ..kernels import fused_pdsgd_tree, runtime
+        bits = seed = None
+        if runtime.resolve_kernel_rng(kernel_rng):
+            # seed the TPU PRNG from the same per-step Lambda key the HBM
+            # bits would have been drawn from; no bits staging at all
+            seed = jax.random.bits(
+                agent_key(jax.random.fold_in(key, 1), step, 0), (2,),
+                jnp.uint32)
+        else:
+            bits = _per_agent_bits(jax.random.fold_in(key, 1), step, grads)
         out = fused_pdsgd_tree(W, B, params, grads, bits, lam_bar,
                                mask=mask, interpret=interpret,
                                observe=observe, corrupt=corrupt,
                                corrupt_mode=corrupt_mode,
                                corrupt_scale=corrupt_scale,
-                               guard_clip=guard_clip)
+                               guard_clip=guard_clip,
+                               kernel_rng=kernel_rng, seed=seed)
         if not observe:
             return out
         new_params, flats = out
@@ -298,6 +340,11 @@ def make_decentralized_step(
     nan_policy: str = "off",
     aggregation: str = "gossip",
     trim: int = 1,
+    spmd_axis_name=None,
+    kernel_layout: str = "concat",
+    mesh=None,
+    leaf_specs=None,
+    kernel_rng: bool | None = None,
 ):
     """Build a jitted decentralized training step.
 
@@ -360,6 +407,15 @@ def make_decentralized_step(
     descent; tolerates up to ``trim`` byzantine neighbors per agent but
     broadcasts raw states (see the privacy caveat there) — refused with
     ``observer``.
+
+    Sharded big-model mode (`launch.steps.make_train_step(sharded=True)`
+    sets these): ``spmd_axis_name`` names the mesh axis the agent vmap is
+    sharded over (``jax.vmap(..., spmd_axis_name=...)``), so the logical
+    constraints the model emits inside the per-agent loss compose with
+    the agent axis; ``kernel_layout``/``mesh``/``leaf_specs``/
+    ``kernel_rng`` pass through to `pdsgd_update` (leafwise kernels over
+    sharded pytrees).  All default to the dense behavior — with the
+    defaults this function is byte-for-byte the previous step builder.
     """
     if algorithm not in ("pdsgd", "dsgd", "dsgt", "dp_dsgd"):
         raise ValueError(f"unknown algorithm {algorithm!r}")
@@ -403,7 +459,12 @@ def make_decentralized_step(
                 f"trim must satisfy 1 <= trim and m - 2*trim >= 1; "
                 f"got trim={trim}, m={m_}")
 
-    grad_fn = jax.vmap(jax.value_and_grad(loss_fn))
+    if kernel_layout == "leafwise" and observer is not None:
+        raise ValueError("observation capture is defined on the "
+                         "concatenated wire buffer; kernel_layout="
+                         "'leafwise' does not support it")
+    grad_fn = jax.vmap(jax.value_and_grad(loss_fn),
+                       spmd_axis_name=spmd_axis_name)
     num_agents = process.num_agents
 
     def _rowwise(vec):
@@ -465,7 +526,9 @@ def make_decentralized_step(
                                   else "nan"),
                     corrupt_scale=(faults.corrupt_scale if corrupting
                                    else 1e4),
-                    guard_clip=(faults.guard_clip if corrupting else 1e3))
+                    guard_clip=(faults.guard_clip if corrupting else 1e3),
+                    kernel_layout=kernel_layout, mesh=mesh,
+                    leaf_specs=leaf_specs, kernel_rng=kernel_rng)
                 if observer is not None:
                     new_params, record = out
                     from ..privacy import observe as O

@@ -18,11 +18,12 @@ directly, and `launch/specs.py` builds every in/out sharding from them.
 """
 from __future__ import annotations
 
-from typing import Mapping, Sequence
+from typing import Any, Mapping, Sequence
 
 from jax.sharding import PartitionSpec
 
-__all__ = ["TRAIN_RULES", "SERVE_RULES", "DECODE_RULES", "logical_spec"]
+__all__ = ["TRAIN_RULES", "SERVE_RULES", "DECODE_RULES", "logical_spec",
+           "audit_rules"]
 
 # Each value is a tuple of candidates; each candidate a tuple of mesh axes.
 RuleTable = Mapping[str, tuple[tuple[str, ...], ...]]
@@ -39,10 +40,22 @@ TRAIN_RULES: RuleTable = dict(
     # The decentralized agent axis lives on the ("pod","data") torus — one
     # agent per (pod, data) coordinate, matching `launch.mesh.agent_axes`.
     agents=(("pod", "data"),),
-    # Per-agent batch/seq stay local to the agent's model-parallel group.
-    batch=(), kv_seq=(),
+    # Within each agent's device group (`launch.mesh.make_sharded_mesh`),
+    # the embedding dim shards FSDP-style over "fsdp" while the wide
+    # matmul dims take the tensor-parallel "model" axis.  Meshes without
+    # an "fsdp" axis (the historical ("pod","data","model") factoring)
+    # degrade to replication, so these candidates are backwards
+    # compatible with every existing spec pin.
+    embed=(("fsdp",),),
+    # Per-agent batch shards over the same "fsdp" group (activations);
+    # seq stays local.
+    batch=(("fsdp",),), kv_seq=(),
     mlp=(("model",),), expert_mlp=(("model",),),
     heads=(("model",),), kv_heads=(("model",),),
+    # The SSM/xLSTM head-group projection dim is tensor-parallel exactly
+    # like attention heads (it WAS silently replicated before
+    # `audit_rules` existed to notice the missing entry).
+    ssm_heads=(("model",),),
     vocab=(("model",),),
 )
 
@@ -56,6 +69,7 @@ SERVE_RULES: RuleTable = dict(
     kv_seq=(("pod", "data", "model"), ("data", "model"), ("model",)),
     mlp=(("model",),), expert_mlp=(("model",),),
     heads=(("model",),), kv_heads=(("model",),),
+    ssm_heads=(("model",),),
     vocab=(("model",),),
 )
 
@@ -99,3 +113,48 @@ def logical_spec(mesh, shape: Sequence[int],
     while entries and entries[-1] is None:
         entries.pop()
     return PartitionSpec(*entries)
+
+
+def audit_rules(abstract: Any, logical: Any, mesh,
+                table: RuleTable = TRAIN_RULES) -> list[dict]:
+    """Lint a model's param tree against a rule table on ``mesh``.
+
+    Returns one finding per problem, ordered by tree path:
+
+    * ``severity="error"``  — a leaf names a logical axis the table does
+      not know (today such axes silently replicate; `launch/dryrun.py`
+      turns these into a hard failure),
+    * ``severity="info"``   — a leaf resolved to full replication even
+      though the mesh has spare capacity (>1 device on some axis); these
+      are legal but worth seeing in a shard audit.
+
+    ``abstract``/``logical`` are the `ModelBundle.abstract()` /
+    `logical_axes()` trees (optionally already agent-stacked via
+    `launch.specs.with_agent_axis`); like `logical_spec`, ``mesh`` only
+    needs a ``.shape`` mapping.
+    """
+    import jax
+
+    is_axes = lambda x: isinstance(x, tuple)  # noqa: E731
+    paths_abs, treedef = jax.tree_util.tree_flatten_with_path(abstract)
+    logs = jax.tree_util.tree_flatten(logical, is_leaf=is_axes)[0]
+    if len(logs) != len(paths_abs):
+        raise ValueError("abstract/logical trees do not match: "
+                         f"{len(paths_abs)} leaves vs {len(logs)} axis tuples")
+    spare = any(s > 1 for s in mesh.shape.values())
+    findings: list[dict] = []
+    for (path, leaf), log in zip(paths_abs, logs):
+        name = jax.tree_util.keystr(path)
+        unknown = sorted({a for a in log if a is not None and a not in table})
+        if unknown:
+            findings.append({
+                "path": name, "logical": tuple(log), "severity": "error",
+                "issue": f"unknown logical axes {unknown} (no rule; "
+                         "leaf silently replicates)"})
+            continue
+        spec = logical_spec(mesh, leaf.shape, log, table)
+        if spare and not any(e is not None for e in spec):
+            findings.append({
+                "path": name, "logical": tuple(log), "severity": "info",
+                "issue": "fully replicated on a mesh with spare capacity"})
+    return findings

@@ -51,6 +51,9 @@ process.  Entries off the realized support are exact (signed) zeros.
 """
 from __future__ import annotations
 
+import hashlib
+import hmac
+import os
 import select
 import socket
 import struct
@@ -71,6 +74,8 @@ __all__ = [
     "ShardMapTransport",
     "SocketTransport",
     "FRAME_HEADER",
+    "WIRE_TAG_SIZE",
+    "derive_wire_secret",
 ]
 
 Pytree = Any
@@ -330,9 +335,31 @@ class ShardMapTransport(Transport):
 
 # Wire frame: little-endian (step int64, sender int32, receiver int32,
 # payload nbytes uint32) + raw f32 v_ij payload.  NOTHING else is ever
-# serialized — asserted byte-for-byte by tests/test_transport.py.
+# serialized — asserted byte-for-byte by tests/test_transport.py.  With a
+# per-run ``secret``, an HMAC-SHA256 tag over (header || payload) follows
+# each frame: still only v bytes plus an authenticator that depends on
+# them — no key material and no plaintext beyond v crosses the wire.
 FRAME_HEADER = struct.Struct("<qiiI")
 _HELLO = struct.Struct("<i")
+WIRE_TAG_SIZE = hashlib.sha256().digest_size  # 32
+
+
+def derive_wire_secret(seed: int, generation: int = 0) -> bytes:
+    """The per-run frame-auth key every rank derives independently.
+
+    Hashed from the shared run seed and the Λ-key generation (see
+    `launch.multihost`), so all ranks of one run agree and a stale rank
+    from a pre-rollback generation is rejected at the transport, not just
+    at the key schedule.  ``REPRO_WIRE_SECRET`` overrides for deployments
+    that inject a real secret (the seed-derived default authenticates
+    framing errors and cross-run mixups, not a malicious peer who knows
+    the seed).
+    """
+    env = os.environ.get("REPRO_WIRE_SECRET")
+    if env:
+        return env.encode()
+    return hashlib.sha256(
+        f"repro-wire|{int(seed)}|{int(generation)}".encode()).digest()
 
 
 def _recv_exact(sock: socket.socket, n: int) -> bytes | None:
@@ -362,12 +389,20 @@ class SocketTransport(Transport):
     ``audit_wire=True`` records every sent frame verbatim in
     ``sent_frames`` so a test can prove the wire carries v bytes and
     nothing else.
+
+    ``secret`` (a per-run shared key, typically `derive_wire_secret`)
+    turns on frame authentication: each frame carries an HMAC-SHA256 tag
+    over header+payload, and the pump rejects any frame whose tag is
+    missing, truncated, or wrong — the sending channel is marked dead
+    (``tag_failures`` counts rejections) and its contributions drop for
+    the step, exactly the peer-death path.  ``None`` keeps the original
+    unauthenticated framing byte-for-byte.
     """
 
     def __init__(self, adjacency: np.ndarray, rank: int, world: int,
                  endpoints: dict[int, tuple[str, int]],
                  listen_sock: socket.socket, *, timeout: float = 60.0,
-                 audit_wire: bool = False):
+                 audit_wire: bool = False, secret: bytes | None = None):
         self._nbrs = neighbor_lists(adjacency)
         m = len(self._nbrs)
         if m % world:
@@ -379,6 +414,8 @@ class SocketTransport(Transport):
         self.local_hi = self.local_lo + self.block
         self.timeout = timeout
         self.audit_wire = audit_wire
+        self.secret = secret
+        self.tag_failures = 0  # frames rejected by HMAC verification
         self.sent_frames: list[bytes] = []
         self.dead_ranks: set[int] = set()
         self.drops = 0  # contributions lost to peer death (all steps)
@@ -473,6 +510,18 @@ class SocketTransport(Transport):
                 if body is None:
                     self.mark_dead(r)
                     continue
+                if self.secret is not None:
+                    # A truncated tag is indistinguishable from a dead
+                    # peer; a present-but-wrong tag is a tampered or
+                    # cross-run frame.  Either way the channel is no
+                    # longer trustworthy — kill it, never buffer the v.
+                    tag = _recv_exact(s, WIRE_TAG_SIZE)
+                    want = hmac.new(self.secret, hdr + body,
+                                    hashlib.sha256).digest()
+                    if tag is None or not hmac.compare_digest(tag, want):
+                        self.tag_failures += 1
+                        self.mark_dead(r)
+                        continue
                 self._rbuf[(fstep, sender, receiver)] = np.frombuffer(
                     body, dtype=np.float32).copy()
                 if owed.get(r, 0) > 0:
@@ -499,6 +548,9 @@ class SocketTransport(Transport):
                 payload = cols[int(i), l].tobytes()
                 frame = FRAME_HEADER.pack(step, j, int(i),
                                           len(payload)) + payload
+                if self.secret is not None:
+                    frame += hmac.new(self.secret, frame,
+                                      hashlib.sha256).digest()
                 if self.audit_wire:
                     self.sent_frames.append(frame)
                 self._send(r, frame)

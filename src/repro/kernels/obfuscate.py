@@ -10,11 +10,17 @@ one read of (x, g, bits) + one write of v — a ~3x HBM-traffic cut on an
 op that runs on every parameter, every step (d up to 34B here vs the
 paper's 1.7M).  Tiles are (8k, 128)-aligned for the VPU lanes.
 
-On a real TPU the `bits` input disappears: `pltpu.prng_seed` +
-`pltpu.prng_random_bits` generate the randomness in-kernel (zero HBM
-traffic for lambda).  The CPU interpreter has no PRNG primitive, so the
-portable kernel takes counter-based bits from jax.random outside —
-correctness-identical, and validated against ref.obfuscate_ref.
+On a real TPU the `bits` input disappears: `obfuscate_update_krng` seeds
+the per-core PRNG (`pltpu.prng_seed`, re-seeded per grid tile so tiles
+stay order-independent) and draws the bits in-VMEM with
+`pltpu.prng_random_bits` — zero HBM traffic for lambda, behind the
+`runtime.default_kernel_rng` knob.  The variant also WRITES the bits it
+drew as a second output, so the parity test can replay them through the
+HBM-input kernel and assert the two paths agree bit-for-bit.  The CPU
+interpreter has no PRNG primitive (no Mosaic lowering, even under
+``interpret=True``), so the portable kernel takes counter-based bits from
+jax.random outside — correctness-identical, and validated against
+ref.obfuscate_ref.
 """
 from __future__ import annotations
 
@@ -29,19 +35,22 @@ from .runtime import resolve_interpret
 DEFAULT_BLOCK = (256, 256)
 
 
-def _obfuscate_kernel(x_ref, g_ref, bits_ref, scal_ref, o_ref):
-    """scal_ref: (3,) = [lam_bar, w_self, b_self] in SMEM-like VMEM."""
-    lam_bar = scal_ref[0]
-    w_self = scal_ref[1]
-    b_self = scal_ref[2]
-    bits = bits_ref[...]
+def _obfuscate_math(x, g, bits, lam_bar, w_self, b_self, out_dtype):
+    """Shared tile math: v = w_self*x - b_self*(lambda(bits) ∘ g)."""
     # uint32 -> U[0,1): stuff the top 23 bits into the mantissa of 1.xxx
     f = (bits >> 9) | jnp.uint32(0x3F800000)
     u01 = jax.lax.bitcast_convert_type(f, jnp.float32) - 1.0
     lam = (2.0 * lam_bar) * u01
-    g = g_ref[...].astype(jnp.float32)
-    x = x_ref[...].astype(jnp.float32)
-    o_ref[...] = (w_self * x - b_self * (lam * g)).astype(o_ref.dtype)
+    g = g.astype(jnp.float32)
+    x = x.astype(jnp.float32)
+    return (w_self * x - b_self * (lam * g)).astype(out_dtype)
+
+
+def _obfuscate_kernel(x_ref, g_ref, bits_ref, scal_ref, o_ref):
+    """scal_ref: (3,) = [lam_bar, w_self, b_self] in SMEM-like VMEM."""
+    o_ref[...] = _obfuscate_math(x_ref[...], g_ref[...], bits_ref[...],
+                                 scal_ref[0], scal_ref[1], scal_ref[2],
+                                 o_ref.dtype)
 
 
 def obfuscate_update(x: jax.Array, g: jax.Array, bits: jax.Array,
@@ -86,3 +95,77 @@ def _obfuscate_update(x, g, bits, lam_bar, w_self, b_self,
         out_shape=jax.ShapeDtypeStruct((R, C), x.dtype),
         interpret=interpret,
     )(x, g, bits, scal)
+
+
+# ---------------------------------------------------------------------------
+# In-kernel TPU randomness (runtime.default_kernel_rng path)
+# ---------------------------------------------------------------------------
+
+def _obfuscate_krng_kernel(x_ref, g_ref, seed_ref, scal_ref, o_ref, bits_ref):
+    """Same math as `_obfuscate_kernel`, but the uint32 draws come from the
+    per-core TPU PRNG instead of an HBM input.  The PRNG is re-seeded with
+    (seed0, seed1, i, j) at every tile so the stream a tile sees depends
+    only on its grid coordinates, never on grid iteration order.  The bits
+    are also written out so the HBM-input kernel can replay them (parity
+    test) and so the eager Lambda-audit path can reconstruct lambda."""
+    from jax.experimental.pallas import tpu as pltpu
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    pltpu.prng_seed(seed_ref[0], seed_ref[1], i, j)
+    bits = pltpu.bitcast(pltpu.prng_random_bits(o_ref.shape), jnp.uint32)
+    bits_ref[...] = bits
+    o_ref[...] = _obfuscate_math(x_ref[...], g_ref[...], bits,
+                                 scal_ref[0], scal_ref[1], scal_ref[2],
+                                 o_ref.dtype)
+
+
+def obfuscate_update_krng(x: jax.Array, g: jax.Array, seed: jax.Array,
+                          lam_bar, w_self, b_self,
+                          block: tuple[int, int] = DEFAULT_BLOCK,
+                          interpret: bool | None = None):
+    """TPU-only obfuscation with in-VMEM randomness.
+
+    ``seed``: (2,) uint32/int32 PRNG seed words (derive from the step's
+    Lambda key, e.g. ``jax.random.bits(key, (2,), jnp.uint32)``).  Returns
+    ``(v, bits)`` where ``bits`` is the (R, C) uint32 draw the kernel used
+    — feed it back through `obfuscate_update` to cross-validate the two
+    randomness paths bit-for-bit.  Raises at lowering on non-TPU backends
+    (`pltpu.prng_seed` has no CPU/interpret rule); `runtime.
+    default_kernel_rng` keeps this path off everywhere it cannot run.
+    """
+    return _obfuscate_update_krng(x, g, seed, lam_bar, w_self, b_self,
+                                  block=block,
+                                  interpret=resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def _obfuscate_update_krng(x, g, seed, lam_bar, w_self, b_self,
+                           block, interpret):
+    R, C = x.shape
+    br, bc = min(block[0], R), min(block[1], C)
+    assert R % br == 0 and C % bc == 0, (x.shape, block)
+    scal = jnp.stack([jnp.asarray(lam_bar, jnp.float32),
+                      jnp.asarray(w_self, jnp.float32),
+                      jnp.asarray(b_self, jnp.float32)])
+    seed = jnp.asarray(seed, jnp.int32)
+    assert seed.shape == (2,), seed.shape
+    grid = (R // br, C // bc)
+    return pl.pallas_call(
+        _obfuscate_krng_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+            pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+            pl.BlockSpec((2,), lambda i, j: (0,)),
+            pl.BlockSpec((3,), lambda i, j: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+            pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((R, C), x.dtype),
+            jax.ShapeDtypeStruct((R, C), jnp.uint32),
+        ],
+        interpret=interpret,
+    )(x, g, seed, scal)

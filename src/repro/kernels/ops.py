@@ -13,16 +13,18 @@ import jax.numpy as jnp
 
 from .flash_attention import flash_attention
 from .gossip import gossip_update, guarded_gossip_update, masked_gossip_update
-from .obfuscate import obfuscate_update
-from .runtime import default_interpret, default_use_pallas
+from .obfuscate import obfuscate_update, obfuscate_update_krng
+from .runtime import (default_interpret, default_kernel_rng,
+                      default_use_pallas, resolve_kernel_rng)
 from .ssm_scan import ssd_intra_chunk
 
 Pytree = Any
 
 __all__ = ["flash_attention", "gossip_update", "masked_gossip_update",
            "guarded_gossip_update", "obfuscate_update",
-           "ssd_intra_chunk", "obfuscate_tree", "gossip_tree",
-           "fused_pdsgd_tree", "default_interpret", "default_use_pallas"]
+           "obfuscate_update_krng", "ssd_intra_chunk", "obfuscate_tree",
+           "gossip_tree", "fused_pdsgd_tree", "sharded_pdsgd_tree",
+           "default_interpret", "default_use_pallas", "default_kernel_rng"]
 
 
 def _flatten_concat(tree: Pytree):
@@ -86,7 +88,9 @@ def fused_pdsgd_tree(W: jax.Array, B: jax.Array, x_tree: Pytree,
                      corrupt: jax.Array | None = None,
                      corrupt_mode: str = "nan",
                      corrupt_scale: float = 1e4,
-                     guard_clip: float = 1e3) -> Pytree:
+                     guard_clip: float = 1e3,
+                     kernel_rng: bool | None = None,
+                     seed: jax.Array | None = None) -> Pytree:
     """Full Eq. (4) update through both fused kernels in one flattened pass:
 
         u = Lambda(bits) ∘ g          (obfuscate kernel, w_self=0, b_self=-1)
@@ -111,6 +115,15 @@ def fused_pdsgd_tree(W: jax.Array, B: jax.Array, x_tree: Pytree,
     actually realized; the buffers already exist, so capture adds no
     kernel work.
 
+    ``kernel_rng`` (None defers to `runtime.default_kernel_rng`) switches
+    the obfuscate stage to the in-VMEM TPU PRNG: ``bits_tree`` is ignored
+    (pass None) and ``seed`` — (2,) uint32/int32 words derived from the
+    step's Lambda key — drives `obfuscate_update_krng` instead.  The
+    realized Lambda then comes from the TPU PRNG stream, not the
+    jax.random counter stream (zero HBM traffic for the randomness); the
+    krng kernel exports the bits it drew, and the parity test replays
+    them through this HBM-input path to pin the two kernels bit-for-bit.
+
     ``corrupt`` (an (m,) 0/1 vector from `faults.FaultProcess.realize`)
     selects the fault-tolerant path: the corrupt agents' TRANSMIT
     buffers are poisoned (`faults.inject.poison_transmit`) and the
@@ -121,17 +134,29 @@ def fused_pdsgd_tree(W: jax.Array, B: jax.Array, x_tree: Pytree,
     always compose through `faults.realize_coupling`, which provides
     one); ``observe`` is refused upstream when corruption is on.
     """
+    # A caller that staged HBM bits but no seed keeps the bits path even
+    # where the knob defaults on (TPU) — only an explicit seed opts in.
+    use_krng = resolve_kernel_rng(kernel_rng) and seed is not None
+    if kernel_rng and seed is None:
+        raise ValueError("kernel_rng=True needs a (2,) seed "
+                         "(derive from the step's Lambda key)")
     x_flat, sizes, leaves = _flatten_concat(x_tree)
     g_flat, _, _ = _flatten_concat(g_tree)
-    bits_flat, _, _ = _flatten_concat(bits_tree)
     x_flat, pad = _pad_cols(x_flat, 512)
     g_flat, _ = _pad_cols(g_flat, 512)
-    bits_flat, _ = _pad_cols(bits_flat, 512)
     # w_self=0, b_self=-1 turns the self-term kernel into u = lambda ∘ g.
-    u_flat = obfuscate_update(x_flat, g_flat, bits_flat, lam_bar,
-                              jnp.float32(0.0), jnp.float32(-1.0),
-                              block=(x_flat.shape[0], 256),
-                              interpret=interpret)
+    if use_krng:
+        u_flat, _ = obfuscate_update_krng(
+            x_flat, g_flat, seed, lam_bar, jnp.float32(0.0),
+            jnp.float32(-1.0), block=(x_flat.shape[0], 256),
+            interpret=interpret)
+    else:
+        bits_flat, _, _ = _flatten_concat(bits_tree)
+        bits_flat, _ = _pad_cols(bits_flat, 512)
+        u_flat = obfuscate_update(x_flat, g_flat, bits_flat, lam_bar,
+                                  jnp.float32(0.0), jnp.float32(-1.0),
+                                  block=(x_flat.shape[0], 256),
+                                  interpret=interpret)
     if corrupt is not None:
         if mask is None:
             raise ValueError(
@@ -156,3 +181,107 @@ def fused_pdsgd_tree(W: jax.Array, B: jax.Array, x_tree: Pytree,
     flats = {"x": x_flat[:, :ncols].astype(jnp.float32),
              "u": u_flat[:, :ncols].astype(jnp.float32)}
     return out_tree, flats
+
+
+def _leaf_pdsgd(W, B, x, g, bits, lam_bar, mask, interpret,
+                corrupt, corrupt_mode, corrupt_scale, guard_clip):
+    """One leaf of `sharded_pdsgd_tree`: same two kernels as the fused
+    concat path, on this leaf's own (m, n) flattening.  The obfuscate
+    kernel is elementwise and the gossip kernels treat every column
+    independently (the (m, m) @ (m, bn) matmul contracts only the agent
+    dim), so per-leaf results are bit-identical to the same columns of
+    the concatenated buffer — the property tests pin this."""
+    m = x.shape[0]
+    xf, pad = _pad_cols(x.reshape(m, -1), 512)
+    gf, _ = _pad_cols(g.reshape(m, -1), 512)
+    bf, _ = _pad_cols(bits.reshape(m, -1), 512)
+    u = obfuscate_update(xf, gf, bf, lam_bar, jnp.float32(0.0),
+                         jnp.float32(-1.0), block=(m, 256),
+                         interpret=interpret)
+    if corrupt is not None:
+        from ..faults.inject import poison_transmit
+        xt = poison_transmit(xf, corrupt, corrupt_mode, corrupt_scale)
+        ut = poison_transmit(u, corrupt, corrupt_mode, corrupt_scale)
+        out = guarded_gossip_update(mask, B, xf, u, xt, ut, guard_clip,
+                                    interpret=interpret)
+    elif mask is not None:
+        out = masked_gossip_update(mask, B, xf, u, interpret=interpret)
+    else:
+        out = gossip_update(W, B, xf, u, interpret=interpret)
+    if pad:
+        out = out[:, :-pad]
+    return out.reshape(x.shape).astype(x.dtype)
+
+
+def sharded_pdsgd_tree(W: jax.Array, B: jax.Array, x_tree: Pytree,
+                       g_tree: Pytree, bits_tree: Pytree, lam_bar,
+                       mask: jax.Array | None = None,
+                       interpret: bool | None = None,
+                       corrupt: jax.Array | None = None,
+                       corrupt_mode: str = "nan",
+                       corrupt_scale: float = 1e4,
+                       guard_clip: float = 1e3,
+                       mesh=None, leaf_specs: Pytree | None = None) -> Pytree:
+    """Leaf-wise Eq. (4) update — the sharded-pytree counterpart of
+    `fused_pdsgd_tree`.
+
+    The concat path flattens the whole pytree into one (m, ΣD) buffer,
+    which forces every leaf onto one replicated layout and defeats GSPMD
+    (an FSDP/tensor-sharded leaf would be all-gathered just to be
+    re-split).  Here each leaf keeps its own shape end to end:
+
+    * ``mesh=None`` — per-leaf Pallas kernel pairs, bit-identical to the
+      concat path (obfuscate is elementwise; the gossip matmuls contract
+      only the agent dim, so columns never interact).  This is the
+      reference the property tests compare against.
+    * ``mesh`` + ``leaf_specs`` (a PartitionSpec per leaf, agent dim
+      included) — the obfuscate kernel runs under `shard_map`, one
+      pallas_call per device on its LOCAL block with the per-shard
+      column count padded to the kernel grid (zero communication: the
+      kernel is elementwise), while the gossip contraction stays an
+      einsum so GSPMD emits the agent-axis collective itself and every
+      non-agent dim keeps its sharding.  ``corrupt`` is refused here —
+      the fault paths are dense-only today.
+    """
+    if mesh is None:
+        return jax.tree.map(
+            lambda x, g, b: _leaf_pdsgd(W, B, x, g, b, lam_bar, mask,
+                                        interpret, corrupt, corrupt_mode,
+                                        corrupt_scale, guard_clip),
+            x_tree, g_tree, bits_tree)
+    if corrupt is not None:
+        raise NotImplementedError(
+            "fault injection on the sharded leafwise path is not "
+            "supported; use the dense paths for fault scenarios")
+    if leaf_specs is None:
+        raise ValueError("mesh given but leaf_specs is None; resolve "
+                         "specs via dist.sharding.logical_spec")
+    from jax.experimental.shard_map import shard_map
+
+    def leaf_obfuscate(x, g, bits, spec):
+        def body(xl, gl, bl):
+            m = xl.shape[0]
+            xf, pad = _pad_cols(xl.reshape(m, -1), 256)
+            gf, _ = _pad_cols(gl.reshape(m, -1), 256)
+            bf, _ = _pad_cols(bl.reshape(m, -1), 256)
+            u = obfuscate_update(xf, gf, bf, lam_bar, jnp.float32(0.0),
+                                 jnp.float32(-1.0), block=(m, 256),
+                                 interpret=interpret)
+            if pad:
+                u = u[:, :-pad]
+            return u.reshape(xl.shape).astype(xl.dtype)
+        return shard_map(body, mesh=mesh, in_specs=(spec, spec, spec),
+                         out_specs=spec, check_rep=False)(x, g, bits)
+
+    u_tree = jax.tree.map(leaf_obfuscate, x_tree, g_tree, bits_tree,
+                          leaf_specs)
+    if mask is not None:
+        from ..core.mixing import metropolis_from_mask
+        W = metropolis_from_mask(mask)
+    mix = lambda M, t: jax.tree.map(
+        lambda l: jnp.einsum("ij,j...->i...", M, l.astype(jnp.float32),
+                             preferred_element_type=jnp.float32
+                             ).astype(l.dtype), t)
+    mixed = mix(W, x_tree)
+    desc = mix(B, u_tree)
+    return jax.tree.map(jnp.subtract, mixed, desc)

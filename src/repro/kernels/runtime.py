@@ -11,8 +11,15 @@ knobs now resolve here, once:
     Pallas kernels at all (vs the pure-jnp reference).  Defaults to True on
     TPU, False elsewhere: under the CPU interpreter the fused kernels are a
     correctness path, not a speed path.  Override with ``REPRO_USE_PALLAS``.
+  * ``default_kernel_rng()`` — whether the obfuscate kernel draws its
+    Lambda bits in-VMEM via ``pltpu.prng_seed``/``prng_random_bits``
+    (zero HBM traffic for the randomness) instead of taking counter-based
+    bits as an HBM input.  True only on real TPUs: the TPU PRNG primitives
+    have no CPU/interpret lowering, so everywhere else the HBM-input path
+    stays the validation route.  Override with ``REPRO_KERNEL_RNG``.
 
-Callers pass ``interpret=None`` / ``use_pallas=None`` to defer to these.
+Callers pass ``interpret=None`` / ``use_pallas=None`` / ``kernel_rng=None``
+to defer to these.
 """
 from __future__ import annotations
 
@@ -20,7 +27,8 @@ import os
 
 import jax
 
-__all__ = ["default_interpret", "default_use_pallas", "resolve_interpret"]
+__all__ = ["default_interpret", "default_use_pallas", "default_kernel_rng",
+           "resolve_interpret", "resolve_kernel_rng"]
 
 _TRUTHY = {"1", "true", "yes", "on"}
 _FALSY = {"0", "false", "no", "off"}
@@ -47,6 +55,21 @@ def default_use_pallas() -> bool:
     if env is not None:
         return env
     return jax.default_backend() == "tpu"
+
+
+def default_kernel_rng() -> bool:
+    env = _env_flag("REPRO_KERNEL_RNG")
+    if env is not None:
+        return env
+    return jax.default_backend() == "tpu"
+
+
+def resolve_kernel_rng(kernel_rng: bool | None) -> bool:
+    """``kernel_rng=None`` resolution (same retrace semantics as
+    `resolve_interpret`).  Forcing it on off-TPU raises at lowering —
+    the Mosaic PRNG primitives have no CPU rule — which is the intended
+    loud failure, not something to paper over here."""
+    return default_kernel_rng() if kernel_rng is None else bool(kernel_rng)
 
 
 def resolve_interpret(interpret: bool | None) -> bool:

@@ -111,6 +111,19 @@ def build_lowered(arch: str, shape_name: str, multi_pod: bool,
     mesh = make_production_mesh(multi_pod=multi_pod)
     bundle = build_model(cfg, mesh=mesh)
 
+    # Sharding lint before any compile: a leaf whose logical axes no
+    # TRAIN_RULES entry covers would silently replicate across the whole
+    # slice — surface it as a hard error here, where every (arch, shape,
+    # mesh) combination passes through.
+    from ..dist.sharding import audit_rules
+    audit_errors = [f for f in audit_rules(bundle.abstract(),
+                                           bundle.logical_axes(), mesh)
+                    if f["severity"] == "error"]
+    if audit_errors:
+        raise ValueError(
+            "sharding audit failed (unknown logical axes):\n" + "\n".join(
+                f"  {f['path']}: {f['issue']}" for f in audit_errors))
+
     if shape.kind == "train":
         m = num_agents(mesh)
         params_abs, params_sh, batch_abs, batch_sh = S.train_specs(

@@ -18,6 +18,7 @@ import jax
 __all__ = [
     "make_production_mesh",
     "make_global_mesh",
+    "make_sharded_mesh",
     "validate_agent_tiling",
     "agent_axes",
     "num_agents",
@@ -66,6 +67,36 @@ def make_global_mesh(*, model_parallel: int = 1, agents: int | None = None):
         shape = (slots, model_parallel)
         axes = ("data", "model")
     mesh = jax.make_mesh(shape, axes, devices=devices)
+    if agents is not None:
+        validate_agent_tiling(mesh, agents)
+    return mesh
+
+
+def make_sharded_mesh(*, agents: int | None = None, fsdp: int = 1,
+                      tensor: int = 1):
+    """Agent x fsdp x tensor factorization: ("data", "fsdp", "model").
+
+    The leading "data" axis hosts the decentralized agents (it is the
+    `agent_axes` answer for this mesh); each agent owns an fsdp x tensor
+    block of devices, inside which params shard FSDP-style over "fsdp"
+    (TRAIN_RULES: "embed"/"batch") and tensor-parallel over "model"
+    (TRAIN_RULES: "mlp"/"heads"/"vocab").  The per-agent group size must
+    divide the visible device count; the remaining extent becomes agent
+    slots.  A (1, 1, 1) mesh on a single device is the trivially-sharded
+    case the bit-parity tests pin against the dense path.
+    """
+    if fsdp < 1 or tensor < 1:
+        raise ValueError(f"fsdp={fsdp} and tensor={tensor} must be >= 1")
+    devices = jax.devices()
+    n = len(devices)
+    group = fsdp * tensor
+    if n % group:
+        raise ValueError(
+            f"per-agent group fsdp*tensor={group} does not divide the "
+            f"{n} visible devices")
+    slots = n // group
+    mesh = jax.make_mesh((slots, fsdp, tensor), ("data", "fsdp", "model"),
+                         devices=devices)
     if agents is not None:
         validate_agent_tiling(mesh, agents)
     return mesh

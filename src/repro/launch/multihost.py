@@ -370,8 +370,14 @@ def run_rank(args) -> dict:
 
     # --- transport -------------------------------------------------------
     if use_socket and world > 1:
+        # Per-run frame auth: every rank derives the same key from
+        # (seed, generation), so a frame from another run — or from a
+        # stale pre-rollback generation — fails its tag at the pump.
+        from ..dist.transport import derive_wire_secret
         transport = SocketTransport(adjacency, rank, world, endpoints,
-                                    listen, timeout=args.timeout)
+                                    listen, timeout=args.timeout,
+                                    secret=derive_wire_secret(args.seed,
+                                                              gen))
     else:
         transport = InProcessTransport(adjacency)
 

@@ -77,7 +77,8 @@ def make_train_step(bundle: ModelBundle, mesh,
                     use_pallas: bool = False,
                     mixing: MixingProcess | None = None,
                     observer=None,
-                    faults=None):
+                    faults=None,
+                    sharded: bool = False):
     """Returns train_step(params, batch, key, step) -> (params, loss).
 
     lam_bar follows the paper's 1/k schedule from `lam_base`; the random
@@ -111,7 +112,21 @@ def make_train_step(bundle: ModelBundle, mesh,
     which is the right layout for the single-host hot loop but would defeat
     the per-leaf GSPMD sharding (and allocate whole-model temporaries) on
     the multi-billion-param bundles this launch path shards over the mesh.
-    Opt in only for bundles that fit replicated per agent.
+    Opt in only for bundles that fit replicated per agent — or use
+    ``sharded=True``, whose pallas route is leafwise.
+
+    ``sharded=True`` is the big-model composition: each agent's loss/grad
+    runs FSDP/tensor-sharded inside its device block (the agent vmap gets
+    ``spmd_axis_name`` so the model's `models.common.constrain` logical
+    constraints compose with the agent axis — build the bundle with
+    ``build_model(cfg, mesh=mesh)``) while gossip + B-obfuscation run
+    across the agent axis applied leaf-wise to the sharded pytrees:
+    dense gossip stays the GSPMD einsum, ``use_pallas=True`` routes
+    through `kernels.sharded_pdsgd_tree` (per-shard obfuscate grids under
+    shard_map), and the ring schedule already carries per-leaf specs.  On
+    a trivially-sharded mesh (one device per axis) every constraint
+    resolves to replication and the step is bit-identical to
+    ``sharded=False`` — pinned by tests/test_sharded_pdsgd.py.
 
     ``observer`` (a `privacy.observe.Adversary`) wire-taps the step: the
     return becomes ``(new_params, {"loss", "observation"})`` with the
@@ -212,6 +227,16 @@ def make_train_step(bundle: ModelBundle, mesh,
         W, support, mask = mixing.realize(step)
         return W, support, mask, None
 
+    leaf_specs = None
+    if sharded:
+        from ..dist.sharding import TRAIN_RULES, logical_spec
+        from .specs import with_agent_axis
+        p_abs, p_log = with_agent_axis(bundle.abstract(),
+                                       bundle.logical_axes(), m)
+        leaf_specs = jax.tree.map(
+            lambda a, log: logical_spec(mesh, a.shape, log, TRAIN_RULES),
+            p_abs, p_log)
+
     ring_specs = None
     if gossip == "ring":
         # Resolve each param leaf's full PartitionSpec (agent axes first,
@@ -241,7 +266,11 @@ def make_train_step(bundle: ModelBundle, mesh,
                     "replicated-per-agent bundle instead")
             ring_specs = None
 
-    grad_fn = jax.vmap(jax.value_and_grad(bundle.loss_fn))
+    spmd_name = None
+    if sharded:
+        spmd_name = axes[0] if len(axes) == 1 else axes
+    grad_fn = jax.vmap(jax.value_and_grad(bundle.loss_fn),
+                       spmd_axis_name=spmd_name)
 
     def train_step(params, batch, seed, step):
         key = jax.random.key(seed)
@@ -266,7 +295,10 @@ def make_train_step(bundle: ModelBundle, mesh,
                 out = pdsgd.pdsgd_update(
                     params, grads, key=key, step=step, W=W, support=support,
                     lam_bar=lam_bar, mask=mask, use_pallas=use_pallas,
-                    observe=observer is not None)
+                    observe=observer is not None,
+                    kernel_layout="leafwise" if sharded else "concat",
+                    mesh=mesh if sharded else None,
+                    leaf_specs=leaf_specs)
                 if observer is not None:
                     from ..privacy import observe as O
                     new_params, record = out

@@ -151,6 +151,21 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--rollback-backoff", type=float, default=0.5,
                    help="base rollback delay in seconds, doubling per "
                         "rollback")
+    p.add_argument("--mesh-fsdp", type=int, default=1,
+                   help="shard each agent's params/optimizer over this "
+                        "many devices (FSDP within the agent; agents x "
+                        "fsdp x tensor must divide the device count). "
+                        ">1 turns on sharded big-model mode: the mesh is "
+                        "built with launch.mesh.make_sharded_mesh, params "
+                        "are placed by logical-axis rules, and the PDSGD "
+                        "kernels run leafwise over the sharded pytree")
+    p.add_argument("--mesh-tensor", type=int, default=1,
+                   help="tensor-parallel ('model' axis) devices per agent; "
+                        "composes with --mesh-fsdp")
+    p.add_argument("--scan-layers", action="store_true",
+                   help="roll the transformer stack into one lax.scan over "
+                        "a stacked layer pytree (MaxText-style): constant "
+                        "trace/compile size in depth, same loss bit-for-bit")
     p.add_argument("--steps", type=int, default=100)
     p.add_argument("--per-agent-batch", type=int, default=2)
     p.add_argument("--seq-len", type=int, default=64)
@@ -236,7 +251,54 @@ def run_training(args, mesh=None) -> dict:
     so tests can drive resume round-trips in-process.
     """
     cfg = get_config(args.arch)
-    bundle = build_model(cfg)
+    if args.scan_layers:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, scan_layers=True)
+    sharded = args.mesh_fsdp > 1 or args.mesh_tensor > 1
+    if sharded and mesh is None:
+        from .mesh import make_sharded_mesh
+        mesh = make_sharded_mesh(agents=args.agents, fsdp=args.mesh_fsdp,
+                                 tensor=args.mesh_tensor)
+    bundle = build_model(cfg, mesh=mesh if sharded else None)
+
+    leaf_specs = None
+    place_state = lambda s: s
+    if sharded:
+        # Fail fast on sharding-rule gaps BEFORE any compile: a param
+        # whose logical axes no rule covers would silently replicate,
+        # defeating the FSDP memory budget the flags asked for.
+        from ..dist.sharding import (TRAIN_RULES, audit_rules,
+                                     logical_spec)
+        findings = audit_rules(bundle.abstract(), bundle.logical_axes(),
+                               mesh)
+        errors = [f for f in findings if f["severity"] == "error"]
+        if errors:
+            raise ValueError(
+                "sharding audit failed (unknown logical axes):\n"
+                + "\n".join(f"  {f['path']}: {f['issue']}" for f in errors))
+        print(json.dumps({"sharding_audit": "ok",
+                          "mesh": dict(mesh.shape),
+                          "replicated_leaves": len(findings)}))
+        from jax.sharding import NamedSharding, PartitionSpec
+        from .specs import with_agent_axis
+        p_abs, p_log = with_agent_axis(bundle.abstract(),
+                                       bundle.logical_axes(), args.agents)
+        leaf_specs = jax.tree.map(
+            lambda a, log: logical_spec(mesh, a.shape, log, TRAIN_RULES),
+            p_abs, p_log)
+        params_sh = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                                 leaf_specs)
+        scalar_sh = NamedSharding(mesh, PartitionSpec())
+
+        def place_state(s):
+            # Optimizer/tracker subtrees shard exactly like params, the
+            # step counter replicates — `optim.shard_like` finds the
+            # params-congruent subtrees structurally.
+            from ..optim import shard_like
+            return jax.device_put(
+                s, shard_like(s, s.params, params_sh,
+                              scalar_sharding=scalar_sh))
+
     mixing = build_mixing(args)
     faults = build_faults(args)
     sched = warmup_harmonic(args.lr, hold=args.warmup_hold)
@@ -245,7 +307,13 @@ def run_training(args, mesh=None) -> dict:
                                    sigma_dp=args.sigma_dp,
                                    grad_clip=args.grad_clip_kappa,
                                    faults=faults,
-                                   nan_policy=args.nan_policy)
+                                   nan_policy=args.nan_policy,
+                                   spmd_axis_name="data" if sharded
+                                   else None,
+                                   kernel_layout="leafwise" if sharded
+                                   else "concat",
+                                   mesh=mesh if sharded else None,
+                                   leaf_specs=leaf_specs)
 
     # B-connectivity window diagnostics (ROADMAP): a single disconnected
     # dropout realization is fine; a STREAK of disconnected unions is what
@@ -257,8 +325,9 @@ def run_training(args, mesh=None) -> dict:
     pipeline = make_lm_pipeline(cfg.vocab_size, args.agents,
                                 args.per_agent_batch, args.seq_len,
                                 seed=args.seed)
-    state = init_state(bundle.init(jax.random.key(args.seed)), args.agents,
-                       algorithm=args.algorithm)
+    state = place_state(
+        init_state(bundle.init(jax.random.key(args.seed)), args.agents,
+                   algorithm=args.algorithm))
     key = jax.random.key(args.seed + 1)
     place = make_placer(mesh)
 
@@ -399,7 +468,8 @@ def run_training(args, mesh=None) -> dict:
         time.sleep(args.rollback_backoff * (2 ** rollbacks))
         rollbacks += 1
         streak = 0
-        state = load_checkpoint(args.checkpoint_dir, last, like=state)
+        state = place_state(
+            load_checkpoint(args.checkpoint_dir, last, like=state))
         rec = {"rollback": rollbacks, "restored_step": last}
         history.append(rec)
         print(json.dumps(rec))
@@ -451,7 +521,8 @@ def run_training(args, mesh=None) -> dict:
                     f"with mixing config {stored_fp}, but this run built "
                     f"{mixing_fp}; pass matching --topology* flags (or "
                     "start a fresh run without --resume)")
-            state = load_checkpoint(args.checkpoint_dir, last, like=state)
+            state = place_state(
+                load_checkpoint(args.checkpoint_dir, last, like=state))
             if int(state.step) != last:
                 # batches/keys would be driven by the directory index while
                 # the schedule and agent_key use state.step — refuse the

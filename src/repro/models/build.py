@@ -55,12 +55,17 @@ def build_model(cfg: ArchConfig, mesh=None) -> ModelBundle:
     if cfg.family in ("dense", "moe", "vlm"):
         prefill = lambda params, batch: mod.forward_prefill(params, batch,
                                                             cfg, mesh=mesh)
+        # activation logical constraints (models.common.constrain) ride the
+        # mesh; with mesh=None the loss is byte-identical to the seed path
+        loss = lambda params, batch: mod.loss_fn(params, batch, cfg,
+                                                 mesh=mesh)
     else:
         prefill = lambda params, batch: mod.forward_prefill(params, batch, cfg)
+        loss = lambda params, batch: mod.loss_fn(params, batch, cfg)
     return ModelBundle(
         cfg=cfg,
         param_defs=mod.param_defs(cfg),
-        loss_fn=lambda params, batch: mod.loss_fn(params, batch, cfg),
+        loss_fn=loss,
         prefill_fn=prefill,
         decode_fn=lambda params, token, cache, pos: mod.forward_decode(
             params, token, cache, pos, cfg),

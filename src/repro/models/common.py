@@ -62,6 +62,28 @@ def logical_axes_of(defs: Pytree) -> Pytree:
                         is_leaf=lambda x: isinstance(x, ArrayDef))
 
 
+def constrain(x: jax.Array, mesh, logical: tuple[str | None, ...],
+              rules=None) -> jax.Array:
+    """MaxText-style ``with_logical_constraint`` for activations.
+
+    Resolves ``logical`` through the TRAIN rule table on ``mesh`` and pins
+    ``x`` to the resulting sharding.  Exactly a no-op — same jaxpr, bit
+    parity preserved — when ``mesh`` is None or every dim resolves to
+    replication (the trivially-sharded 1-device-per-axis case).  Composes
+    with ``jax.vmap(..., spmd_axis_name=...)``: under the agent vmap the
+    batched agent dim is spliced into the spec by vmap itself.
+    """
+    if mesh is None:
+        return x
+    from ..dist.sharding import TRAIN_RULES, logical_spec
+    spec = logical_spec(mesh, x.shape, logical,
+                        TRAIN_RULES if rules is None else rules)
+    if not any(e is not None for e in spec):
+        return x
+    from jax.sharding import NamedSharding
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
 # ---------------------------------------------------------------------------
 # Normalization
 # ---------------------------------------------------------------------------

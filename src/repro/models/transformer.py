@@ -1,11 +1,15 @@
 """Decoder-only transformer LM (dense + MoE + VLM-prefix).
 
-Layer parameters are stacked on a leading "layers" dim but the stack is
-traversed with an *unrolled* Python loop (static indexing), NOT lax.scan:
-XLA's cost analysis counts a while-loop body exactly once, which would make
-the dry-run roofline FLOPs off by a factor of num_layers.  Unrolling keeps
-``compiled.cost_analysis()`` faithful; compile time stays manageable because
-each layer body is wrapped in ``jax.checkpoint`` (full remat).
+Layer parameters are stacked on a leading "layers" dim and, by default, the
+stack is traversed with an *unrolled* Python loop (static indexing), NOT
+lax.scan: XLA's cost analysis counts a while-loop body exactly once, which
+would make the dry-run roofline FLOPs off by a factor of num_layers.
+Unrolling keeps ``compiled.cost_analysis()`` faithful; compile time stays
+manageable because each layer body is wrapped in ``jax.checkpoint`` (full
+remat).  ``cfg.scan_layers=True`` opts into a lax.scan traversal for the
+sharded big-model path (compile time O(1) in depth); with a ``mesh`` the
+residual stream carries MaxText-style logical constraints
+(``common.constrain``) so GSPMD keeps activations on the fsdp axis.
 """
 from __future__ import annotations
 
@@ -17,8 +21,9 @@ import jax.numpy as jnp
 
 from ..configs.base import ArchConfig
 from .common import (ArrayDef, apply_rope, attention, chunked_attention,
-                     cross_entropy, decode_attention, gelu_mlp, layer_norm,
-                     pad_vocab, ring_buffer_write, rms_norm, swiglu)
+                     constrain, cross_entropy, decode_attention, gelu_mlp,
+                     layer_norm, pad_vocab, ring_buffer_write, rms_norm,
+                     swiglu)
 from .moe import moe_defs, moe_ffn_train, moe_ffn_decode
 
 Pytree = Any
@@ -122,7 +127,7 @@ def _qkv(pl: Pytree, x: jax.Array, positions: jax.Array, cfg: ArchConfig):
 
 
 def _layer_train(pl: Pytree, x: jax.Array, cfg: ArchConfig,
-                 window: int | None) -> jax.Array:
+                 window: int | None, mesh=None) -> jax.Array:
     from jax.ad_checkpoint import checkpoint_name
     B, S, d = x.shape
     positions = jnp.broadcast_to(jnp.arange(S), (B, S))
@@ -133,9 +138,11 @@ def _layer_train(pl: Pytree, x: jax.Array, cfg: ArchConfig,
     # are the post-all-reduce activations (named for the remat policy)
     x = x + checkpoint_name(jnp.einsum("bshk,hkd->bsd", o, pl["wo"]),
                             "attn_out")
+    x = constrain(x, mesh, ("batch", "seq", None))
     h = _norm(x, pl, "mlp_norm", cfg)
-    x = x + checkpoint_name(_ffn(pl, h, cfg, decode=False), "ffn_out")
-    return x
+    x = x + checkpoint_name(_ffn(pl, h, cfg, decode=False, mesh=mesh),
+                            "ffn_out")
+    return constrain(x, mesh, ("batch", "seq", None))
 
 
 def _layer_prefill(pl: Pytree, x: jax.Array, cfg: ArchConfig,
@@ -212,25 +219,33 @@ def layer_slice(layers: Pytree, i: int) -> Pytree:
     return jax.tree.map(lambda a: a[i], layers)
 
 
-def forward_train(params: Pytree, batch: dict, cfg: ArchConfig) -> jax.Array:
-    """Full-sequence logits for training (unrolled layers, per-layer remat)."""
+def forward_train(params: Pytree, batch: dict, cfg: ArchConfig,
+                  mesh=None) -> jax.Array:
+    """Full-sequence logits for training (per-layer remat; unrolled layers by
+    default, lax.scan over the stacked layer params when cfg.scan_layers)."""
     x = embed_tokens(params, batch, cfg)
+    x = constrain(x, mesh, ("batch", "seq", None))
     if cfg.remat_policy == "save_collectives":
         policy = jax.checkpoint_policies.save_only_these_names(
             "attn_out", "ffn_out")
     else:
         policy = None
     body = jax.checkpoint(
-        lambda pl, x: _layer_train(pl, x, cfg, cfg.attn_window),
+        lambda pl, x: _layer_train(pl, x, cfg, cfg.attn_window, mesh=mesh),
         policy=policy)
-    for i in range(cfg.num_layers):
-        x = body(layer_slice(params["layers"], i), x)
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(lambda x, pl: (body(pl, x), None),
+                            x, params["layers"])
+    else:
+        for i in range(cfg.num_layers):
+            x = body(layer_slice(params["layers"], i), x)
     x = _final_norm(params, x, cfg)
     return unembed(params, x, cfg)
 
 
-def loss_fn(params: Pytree, batch: dict, cfg: ArchConfig) -> jax.Array:
-    logits = forward_train(params, batch, cfg)
+def loss_fn(params: Pytree, batch: dict, cfg: ArchConfig,
+            mesh=None) -> jax.Array:
+    logits = forward_train(params, batch, cfg, mesh=mesh)
     weights = batch.get("loss_weights")
     if weights is None and cfg.num_prefix_embeds:
         # do not train on modality-prefix positions

@@ -1,5 +1,6 @@
 from .sgd import sgd, momentum
 from .adam import adam
-from .base import Optimizer, OptState, apply_updates
+from .base import Optimizer, OptState, apply_updates, shard_like
 
-__all__ = ["sgd", "momentum", "adam", "Optimizer", "OptState", "apply_updates"]
+__all__ = ["sgd", "momentum", "adam", "Optimizer", "OptState",
+           "apply_updates", "shard_like"]

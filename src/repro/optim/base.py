@@ -25,3 +25,34 @@ class Optimizer(NamedTuple):
 
 def apply_updates(params: Pytree, updates: Pytree) -> Pytree:
     return jax.tree.map(lambda p, u: (p + u.astype(p.dtype)), params, updates)
+
+
+def shard_like(state: Pytree, params: Pytree, params_sharding: Pytree,
+               scalar_sharding=None) -> Pytree:
+    """Sharding tree for an optimizer (or training) state: every
+    params-congruent subtree — adam's mu/nu, momentum buffers, dsgt's
+    tracker pair — shards exactly like the params; everything else
+    (step counters, scalar hyper-state) gets ``scalar_sharding``
+    (typically fully-replicated ``NamedSharding(mesh, P())``).
+
+    Congruence means same treedef AND same leaf shapes, so a state leaf
+    that merely happens to be a dict is never mis-matched.  Works on any
+    pytree whose array leaves are either params-shaped subtrees or
+    scalars — the FSDP invariant "optimizer state shards like params"
+    expressed once, structurally.
+    """
+    pdef = jax.tree.structure(params)
+    pshapes = [tuple(getattr(l, "shape", ())) for l in jax.tree.leaves(params)]
+
+    def params_like(sub) -> bool:
+        try:
+            leaves, treedef = jax.tree.flatten(sub)
+        except Exception:
+            return False
+        return (treedef == pdef and
+                [tuple(getattr(l, "shape", ())) for l in leaves] == pshapes)
+
+    flat, treedef = jax.tree.flatten(state, is_leaf=params_like)
+    out = [params_sharding if params_like(leaf) else scalar_sharding
+           for leaf in flat]
+    return jax.tree.unflatten(treedef, out)

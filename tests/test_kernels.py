@@ -92,3 +92,67 @@ def test_tree_wrappers_match_core_update():
         expect = (np.einsum("ij,j...->i...", np.asarray(W), np.asarray(tree_x[name]))
                   - np.einsum("ij,j...->i...", np.asarray(B), np.asarray(tree_u[name])))
         np.testing.assert_allclose(np.asarray(out[name]), expect, atol=1e-5)
+
+
+# -- in-kernel TPU randomness (the kernels.runtime knob) ------------------
+
+
+def test_kernel_rng_knob_defaults_and_env(monkeypatch):
+    """default_kernel_rng: backend-derived (False on this CPU container),
+    REPRO_KERNEL_RNG overrides both ways; resolve passes explicit values
+    through untouched."""
+    from repro.kernels import runtime
+    monkeypatch.delenv("REPRO_KERNEL_RNG", raising=False)
+    expect = jax.default_backend() == "tpu"
+    assert runtime.default_kernel_rng() is expect
+    monkeypatch.setenv("REPRO_KERNEL_RNG", "1")
+    assert runtime.default_kernel_rng() is True
+    assert runtime.resolve_kernel_rng(None) is True
+    monkeypatch.setenv("REPRO_KERNEL_RNG", "0")
+    assert runtime.default_kernel_rng() is False
+    assert runtime.resolve_kernel_rng(None) is False
+    assert runtime.resolve_kernel_rng(True) is True
+    assert runtime.resolve_kernel_rng(False) is False
+
+
+def test_fused_pdsgd_kernel_rng_requires_seed():
+    from repro.kernels import fused_pdsgd_tree
+    m = 2
+    x = {"a": _randn((m, 8), jnp.float32)}
+    g = {"a": _randn((m, 8), jnp.float32)}
+    W = jnp.eye(m)
+    with pytest.raises(ValueError, match="seed"):
+        fused_pdsgd_tree(W, W, x, g, None, 0.1, kernel_rng=True,
+                         interpret=True)
+
+
+@pytest.mark.skipif(jax.default_backend() == "tpu",
+                    reason="CPU-only gate: TPU has the lowering")
+def test_kernel_rng_path_refuses_cpu_lowering():
+    """pltpu.prng_seed has no CPU rule even under interpret=True — the
+    krng path must fail LOUDLY off-TPU, never silently fall back (a
+    silent fallback would realize a different Lambda stream than the
+    run requested)."""
+    from repro.kernels import obfuscate_update_krng
+    x = _randn((2, 256), jnp.float32)
+    g = _randn((2, 256), jnp.float32)
+    seed = jnp.zeros((2,), jnp.uint32)
+    with pytest.raises(NotImplementedError):
+        jax.block_until_ready(obfuscate_update_krng(
+            x, g, seed, 0.1, 0.0, -1.0, block=(2, 256), interpret=True))
+
+
+@pytest.mark.skipif(jax.default_backend() != "tpu",
+                    reason="needs the Mosaic PRNG lowering")
+def test_kernel_rng_replay_parity_tpu():
+    """The krng kernel exports the bits it drew; replaying them through
+    the HBM-bits kernel must reproduce the krng output bit-for-bit —
+    the two randomness plumbing routes share ALL their math."""
+    from repro.kernels import obfuscate_update, obfuscate_update_krng
+    x = _randn((4, 512), jnp.float32)
+    g = _randn((4, 512), jnp.float32)
+    seed = jnp.asarray([7, 11], jnp.uint32)
+    out, bits = obfuscate_update_krng(x, g, seed, 0.05, 0.0, -1.0,
+                                      block=(4, 256))
+    replay = obfuscate_update(x, g, bits, 0.05, 0.0, -1.0, block=(4, 256))
+    assert np.array_equal(np.asarray(out), np.asarray(replay))

@@ -118,9 +118,12 @@ def test_neighbor_lists_rejects_asymmetric():
 # -- socket transport (real TCP between threads) --------------------------
 
 
-def _socket_world(world, adjacency, fn, audit=False, timeout=30.0):
+def _socket_world(world, adjacency, fn, audit=False, timeout=30.0,
+                  secrets=None):
     """Run `fn(transport, rank)` on one thread per rank over real TCP;
-    returns per-rank results, re-raising the first worker error."""
+    returns per-rank results, re-raising the first worker error.
+    ``secrets``: one shared key (bytes) or a per-rank dict — a dict with
+    disagreeing keys is the tamper scenario."""
     socks, endpoints = [], {}
     for r in range(world):
         s = socket.socket()
@@ -132,8 +135,10 @@ def _socket_world(world, adjacency, fn, audit=False, timeout=30.0):
 
     def run(r):
         try:
+            sec = (secrets.get(r) if isinstance(secrets, dict) else secrets)
             tr = T.SocketTransport(adjacency, r, world, endpoints, socks[r],
-                                   timeout=timeout, audit_wire=audit)
+                                   timeout=timeout, audit_wire=audit,
+                                   secret=sec)
             try:
                 results[r] = fn(tr, r)
             finally:
@@ -277,6 +282,104 @@ def test_socket_survives_dead_peer_and_overlay_is_doubly_stochastic():
         return out
 
     _socket_world(2, A, drive, timeout=5.0)
+
+
+# -- HMAC frame authentication --------------------------------------------
+
+
+def _auth_problem(seed=8, m=4, D=6):
+    A = _ring(m)
+    rng = np.random.default_rng(seed)
+    W, B = _coupling(rng, A)
+    x = rng.standard_normal((m, D)).astype(np.float32)
+    u = rng.standard_normal((m, D)).astype(np.float32)
+    return A, W, B, x, u
+
+
+def test_derive_wire_secret_deterministic_and_env_override(monkeypatch):
+    monkeypatch.delenv("REPRO_WIRE_SECRET", raising=False)
+    a = T.derive_wire_secret(7, 0)
+    assert a == T.derive_wire_secret(7, 0) and len(a) == T.WIRE_TAG_SIZE
+    # (seed, generation) are both part of the key identity
+    assert a != T.derive_wire_secret(8, 0)
+    assert a != T.derive_wire_secret(7, 1)
+    monkeypatch.setenv("REPRO_WIRE_SECRET", "hunter2")
+    assert T.derive_wire_secret(7, 0) == b"hunter2"
+
+
+def test_socket_hmac_roundtrip_matches_unauthenticated_bits():
+    """A shared secret must not change a single payload bit: the
+    authenticated exchange equals the in-process reference exactly, and
+    every sent frame is old-frame + 32-byte tag."""
+    A, W, B, x, u = _auth_problem()
+    ref = T.InProcessTransport(A).exchange(x, u, W, B)
+    key = T.derive_wire_secret(7, 0)
+
+    def drive(tr, r):
+        out = tr.exchange(x[r * 2:(r + 1) * 2], u[r * 2:(r + 1) * 2],
+                          W, B, step=3)
+        return out, list(tr.sent_frames), tr.tag_failures, tr.dead_ranks
+
+    results = _socket_world(2, A, drive, audit=True, secrets=key)
+    for r, (out, sent, fails, dead) in enumerate(results):
+        assert fails == 0 and not dead
+        assert np.array_equal(out, ref[r * 2:(r + 1) * 2])
+        for frame in sent:
+            hdr = frame[:T.FRAME_HEADER.size]
+            body = frame[T.FRAME_HEADER.size:-T.WIRE_TAG_SIZE]
+            tag = frame[-T.WIRE_TAG_SIZE:]
+            import hashlib, hmac as H
+            assert tag == H.new(key, hdr + body, hashlib.sha256).digest()
+
+
+def test_socket_hmac_rejects_tampered_frames():
+    """Ranks holding different keys see each other's frames as tampered:
+    the pump rejects them (tag_failures), marks the channel dead, and
+    the exchange still terminates with only local contributions."""
+    A, W, B, x, u = _auth_problem(seed=9)
+
+    def drive(tr, r):
+        out = tr.exchange(x[r * 2:(r + 1) * 2], u[r * 2:(r + 1) * 2],
+                          W, B, step=0)
+        return out, tr.tag_failures, sorted(tr.dead_ranks), tr.drops
+
+    results = _socket_world(
+        2, A, drive, timeout=5.0,
+        secrets={0: T.derive_wire_secret(1, 0), 1: T.derive_wire_secret(2, 0)})
+    for r, (out, fails, dead, drops) in enumerate(results):
+        assert fails >= 1, "wrong-key frame must fail verification"
+        assert dead == [1 - r]
+        assert drops >= 1  # the rejected contributions were dropped
+        assert np.isfinite(out).all()
+        # the tampered v never entered the accumulation: the output is
+        # exactly the local-links-only reference
+        lo = r * 2
+        expect = np.empty_like(out)
+        for l, i in enumerate(range(lo, lo + 2)):
+            contribs = {int(j): T.link_message(W[i, j], B[i, j],
+                                               x[j], u[j])
+                        for j in np.flatnonzero(A[i]) if j // 2 == r}
+            expect[l] = T.accumulate(
+                i, T.link_message(W[i, i], B[i, i], x[i], u[i]), contribs)
+        assert np.array_equal(out, expect)
+
+
+def test_socket_hmac_rejects_untagged_stream():
+    """An authenticated receiver facing an unauthenticated (or
+    truncated) sender must reject the stream, not consume garbage: the
+    missing tag bytes desync or EOF the channel, which is marked dead."""
+    A, W, B, x, u = _auth_problem(seed=10)
+
+    def drive(tr, r):
+        out = tr.exchange(x[r * 2:(r + 1) * 2], u[r * 2:(r + 1) * 2],
+                          W, B, step=0)
+        return out, tr.tag_failures, sorted(tr.dead_ranks)
+
+    results = _socket_world(2, A, drive, timeout=5.0,
+                            secrets={0: T.derive_wire_secret(3, 0), 1: None})
+    out0, fails0, dead0 = results[0]
+    assert dead0 == [1]
+    assert np.isfinite(out0).all()
 
 
 # -- Fig.-2 trajectory property: all transports walk identical bits -------
