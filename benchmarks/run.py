@@ -33,6 +33,11 @@ Prints ``name,us_per_call,derived`` CSV rows:
                        pure-data-parallel mean-grad baseline; reports the
                        gossip+obfuscation overhead ratio
                        (merged into BENCH_pdsgd.json)
+  * bench_serve      : continuous-batching serving — seed Python loop vs
+                       the device-resident chunk loop, and the slot
+                       engine continuous vs gang admission under the
+                       same Poisson offered load
+                       (merged into BENCH_pdsgd.json)
 
 ``--only NAME`` runs a single benchmark (substring match).
 """
@@ -1140,6 +1145,130 @@ def bench_sharded_lm(steps=4, agents=2, fsdp=2):
          f"params_per_agent={res['params_per_agent']}")
 
 
+def bench_serve(arch="stablelm-3b-tiny", slots=4, prompt_len=16,
+                gen=32, chunk=8):
+    """Continuous-batching serving subsystem (repro.serve).
+
+    Four measured paths on the same tiny LM:
+      * python_loop — the seed serving loop: one host dispatch + host-side
+        sample per generated token (batch of ``slots`` rows);
+      * device_loop — the lax.scan chunk loop (`serve.loop`): ``chunk``
+        tokens per dispatch, sampling in-trace;
+      * continuous / gang — the full `ServeEngine` under the SAME
+        open-loop Poisson arrivals, continuous slot re-fill vs
+        run-to-completion wave admission.
+
+    us_per_step keys are microseconds per generated token (gate-
+    comparable across runs); the engine rows add tokens/s, TTFT and
+    latency percentiles.
+    """
+    from repro.configs import get_config
+    from repro.models import build_model
+    from repro.serve import Request, ServeEngine, init_loop_state, \
+        make_decode_loop
+    from repro.models.common import pad_vocab
+
+    cfg = get_config(arch)
+    bundle = build_model(cfg)
+    params = bundle.init(jax.random.key(0))
+    B = slots
+    key = jax.random.key(1)
+    batch = {"tokens": jax.random.randint(key, (B, prompt_len), 0,
+                                          cfg.vocab_size)}
+    prefill = jax.jit(bundle.prefill_fn)
+    decode = jax.jit(bundle.decode_fn)
+    out0 = jax.block_until_ready(prefill(params, batch))
+    pos0 = int(out0["pos"])
+
+    # -- seed-style Python loop: one dispatch per token -------------------
+    def python_loop():
+        logits, cache = out0["logits"], out0["cache"]
+        for p in range(pos0, pos0 + gen):
+            toks = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            o = decode(params, toks, cache, jnp.asarray(p, jnp.int32))
+            logits, cache = o["logits"], o["cache"]
+        return logits
+    us_py = _timeit(python_loop, n=3) / (gen * B)
+    emit("bench_serve_python_loop", us_py, f"batch={B};per=token")
+
+    # -- device-resident chunk loop ---------------------------------------
+    # The loop donates its state, so timing CHAINS states call-to-call
+    # (pos keeps advancing around the ring; every slot stays active via an
+    # unreachable token budget) — each timed call is a steady full batch.
+    loop = make_decode_loop(bundle, chunk=chunk)
+    state = init_loop_state(prefill(params, batch)["cache"], B,
+                            pad_vocab(cfg.vocab_size), jax.random.key(0))
+    state.update(logits=out0["logits"].astype(jnp.float32),
+                 pos=jnp.full((B,), pos0, jnp.int32),
+                 req_id=jnp.arange(B, dtype=jnp.int32),
+                 active=jnp.ones((B,), bool),
+                 remaining=jnp.full((B,), 1 << 30, jnp.int32))
+    holder = {"s": state}
+
+    def device_chunk():
+        s, toks, _ = loop(params, holder["s"])
+        holder["s"] = s
+        return toks
+    us_dev = _timeit(device_chunk, n=6) / (chunk * B)
+    emit("bench_serve_device_loop", us_dev,
+         f"chunk={chunk};speedup_vs_python={us_py / us_dev:.2f}x")
+
+    # -- continuous vs gang at the same offered load ----------------------
+    # Bimodal lengths: gang makes every short request in a wave wait for
+    # the wave's longest; continuous re-fills the short request's slot as
+    # soon as it retires.  Load sits near capacity so a queue exists.
+    n_req = 4 * slots
+    gens = np.where(np.arange(n_req) % 2 == 0, gen, max(gen // 4, 1))
+    cap_tok_s = 1e6 / us_dev
+    rate = 0.9 * cap_tok_s / float(gens.mean())   # req/s, ~90% of peak
+    rng = np.random.default_rng(0)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate, n_req))
+    prompts = rng.integers(0, cfg.vocab_size, (n_req, prompt_len),
+                           dtype=np.int32)
+    engines = {}
+    for adm in ("continuous", "gang"):
+        eng = ServeEngine(bundle, params, slots=slots,
+                          max_seq_len=prompt_len + gen, decode_chunk=chunk,
+                          admission=adm, seed=0)
+        eng.warmup(prompt_len)
+        comps = eng.run([Request(req_id=i, tokens=prompts[i],
+                                 max_new_tokens=int(gens[i]),
+                                 arrival_time=float(arrivals[i]))
+                         for i in range(n_req)])
+        lat = np.asarray([c.latency for c in comps]) * 1e3
+        ttft = np.asarray([c.ttft for c in comps
+                           if c.first_token_at is not None]) * 1e3
+        toks = sum(len(c.tokens) for c in comps)
+        span = max(c.finished_at for c in comps) - float(arrivals[0])
+        engines[adm] = {
+            "us_per_step": 1e6 * span / toks,
+            "tokens_per_s": round(toks / span, 1),
+            "completed": len(comps),
+            "ttft_p50_ms": round(float(np.percentile(ttft, 50)), 2),
+            "latency_p50_ms": round(float(np.percentile(lat, 50)), 2),
+            "latency_p99_ms": round(float(np.percentile(lat, 99)), 2),
+        }
+        emit(f"bench_serve_{adm}", engines[adm]["us_per_step"],
+             f"p50_ms={engines[adm]['latency_p50_ms']};"
+             f"tokens_per_s={engines[adm]['tokens_per_s']}")
+
+    payload = {
+        "arch": arch, "slots": slots, "prompt_len": prompt_len,
+        "gen_tokens": gen, "decode_chunk": chunk,
+        "offered_load_req_s": round(rate, 2),
+        "python_loop": {"us_per_step": round(us_py, 2)},
+        "device_loop": {"us_per_step": round(us_dev, 2),
+                        "speedup_vs_python":
+                            round(us_py / us_dev, 3)},
+        "continuous": engines["continuous"],
+        "gang": engines["gang"],
+        "p50_continuous_vs_gang":
+            round(engines["continuous"]["latency_p50_ms"]
+                  / engines["gang"]["latency_p50_ms"], 3),
+    }
+    _write_bench_json({"bench_serve": payload})
+
+
 def kernel_benches():
     from repro.kernels import (flash_attention, gossip_update,
                                obfuscate_update, ssd_intra_chunk)
@@ -1189,6 +1318,7 @@ BENCHES = {
     "bench_fault_injection": bench_fault_injection,
     "bench_multihost": bench_multihost,
     "bench_sharded_lm": bench_sharded_lm,
+    "bench_serve": bench_serve,
     "kernel_benches": kernel_benches,
     "fig3_nonconvex": fig3_nonconvex,
 }

@@ -51,6 +51,28 @@ python benchmarks/run.py --only bench_multihost
 echo "== sharded big-model perf (bench_sharded_lm) =="
 python benchmarks/run.py --only bench_sharded_lm
 
+echo "== serving perf (bench_serve) =="
+python benchmarks/run.py --only bench_serve
+
+echo "== serving smoke (8 requests at capacity 4, parity vs sequential) =="
+python - <<'EOF'
+import json, subprocess, sys
+out = subprocess.run(
+    [sys.executable, "-m", "repro.launch.serve",
+     "--arch", "stablelm-3b-smoke", "--slots", "4", "--requests", "8",
+     "--prompt-len", "8", "--gen-tokens", "8", "--decode-chunk", "4",
+     "--temperature", "0.8", "--parity-check"],
+    capture_output=True, text=True, check=True)
+res = json.loads(out.stdout.strip().splitlines()[-1])
+assert res["completed"] == 8, res
+assert res["parity"] == "ok", res
+assert res["compile"]["chunk_compile_s"] > 0, res  # compile split reported
+print("serve smoke ok:", json.dumps(
+    {"completed": res["completed"], "parity": res["parity"],
+     "tokens_per_s": res["tokens_per_s"],
+     "latency_p50_ms": res["latency_p50_ms"]}))
+EOF
+
 echo "== sharded-LM smoke (agents=2 x fsdp=2 on 4 fake devices) =="
 python - <<'EOF'
 import json, os, subprocess, sys

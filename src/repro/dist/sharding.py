@@ -23,7 +23,7 @@ from typing import Any, Mapping, Sequence
 from jax.sharding import PartitionSpec
 
 __all__ = ["TRAIN_RULES", "SERVE_RULES", "DECODE_RULES", "logical_spec",
-           "audit_rules"]
+           "sharding_tree", "audit_rules"]
 
 # Each value is a tuple of candidates; each candidate a tuple of mesh axes.
 RuleTable = Mapping[str, tuple[tuple[str, ...], ...]]
@@ -113,6 +113,21 @@ def logical_spec(mesh, shape: Sequence[int],
     while entries and entries[-1] is None:
         entries.pop()
     return PartitionSpec(*entries)
+
+
+def sharding_tree(mesh, abstract: Any, logical: Any,
+                  table: RuleTable) -> Any:
+    """NamedSharding per leaf of an (abstract, logical) tree pair — the
+    one resolver every placement site shares (`launch.specs` dry-run
+    shardings, `serve.ServeEngine` params/cache placement).  ``mesh``
+    must be a real `jax.sharding.Mesh` here (NamedSharding holds it)."""
+    import jax
+    from jax.sharding import NamedSharding
+
+    return jax.tree.map(
+        lambda a, log: NamedSharding(mesh, logical_spec(mesh, a.shape, log,
+                                                        table)),
+        abstract, logical)
 
 
 def audit_rules(abstract: Any, logical: Any, mesh,

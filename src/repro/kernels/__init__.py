@@ -1,4 +1,5 @@
 from .ops import (flash_attention, gossip_update, masked_gossip_update,
+                  masked_gossip_update_krng,
                   guarded_gossip_update, obfuscate_update,
                   ssd_intra_chunk, obfuscate_tree, gossip_tree,
                   fused_pdsgd_tree, sharded_pdsgd_tree,
@@ -7,6 +8,7 @@ from .obfuscate import obfuscate_update_krng
 from .runtime import default_kernel_rng, resolve_kernel_rng
 
 __all__ = ["flash_attention", "gossip_update", "masked_gossip_update",
+           "masked_gossip_update_krng",
            "guarded_gossip_update", "obfuscate_update",
            "ssd_intra_chunk", "obfuscate_tree", "gossip_tree",
            "fused_pdsgd_tree", "sharded_pdsgd_tree",

@@ -69,13 +69,9 @@ def _gossip_update(W, B, X, U, block_n, interpret):
     )(W, B, X, U)
 
 
-def _masked_gossip_kernel(mask_ref, b_ref, x_ref, u_ref, o_ref):
-    mask = mask_ref[...].astype(jnp.float32)
-    b = b_ref[...].astype(jnp.float32)
-    x = x_ref[...].astype(jnp.float32)
-    u = u_ref[...].astype(jnp.float32)
-    # Metropolis re-weighting in VMEM (== core.mixing.metropolis_from_mask):
-    # w_ij = mask_ij / (1 + max(deg_i, deg_j)), w_ii = 1 - sum_j w_ij.
+def _metropolis_weights(mask):
+    """Metropolis re-weighting in VMEM (== core.mixing.metropolis_from_mask):
+    w_ij = mask_ij / (1 + max(deg_i, deg_j)), w_ii = 1 - sum_j w_ij."""
     m = mask.shape[0]
     deg = mask.sum(axis=1)
     denom = 1.0 + jnp.maximum(deg[:, None], deg[None, :])
@@ -84,7 +80,31 @@ def _masked_gossip_kernel(mask_ref, b_ref, x_ref, u_ref, o_ref):
     rows = jax.lax.broadcasted_iota(jnp.int32, (m, m), 0)
     cols = jax.lax.broadcasted_iota(jnp.int32, (m, m), 1)
     eye = (rows == cols).astype(jnp.float32)
-    w = w + eye * (1.0 - w.sum(axis=1, keepdims=True))
+    return w + eye * (1.0 - w.sum(axis=1, keepdims=True))
+
+
+def _mask_from_bits(bits, keep_prob, adj):
+    """Realized symmetric off-diagonal edge mask from raw uint32 draws —
+    the in-kernel counterpart of `core.mixing.symmetric_edge_mask`: one
+    U[0,1) per UNDIRECTED edge (strict upper triangle, mirrored), gated
+    by the off-diagonal base adjacency ``adj``.  Pure jnp so the mask
+    math is unit-testable off-TPU with synthetic bits."""
+    # uint32 -> U[0,1): top 23 bits into the mantissa of 1.xxx
+    f = (bits >> 9) | jnp.uint32(0x3F800000)
+    u01 = jax.lax.bitcast_convert_type(f, jnp.float32) - 1.0
+    m = bits.shape[0]
+    rows = jax.lax.broadcasted_iota(jnp.int32, (m, m), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (m, m), 1)
+    keep = ((rows < cols) & (u01 < keep_prob)).astype(jnp.float32)
+    return (keep + keep.T) * adj
+
+
+def _masked_gossip_kernel(mask_ref, b_ref, x_ref, u_ref, o_ref):
+    mask = mask_ref[...].astype(jnp.float32)
+    b = b_ref[...].astype(jnp.float32)
+    x = x_ref[...].astype(jnp.float32)
+    u = u_ref[...].astype(jnp.float32)
+    w = _metropolis_weights(mask)
     mixed = jnp.dot(w, x, preferred_element_type=jnp.float32)
     desc = jnp.dot(b, u, preferred_element_type=jnp.float32)
     o_ref[...] = (mixed - desc).astype(o_ref.dtype)
@@ -120,6 +140,91 @@ def _masked_gossip_update(mask, B, X, U, block_n, interpret):
         out_shape=jax.ShapeDtypeStruct((m, n), X.dtype),
         interpret=interpret,
     )(mask, B, X, U)
+
+
+# ---------------------------------------------------------------------------
+# In-kernel TPU randomness (runtime.default_kernel_rng path)
+# ---------------------------------------------------------------------------
+
+def _masked_gossip_krng_kernel(seed_ref, prob_ref, adj_ref, b_ref, x_ref,
+                               u_ref, o_ref, mask_ref):
+    """`_masked_gossip_kernel` with the edge-mask DRAW moved in-VMEM: the
+    per-core TPU PRNG is seeded with (seed0, seed1) alone — deliberately
+    NO program_id, unlike the obfuscate krng kernel — so every column
+    tile re-draws the IDENTICAL (m, m) mask and the whole grid gossips
+    over one consistent realized graph.  The realized mask is also
+    written out (every tile stores the same block) so replay parity can
+    pin this kernel against the HBM-mask path bit-for-bit, and so
+    `MixingProcess` consumers still see the support they need."""
+    from jax.experimental.pallas import tpu as pltpu
+    pltpu.prng_seed(seed_ref[0], seed_ref[1])
+    m = adj_ref.shape[0]
+    bits = pltpu.bitcast(pltpu.prng_random_bits((m, m)), jnp.uint32)
+    mask = _mask_from_bits(bits, prob_ref[0],
+                           adj_ref[...].astype(jnp.float32))
+    mask_ref[...] = mask
+    b = b_ref[...].astype(jnp.float32)
+    x = x_ref[...].astype(jnp.float32)
+    u = u_ref[...].astype(jnp.float32)
+    w = _metropolis_weights(mask)
+    mixed = jnp.dot(w, x, preferred_element_type=jnp.float32)
+    desc = jnp.dot(b, u, preferred_element_type=jnp.float32)
+    o_ref[...] = (mixed - desc).astype(o_ref.dtype)
+
+
+def masked_gossip_update_krng(seed: jax.Array, keep_prob, adj: jax.Array,
+                              B: jax.Array, X: jax.Array, U: jax.Array,
+                              block_n: int = DEFAULT_BLOCK_N,
+                              interpret: bool | None = None):
+    """TPU-only masked gossip with the Bernoulli edge-mask draw in-VMEM.
+
+    ``seed``: (2,) uint32/int32 PRNG words (derive from the step's mixing
+    key); ``keep_prob``: scalar per-edge keep probability (1 - dropout
+    rate); ``adj``: (m, m) off-diagonal 0/1 base adjacency gating which
+    edges can exist (`MixingProcess.base_mask`; pass all-ones-off-diag
+    for an unconstrained ER redraw).  Returns ``(out, mask)`` — feed
+    ``mask`` back through `masked_gossip_update` to cross-validate the
+    two paths bit-for-bit.  The mask comes from the TPU PRNG stream, NOT
+    the jax.random counter stream, so it differs draw-for-draw from
+    `core.mixing.symmetric_edge_mask` under the same seed — parity is by
+    replaying the exported mask, exactly the Lambda-bits contract of
+    `obfuscate_update_krng`.  Raises at lowering on non-TPU backends
+    (no Mosaic PRNG rule on CPU, even under ``interpret=True``)."""
+    return _masked_gossip_update_krng(seed, keep_prob, adj, B, X, U,
+                                      block_n=block_n,
+                                      interpret=resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def _masked_gossip_update_krng(seed, keep_prob, adj, B, X, U, block_n,
+                               interpret):
+    m, n = X.shape
+    bn = min(block_n, n)
+    assert n % bn == 0, (n, bn)
+    seed = jnp.asarray(seed, jnp.int32)
+    assert seed.shape == (2,), seed.shape
+    prob = jnp.asarray(keep_prob, jnp.float32).reshape(1)
+    return pl.pallas_call(
+        _masked_gossip_krng_kernel,
+        grid=(n // bn,),
+        in_specs=[
+            pl.BlockSpec((2,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((m, m), lambda i: (0, 0)),
+            pl.BlockSpec((m, m), lambda i: (0, 0)),
+            pl.BlockSpec((m, bn), lambda i: (0, i)),
+            pl.BlockSpec((m, bn), lambda i: (0, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((m, bn), lambda i: (0, i)),
+            pl.BlockSpec((m, m), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, n), X.dtype),
+            jax.ShapeDtypeStruct((m, m), jnp.float32),
+        ],
+        interpret=interpret,
+    )(seed, prob, adj, B, X, U)
 
 
 def _guarded_gossip_kernel(mask_ref, b_ref, x_ref, u_ref, xt_ref, ut_ref,

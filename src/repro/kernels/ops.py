@@ -12,7 +12,8 @@ import jax
 import jax.numpy as jnp
 
 from .flash_attention import flash_attention
-from .gossip import gossip_update, guarded_gossip_update, masked_gossip_update
+from .gossip import (gossip_update, guarded_gossip_update,
+                     masked_gossip_update, masked_gossip_update_krng)
 from .obfuscate import obfuscate_update, obfuscate_update_krng
 from .runtime import (default_interpret, default_kernel_rng,
                       default_use_pallas, resolve_kernel_rng)
@@ -21,7 +22,8 @@ from .ssm_scan import ssd_intra_chunk
 Pytree = Any
 
 __all__ = ["flash_attention", "gossip_update", "masked_gossip_update",
-           "guarded_gossip_update", "obfuscate_update",
+           "masked_gossip_update_krng", "guarded_gossip_update",
+           "obfuscate_update",
            "obfuscate_update_krng", "ssd_intra_chunk", "obfuscate_tree",
            "gossip_tree", "fused_pdsgd_tree", "sharded_pdsgd_tree",
            "default_interpret", "default_use_pallas", "default_kernel_rng"]
@@ -90,7 +92,10 @@ def fused_pdsgd_tree(W: jax.Array, B: jax.Array, x_tree: Pytree,
                      corrupt_scale: float = 1e4,
                      guard_clip: float = 1e3,
                      kernel_rng: bool | None = None,
-                     seed: jax.Array | None = None) -> Pytree:
+                     seed: jax.Array | None = None,
+                     mask_seed: jax.Array | None = None,
+                     mask_keep_prob=None,
+                     mask_adj: jax.Array | None = None) -> Pytree:
     """Full Eq. (4) update through both fused kernels in one flattened pass:
 
         u = Lambda(bits) ∘ g          (obfuscate kernel, w_self=0, b_self=-1)
@@ -124,6 +129,17 @@ def fused_pdsgd_tree(W: jax.Array, B: jax.Array, x_tree: Pytree,
     krng kernel exports the bits it drew, and the parity test replays
     them through this HBM-input path to pin the two kernels bit-for-bit.
 
+    ``mask_seed`` extends the same contract to the EDGE-MASK draw: with
+    the knob on and a (2,) mask seed given, the masked gossip stage
+    becomes `gossip.masked_gossip_update_krng` — the Bernoulli mask is
+    drawn in-VMEM from ``mask_keep_prob`` (required) over the
+    off-diagonal base adjacency ``mask_adj`` (None = complete graph) and
+    the ``mask`` argument is ignored; the realized mask never stages
+    from HBM.  Off-TPU (knob off) callers keep passing the
+    `MixingProcess.realize` mask unchanged.  Not composable with
+    ``corrupt`` (the guard path consumes the realized mask on the host
+    side) or ``observe``.
+
     ``corrupt`` (an (m,) 0/1 vector from `faults.FaultProcess.realize`)
     selects the fault-tolerant path: the corrupt agents' TRANSMIT
     buffers are poisoned (`faults.inject.poison_transmit`) and the
@@ -140,6 +156,13 @@ def fused_pdsgd_tree(W: jax.Array, B: jax.Array, x_tree: Pytree,
     if kernel_rng and seed is None:
         raise ValueError("kernel_rng=True needs a (2,) seed "
                          "(derive from the step's Lambda key)")
+    use_mask_krng = resolve_kernel_rng(kernel_rng) and mask_seed is not None
+    if mask_seed is not None and mask_keep_prob is None:
+        raise ValueError("mask_seed needs mask_keep_prob (the per-edge "
+                         "keep probability, 1 - dropout rate)")
+    if use_mask_krng and corrupt is not None:
+        raise ValueError("in-kernel mask draw does not compose with "
+                         "corrupt injection; pass the realized mask")
     x_flat, sizes, leaves = _flatten_concat(x_tree)
     g_flat, _, _ = _flatten_concat(g_tree)
     x_flat, pad = _pad_cols(x_flat, 512)
@@ -167,6 +190,14 @@ def fused_pdsgd_tree(W: jax.Array, B: jax.Array, x_tree: Pytree,
         ut = poison_transmit(u_flat, corrupt, corrupt_mode, corrupt_scale)
         out = guarded_gossip_update(mask, B, x_flat, u_flat, xt, ut,
                                     guard_clip, interpret=interpret)
+    elif use_mask_krng:
+        m = x_flat.shape[0]
+        adj = mask_adj
+        if adj is None:
+            adj = 1.0 - jnp.eye(m, dtype=jnp.float32)
+        out, _ = masked_gossip_update_krng(mask_seed, mask_keep_prob, adj,
+                                           B, x_flat, u_flat,
+                                           interpret=interpret)
     elif mask is not None:
         out = masked_gossip_update(mask, B, x_flat, u_flat,
                                    interpret=interpret)

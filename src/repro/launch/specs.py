@@ -10,7 +10,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..configs import ArchConfig, InputShape, config_for_shape
 from ..dist.sharding import (TRAIN_RULES, SERVE_RULES, DECODE_RULES,
-                             logical_spec)
+                             logical_spec, sharding_tree)
 from ..models import build_model
 from ..models.build import ModelBundle
 
@@ -21,11 +21,8 @@ def _sds(shape, dtype):
     return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
 
 
-def _sharding_tree(mesh, abstract: Pytree, logical: Pytree, table) -> Pytree:
-    return jax.tree.map(
-        lambda a, log: NamedSharding(mesh, logical_spec(mesh, a.shape, log,
-                                                        table)),
-        abstract, logical)
+# resolver hoisted to dist.sharding.sharding_tree (serve shares it)
+_sharding_tree = sharding_tree
 
 
 def with_agent_axis(abstract: Pytree, logical: Pytree, m: int):

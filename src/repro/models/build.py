@@ -29,7 +29,9 @@ class ModelBundle:
     param_defs: Pytree
     loss_fn: Callable          # (params, batch) -> scalar
     prefill_fn: Callable       # (params, batch) -> {logits, cache, pos}
-    decode_fn: Callable        # (params, token, cache, pos) -> {...}
+    decode_fn: Callable        # (params, token, cache, pos) -> {...};
+                               # pos is a scalar (lockstep batch) or (B,)
+                               # int32 (per-slot continuous batching)
     cache_spec: Callable       # (batch, seq_len) -> {name: (shape, logical, dtype)}
 
     def init(self, key: jax.Array) -> Pytree:
@@ -59,15 +61,18 @@ def build_model(cfg: ArchConfig, mesh=None) -> ModelBundle:
         # mesh; with mesh=None the loss is byte-identical to the seed path
         loss = lambda params, batch: mod.loss_fn(params, batch, cfg,
                                                  mesh=mesh)
+        decode = lambda params, token, cache, pos: mod.forward_decode(
+            params, token, cache, pos, cfg, mesh=mesh)
     else:
         prefill = lambda params, batch: mod.forward_prefill(params, batch, cfg)
         loss = lambda params, batch: mod.loss_fn(params, batch, cfg)
+        decode = lambda params, token, cache, pos: mod.forward_decode(
+            params, token, cache, pos, cfg)
     return ModelBundle(
         cfg=cfg,
         param_defs=mod.param_defs(cfg),
         loss_fn=loss,
         prefill_fn=prefill,
-        decode_fn=lambda params, token, cache, pos: mod.forward_decode(
-            params, token, cache, pos, cfg),
+        decode_fn=decode,
         cache_spec=lambda batch, seq_len: mod.cache_spec(cfg, batch, seq_len),
     )

@@ -267,11 +267,41 @@ def decode_attention(q: jax.Array, k_new: jax.Array, v_new: jax.Array,
 
 def ring_buffer_write(cache: jax.Array, new: jax.Array,
                       pos: jax.Array) -> jax.Array:
-    """Write (B, 1, ...) `new` into slot pos % C of (B, C, ...) `cache`."""
+    """Write (B, 1, ...) `new` into slot pos % C of (B, C, ...) `cache`.
+
+    ``pos`` is a scalar (every row at the same absolute position — the
+    training/seed decode path) or (B,) int32 (continuous-batching serve:
+    each slot at its own position, scattered row-wise).  The scalar branch
+    is the original dynamic_update_slice — bit parity with the seed path
+    is pinned by tests.
+    """
     C = cache.shape[1]
-    slot = jnp.asarray(pos % C, dtype=jnp.int32)
-    return jax.lax.dynamic_update_slice_in_dim(
-        cache, new.astype(cache.dtype), slot, axis=1)
+    pos = jnp.asarray(pos)
+    if pos.ndim == 0:
+        slot = jnp.asarray(pos % C, dtype=jnp.int32)
+        return jax.lax.dynamic_update_slice_in_dim(
+            cache, new.astype(cache.dtype), slot, axis=1)
+    slot = (pos % C).astype(jnp.int32)  # (B,)
+    B = cache.shape[0]
+    return cache.at[jnp.arange(B), slot].set(new[:, 0].astype(cache.dtype))
+
+
+def decode_cache_valid(pos: jax.Array, C: int) -> jax.Array:
+    """Ring-buffer validity mask for `decode_attention`: slots < min(pos, C)
+    hold real entries.  Scalar pos -> (C,); per-slot (B,) pos -> (B, C)."""
+    pos = jnp.asarray(pos)
+    if pos.ndim == 0:
+        return jnp.arange(C) < jnp.minimum(pos, C)
+    return jnp.arange(C)[None, :] < jnp.minimum(pos, C)[:, None]
+
+
+def decode_positions(pos: jax.Array, B: int) -> jax.Array:
+    """(B, 1) absolute rope positions for the decode token from a scalar or
+    per-slot (B,) ``pos``."""
+    pos = jnp.asarray(pos)
+    if pos.ndim == 0:
+        return jnp.broadcast_to(pos[None], (B, 1)).astype(jnp.int32)
+    return pos[:, None].astype(jnp.int32)
 
 
 # ---------------------------------------------------------------------------

@@ -20,8 +20,8 @@ import jax.numpy as jnp
 
 from ..configs.base import ArchConfig
 from .common import (ArrayDef, apply_rope, attention, cross_entropy,
-                     decode_attention, layer_norm, pad_vocab,
-                     ring_buffer_write)
+                     decode_attention, decode_cache_valid, decode_positions,
+                     layer_norm, pad_vocab, ring_buffer_write)
 from . import transformer as tfm
 
 Pytree = Any
@@ -207,7 +207,7 @@ def forward_prefill(params: Pytree, batch: dict, cfg: ArchConfig) -> dict:
 
 def _cross_decode_attention(q, k_cache, v_cache, valid):
     """One-token cross-attention (no self term).  q: (B,1,H,hd);
-    caches (B,S,KV,hd); valid (S,) bool."""
+    caches (B,S,KV,hd); valid (S,) or per-slot (B,S) bool."""
     import math as _math
     B, _, H, hd = q.shape
     KV = k_cache.shape[2]
@@ -215,7 +215,10 @@ def _cross_decode_attention(q, k_cache, v_cache, valid):
     qg = q.reshape(B, 1, KV, G, hd)
     logits = jnp.einsum("bqkgd,bskd->bkgqs", qg, k_cache).astype(jnp.float32)
     logits = logits / _math.sqrt(hd)
-    logits = jnp.where(valid[None, None, None, None, :], logits, -1e30)
+    if valid.ndim == 1:
+        logits = jnp.where(valid[None, None, None, None, :], logits, -1e30)
+    else:  # (B, S) per-slot window (continuous-batching serve)
+        logits = jnp.where(valid[:, None, None, None, :], logits, -1e30)
     probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
     out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v_cache)
     return out.reshape(B, 1, H, hd)
@@ -225,13 +228,14 @@ def forward_decode(params: Pytree, token: jax.Array, cache: dict,
                    pos: jax.Array, cfg: ArchConfig) -> dict:
     x = params["embed"][token][:, None, :]
     C = cache["k"].shape[2]
-    cache_valid = jnp.arange(C) < jnp.minimum(pos, C)
+    pos_arr = jnp.asarray(pos)
+    cache_valid = decode_cache_valid(pos, C)
     new_ks, new_vs = [], []
     S_enc = cache["xk"].shape[2]
     for i in range(cfg.num_layers):
         pl = tfm.layer_slice(params["decoder"], i)
         B = x.shape[0]
-        positions = jnp.broadcast_to(pos[None], (B, 1)).astype(jnp.int32)
+        positions = decode_positions(pos, B)
         h = tfm._norm(x, pl, "attn_norm", cfg)
         q, k, v = tfm._qkv(pl, h, positions, cfg)
         o = decode_attention(q, k, v, cache["k"][i], cache["v"][i], cache_valid)
@@ -241,9 +245,13 @@ def forward_decode(params: Pytree, token: jax.Array, cache: dict,
         qx = jnp.einsum("bsd,dhk->bshk", hc, pl["xq"])
         if cfg.cross_attn_window is not None:
             w = cfg.cross_attn_window
-            center = jnp.clip((pos * S_enc) // jnp.maximum(C, 1), 0, S_enc - 1)
+            center = jnp.clip((pos_arr * S_enc) // jnp.maximum(C, 1),
+                              0, S_enc - 1)
             kpos = jnp.arange(S_enc)
-            xvalid = jnp.abs(kpos - center) <= (w // 2)
+            if pos_arr.ndim == 0:
+                xvalid = jnp.abs(kpos - center) <= (w // 2)
+            else:  # per-slot monotonic window: (B, S_enc)
+                xvalid = jnp.abs(kpos[None, :] - center[:, None]) <= (w // 2)
         else:
             xvalid = jnp.ones((S_enc,), bool)
         ox = _cross_decode_attention(qx, cache["xk"][i], cache["xv"][i], xvalid)

@@ -13,7 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.base import ArchConfig
-from .common import ArrayDef, pad_vocab, rms_norm
+from .common import ArrayDef, decode_cache_valid, pad_vocab, rms_norm
 from . import ssm
 from . import transformer as tfm
 
@@ -107,7 +107,7 @@ def forward_decode(params: Pytree, token: jax.Array, cache: dict,
                    pos: jax.Array, cfg: ArchConfig) -> dict:
     x = params["embed"][token][:, None, :]
     C = cache["k"].shape[2]
-    cache_valid = jnp.arange(C) < jnp.minimum(pos, C)
+    cache_valid = decode_cache_valid(pos, C)
     sites = set(_attn_sites(cfg))
     new_ssm, new_conv, new_ks, new_vs = [], [], [], []
     site_idx = 0

@@ -21,7 +21,8 @@ import jax.numpy as jnp
 
 from ..configs.base import ArchConfig
 from .common import (ArrayDef, apply_rope, attention, chunked_attention,
-                     constrain, cross_entropy, decode_attention, gelu_mlp,
+                     constrain, cross_entropy, decode_attention,
+                     decode_cache_valid, decode_positions, gelu_mlp,
                      layer_norm, pad_vocab, ring_buffer_write, rms_norm,
                      swiglu)
 from .moe import moe_defs, moe_ffn_train, moe_ffn_decode
@@ -171,7 +172,7 @@ def _layer_prefill(pl: Pytree, x: jax.Array, cfg: ArchConfig,
 def _layer_decode(pl: Pytree, x: jax.Array, k_cache, v_cache,
                   pos: jax.Array, cfg: ArchConfig, cache_valid: jax.Array):
     B = x.shape[0]
-    positions = jnp.broadcast_to(pos[None], (B, 1)).astype(jnp.int32)
+    positions = decode_positions(pos, B)
     h = _norm(x, pl, "attn_norm", cfg)
     q, k, v = _qkv(pl, h, positions, cfg)
     o = decode_attention(q, k, v, k_cache, v_cache, cache_valid)
@@ -297,13 +298,19 @@ def forward_prefill(params: Pytree, batch: dict, cfg: ArchConfig,
 
 
 def forward_decode(params: Pytree, token: jax.Array, cache: dict,
-                   pos: jax.Array, cfg: ArchConfig) -> dict:
+                   pos: jax.Array, cfg: ArchConfig, mesh=None) -> dict:
     """One decode step: token (B,) int32, cache from prefill, pos = absolute
-    position of `token`.  Returns next-token logits and the updated cache."""
+    position of `token` — a scalar (whole batch in lockstep, the seed path)
+    or (B,) int32 (continuous-batching serve: per-slot positions).  Returns
+    next-token logits and the updated cache.  With a ``mesh`` the residual
+    stream carries SERVE_RULES logical constraints (no-op when None)."""
     x = params["embed"][token][:, None, :]  # (B, 1, d)
     C = cache["k"].shape[2]
     # ring-buffer validity: slots < min(pos, C) hold real entries
-    cache_valid = jnp.arange(C) < jnp.minimum(pos, C)
+    cache_valid = decode_cache_valid(pos, C)
+    if mesh is not None:
+        from ..dist.sharding import SERVE_RULES
+        x = constrain(x, mesh, ("batch", "seq", None), rules=SERVE_RULES)
     new_ks, new_vs = [], []
     for i in range(cfg.num_layers):
         pl = layer_slice(params["layers"], i)

@@ -1,0 +1,127 @@
+"""Slot-paged decode cache for continuous batching.
+
+The engine keeps ONE fixed-capacity cache slab per model cache leaf,
+shaped by ``bundle.cache_spec(slots, max_seq_len)``; each request owns a
+*page* — its batch-row slice across every leaf.  Admission writes a
+freshly prefillled page into a free slot with a ``dynamic_update_slice``
+along that leaf's batch axis (no reallocation, the rest of the batch
+keeps its live state untouched); retirement just marks the slot free —
+the stale page is overwritten by the next admission.
+
+Layout is derived, not hard-coded: the batch axis of every leaf comes
+from the ``"batch"`` entry of the leaf's *logical* axis names, so the one
+slab mechanism covers transformer K/V rings ``(L, B, C, KV, hd)``, hybrid
+SSM state ``(L, B, H, P, N)`` / conv tails, and xLSTM sLSTM stacks whose
+batch dim sits at axis 2 ``(n_s, 4, B, H, Ph)``.  KV-ring leaves (the
+ones with a ``"kv_seq"`` logical axis) are zero-padded from the
+request's prompt-length ring up to the slab capacity C; that is exact
+because for prompt length Lp <= C the ring layout is the identity on
+positions 0..Lp-1 (and when the prompt is window-truncated the
+per-request and slab ring lengths coincide), and slots >= Lp are masked
+off by ``decode_cache_valid`` until decode writes them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafLayout:
+    shape: tuple[int, ...]
+    logical: tuple[str | None, ...]
+    dtype: Any
+    batch_axis: int | None   # None => static leaf (no per-slot page)
+    seq_axis: int | None     # index of the "kv_seq" dim, if any
+
+
+@dataclasses.dataclass(frozen=True)
+class SlotCacheLayout:
+    """Per-leaf slab layouts for a ``slots``-wide decode batch."""
+
+    slots: int
+    max_seq_len: int
+    leaves: dict[str, LeafLayout]
+
+    def init(self) -> dict[str, jax.Array]:
+        """Zero-initialized cache slab (every slot free/invalid)."""
+        return {name: jnp.zeros(l.shape, l.dtype)
+                for name, l in self.leaves.items()}
+
+    def abstract(self) -> dict[str, jax.ShapeDtypeStruct]:
+        return {name: jax.ShapeDtypeStruct(l.shape, l.dtype)
+                for name, l in self.leaves.items()}
+
+    def logical(self) -> dict[str, tuple[str | None, ...]]:
+        return {name: l.logical for name, l in self.leaves.items()}
+
+
+def make_layout(bundle, slots: int, max_seq_len: int) -> SlotCacheLayout:
+    leaves = {}
+    for name, entry in bundle.cache_spec(slots, max_seq_len).items():
+        shape, logical, dt = entry if len(entry) == 3 else (*entry, None)
+        dtype = jnp.dtype(dt) if dt else bundle.dtype
+        # zero-sized leaves (e.g. an xLSTM stack with no sLSTM layers) carry
+        # no state; decode passes them through untouched, so no paging
+        batch_axis = (logical.index("batch")
+                      if "batch" in logical and 0 not in shape else None)
+        seq_axis = logical.index("kv_seq") if "kv_seq" in logical else None
+        leaves[name] = LeafLayout(tuple(shape), tuple(logical), dtype,
+                                  batch_axis, seq_axis)
+    return SlotCacheLayout(slots=slots, max_seq_len=max_seq_len,
+                           leaves=leaves)
+
+
+def write_slot(layout: SlotCacheLayout, cache: dict, page: dict,
+               slot: jax.Array) -> dict:
+    """Write a B=1 prefill cache (``page``) into batch row ``slot``.
+
+    ``slot`` may be traced — admission compiles once per prompt length,
+    not per slot index.  KV-ring leaves shorter than the slab capacity
+    are right-padded with zeros (see module docstring for why that is
+    exact)."""
+    slot = jnp.asarray(slot, jnp.int32)
+    out = {}
+    for name, l in layout.leaves.items():
+        leaf = cache[name]
+        if l.batch_axis is None:
+            out[name] = leaf
+            continue
+        p = page[name].astype(l.dtype)
+        if l.seq_axis is not None:
+            have, want = p.shape[l.seq_axis], l.shape[l.seq_axis]
+            if have > want:
+                raise ValueError(
+                    f"cache leaf {name!r}: request ring length {have} "
+                    f"exceeds slab capacity {want}")
+            if have < want:
+                pads = [(0, 0)] * p.ndim
+                pads[l.seq_axis] = (0, want - have)
+                p = jnp.pad(p, pads)
+        starts = [jnp.zeros((), jnp.int32)] * leaf.ndim
+        starts[l.batch_axis] = slot
+        out[name] = jax.lax.dynamic_update_slice(leaf, p, starts)
+    return out
+
+
+def read_slot(layout: SlotCacheLayout, cache: dict, slot: jax.Array) -> dict:
+    """Slice batch row ``slot`` back out as a B=1 page (round-trip of
+    `write_slot` up to the kv_seq zero-padding)."""
+    slot = jnp.asarray(slot, jnp.int32)
+    out = {}
+    for name, l in layout.leaves.items():
+        leaf = cache[name]
+        if l.batch_axis is None:
+            out[name] = leaf
+            continue
+        starts = [jnp.zeros((), jnp.int32)] * leaf.ndim
+        starts[l.batch_axis] = slot
+        sizes = list(leaf.shape)
+        sizes[l.batch_axis] = 1
+        out[name] = jax.lax.dynamic_slice(leaf, starts, sizes)
+    return out

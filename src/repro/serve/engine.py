@@ -1,0 +1,282 @@
+"""Slot-based continuous-batching serve engine.
+
+A fixed decode batch of ``slots`` rows runs the device-resident chunk
+loop (`serve.loop`); finished/empty slots are re-filled by prefilling the
+next queued request (B=1, exact prompt length) and paging its cache into
+that slot position (`serve.cache.write_slot`) while the other slots keep
+decoding — admission never drains or reshapes the live batch.
+
+``admission="gang"`` is the run-to-completion static-batching baseline:
+requests are only admitted when EVERY slot is free, so a whole wave must
+drain before the next starts.  `bench_serve` measures continuous vs gang
+at the same offered load; continuous wins p50 latency because a short
+request never waits for the longest request of its wave.
+
+With a ``mesh`` the engine places params and the cache slab through the
+SERVE/DECODE logical rule tables (`dist.sharding`) and refuses to start
+if `audit_rules` reports an error-severity finding on either tree — the
+model-parallel serving path is linted, never silently replicated.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.common import pad_vocab
+from . import cache as slot_cache
+from .loop import init_loop_state, make_decode_loop
+
+Pytree = Any
+
+
+@dataclasses.dataclass
+class Request:
+    req_id: int
+    tokens: np.ndarray            # (Lp,) int32 prompt token ids
+    max_new_tokens: int
+    arrival_time: float = 0.0     # offset from run() start (open-loop bench)
+    prefix_embeds: np.ndarray | None = None
+
+
+@dataclasses.dataclass
+class Completion:
+    req_id: int
+    prompt_len: int
+    tokens: list[int]
+    arrival_time: float
+    admitted_at: float            # prefill finished, slot occupied
+    first_token_at: float | None  # first generated token visible on host
+    finished_at: float
+
+    @property
+    def ttft(self) -> float | None:
+        return (None if self.first_token_at is None
+                else self.first_token_at - self.arrival_time)
+
+    @property
+    def latency(self) -> float:
+        return self.finished_at - self.arrival_time
+
+
+@dataclasses.dataclass
+class _SlotMeta:
+    """Host mirror of one occupied slot."""
+    req: Request
+    admitted_at: float
+    first_token_at: float | None = None
+    tokens: list[int] = dataclasses.field(default_factory=list)
+
+
+class ServeEngine:
+    def __init__(self, bundle, params, *, slots: int, max_seq_len: int,
+                 decode_chunk: int = 8, temperature: float = 0.0,
+                 eos_id: int | None = None, seed: int = 0,
+                 admission: str = "continuous", mesh=None, rules=None):
+        if bundle.cfg.family == "audio":
+            raise NotImplementedError(
+                "enc-dec serving: the cross-attention cache is encoder-"
+                "length-shaped per request and cannot be paged into a "
+                "fixed slab; use the oneshot path in launch.serve")
+        if admission not in ("continuous", "gang"):
+            raise ValueError(f"unknown admission policy {admission!r}")
+        self.bundle = bundle
+        self.slots = slots
+        self.max_seq_len = max_seq_len
+        self.decode_chunk = decode_chunk
+        self.admission = admission
+        self.mesh = mesh
+        self.layout = slot_cache.make_layout(bundle, slots, max_seq_len)
+        self._vocab = pad_vocab(bundle.cfg.vocab_size)
+        self._seed = seed
+        self.audit: dict | None = None
+        if mesh is not None:
+            params = self._place(params, rules)
+        self.params = params
+        # the loop donates the whole state (key included), so every init
+        # must mint a fresh key buffer
+        self._state = init_loop_state(self._init_cache(), slots, self._vocab,
+                                      jax.random.key(seed))
+        self._prefill = jax.jit(bundle.prefill_fn)
+        self._loop = make_decode_loop(bundle, chunk=decode_chunk,
+                                      temperature=temperature, eos_id=eos_id)
+        self._admit_fn = jax.jit(self._admit_impl, donate_argnums=(0,))
+        self._queue: collections.deque[Request] = collections.deque()
+        self._slot_meta: list[_SlotMeta | None] = [None] * slots
+        self.completions: list[Completion] = []
+        # wall-clock samples for the compile-vs-steady split (satellite of
+        # the seed timing bug: first-call times are compile+run)
+        self.prefill_times: list[float] = []
+        self.chunk_times: list[float] = []
+
+    # -- sharded placement -------------------------------------------------
+
+    def _place(self, params, rules):
+        from jax.sharding import NamedSharding
+        from ..dist.sharding import (SERVE_RULES, audit_rules, logical_spec,
+                                     sharding_tree)
+        table = rules if rules is not None else SERVE_RULES
+        findings = audit_rules(self.bundle.abstract(),
+                               self.bundle.logical_axes(), self.mesh, table)
+        findings += audit_rules(self.layout.abstract(), self.layout.logical(),
+                                self.mesh, table)
+        errors = [f for f in findings if f["severity"] == "error"]
+        if errors:
+            raise RuntimeError(f"serving shard audit failed: {errors}")
+        self.audit = {"ok": True, "errors": 0,
+                      "info": sum(f["severity"] == "info" for f in findings)}
+        self._rules = table
+        return jax.device_put(
+            params, sharding_tree(self.mesh, self.bundle.abstract(),
+                                  self.bundle.logical_axes(), table))
+
+    def _init_cache(self):
+        slab = self.layout.init()
+        if self.mesh is None:
+            return slab
+        from jax.sharding import NamedSharding
+        from ..dist.sharding import logical_spec
+        return {name: jax.device_put(
+                    leaf, NamedSharding(self.mesh, logical_spec(
+                        self.mesh, leaf.shape,
+                        self.layout.leaves[name].logical, self._rules)))
+                for name, leaf in slab.items()}
+
+    # -- admission ---------------------------------------------------------
+
+    def _admit_impl(self, state, slot, page, logits_row, prompt_len,
+                    req_id, max_new):
+        return dict(
+            state,
+            cache=slot_cache.write_slot(self.layout, state["cache"], page,
+                                        slot),
+            logits=state["logits"].at[slot].set(
+                logits_row.astype(jnp.float32)),
+            pos=state["pos"].at[slot].set(prompt_len),
+            req_id=state["req_id"].at[slot].set(req_id),
+            active=state["active"].at[slot].set(True),
+            remaining=state["remaining"].at[slot].set(max_new),
+        )
+
+    def submit(self, req: Request):
+        if len(req.tokens) > self.max_seq_len:
+            raise ValueError(f"request {req.req_id}: prompt length "
+                             f"{len(req.tokens)} > max_seq_len "
+                             f"{self.max_seq_len}")
+        self._queue.append(req)
+
+    def _free_slots(self) -> list[int]:
+        return [i for i, m in enumerate(self._slot_meta) if m is None]
+
+    def _admit_one(self, req: Request, slot: int, now: float):
+        batch = {"tokens": jnp.asarray(req.tokens, jnp.int32)[None]}
+        if req.prefix_embeds is not None:
+            batch["prefix_embeds"] = jnp.asarray(
+                req.prefix_embeds, self.bundle.dtype)[None]
+        t0 = time.perf_counter()
+        out = self._prefill(self.params, batch)
+        jax.block_until_ready(out["logits"])
+        self.prefill_times.append(time.perf_counter() - t0)
+        # NB: the slot position comes from the prefill output, not the
+        # prompt length — prefix embeds (vlm) can extend past the prompt.
+        self._state = self._admit_fn(
+            self._state, jnp.int32(slot), out["cache"], out["logits"][0],
+            out["pos"].astype(jnp.int32), jnp.int32(req.req_id),
+            jnp.int32(req.max_new_tokens))
+        self._slot_meta[slot] = _SlotMeta(req=req, admitted_at=now)
+
+    def _try_admit(self, now: float):
+        free = self._free_slots()
+        if self.admission == "gang" and len(free) < self.slots:
+            return
+        for slot in free:
+            if not self._queue or self._queue[0].arrival_time > now:
+                break
+            self._admit_one(self._queue.popleft(), slot, now)
+
+    # -- decode + harvest --------------------------------------------------
+
+    def _run_chunk(self, now_fn):
+        t0 = time.perf_counter()
+        self._state, toks, emitted = self._loop(self.params, self._state)
+        toks = np.asarray(toks)          # (K, S) — the one host sync
+        emitted = np.asarray(emitted)
+        self.chunk_times.append(time.perf_counter() - t0)
+        active = np.asarray(self._state["active"])
+        now = now_fn()
+        for s, meta in enumerate(self._slot_meta):
+            if meta is None:
+                continue
+            new = toks[emitted[:, s], s].tolist()
+            if new and meta.first_token_at is None:
+                meta.first_token_at = now
+            meta.tokens.extend(new)
+            if not active[s]:
+                req = meta.req
+                self.completions.append(Completion(
+                    req_id=req.req_id, prompt_len=len(req.tokens),
+                    tokens=meta.tokens, arrival_time=req.arrival_time,
+                    admitted_at=meta.admitted_at,
+                    first_token_at=meta.first_token_at, finished_at=now))
+                self._slot_meta[s] = None
+
+    def step(self, now_fn=None) -> bool:
+        """Admit what fits, decode one chunk.  Returns False when idle
+        (no live slot and nothing admissible)."""
+        now_fn = now_fn or time.perf_counter
+        self._try_admit(now_fn())
+        if not any(m is not None for m in self._slot_meta):
+            return False
+        self._run_chunk(now_fn)
+        return True
+
+    def run(self, requests: list[Request] | None = None) -> list[Completion]:
+        """Drive to completion.  ``arrival_time`` offsets are honored
+        against a clock starting at this call (open-loop arrivals)."""
+        if requests:
+            for r in sorted(requests, key=lambda r: r.arrival_time):
+                self.submit(r)
+        t_start = time.perf_counter()
+        now_fn = lambda: time.perf_counter() - t_start  # noqa: E731
+        while self._queue or any(m is not None for m in self._slot_meta):
+            if not self.step(now_fn):
+                # idle but queue non-empty: next arrival is in the future
+                wait = self._queue[0].arrival_time - now_fn()
+                if wait > 0:
+                    time.sleep(min(wait, 0.05))
+        return self.completions
+
+    # -- warmup / reset ----------------------------------------------------
+
+    def warmup(self, prompt_len: int, max_new: int | None = None):
+        """Compile the prefill/admit/chunk path on a throwaway request and
+        reset.  Afterwards `prefill_times`/`chunk_times` sample steady
+        state only — the compile-vs-steady split the seed driver lacked."""
+        req = Request(req_id=-1, tokens=np.zeros((prompt_len,), np.int32),
+                      max_new_tokens=max_new or self.decode_chunk)
+        self.submit(req)
+        while self.step():
+            pass
+        compile_stats = {
+            "prefill_compile_s": self.prefill_times[0],
+            "chunk_compile_s": self.chunk_times[0],
+        }
+        self.reset()
+        return compile_stats
+
+    def reset(self):
+        """Free every slot and clear host-side records (device buffers are
+        zeroed; timing samples are cleared too)."""
+        self._state = init_loop_state(self._init_cache(), self.slots,
+                                      self._vocab,
+                                      jax.random.key(self._seed))
+        self._queue.clear()
+        self._slot_meta = [None] * self.slots
+        self.completions = []
+        self.prefill_times = []
+        self.chunk_times = []

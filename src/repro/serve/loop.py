@@ -1,0 +1,150 @@
+"""Device-resident decode loop: K tokens per host round-trip.
+
+The seed serving path bounced every token through Python — sample on
+host, re-dispatch a jitted decode, repeat.  Here the sample -> decode ->
+retire step is a ``lax.scan`` body, so one dispatch advances every live
+slot by ``chunk`` tokens and the host only sees the (chunk, slots) token
+block.  Retirement (EOS / token budget) is traced: a finished slot stops
+emitting and holds its position, but stays in the fixed-shape batch until
+the engine re-fills it.
+
+Sampling-key hygiene: keys derive from a dedicated fold_in DOMAIN off the
+serve base key, then per (request id, absolute position) — disjoint by
+construction from the prompt-synthesis streams (fold_in 1/2 of the data
+key, the seed bug), and *slot-independent*, so a request draws the same
+token stream whether it decodes solo or packed in a full batch (the
+batched-vs-sequential parity tests pin this).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+# fold_in domain separating sampling keys from every data-synthesis stream
+SAMPLE_DOMAIN = 0x5E12
+
+
+def sampling_key(base_key: jax.Array, req_id: jax.Array,
+                 pos: jax.Array) -> jax.Array:
+    """Per-(request, position) sampling key — slot- and batch-independent."""
+    k = jax.random.fold_in(base_key, SAMPLE_DOMAIN)
+    k = jax.random.fold_in(k, req_id)
+    return jax.random.fold_in(k, pos)
+
+
+def sample_token(logits: jax.Array, key: jax.Array, temperature: float,
+                 vocab_size: int | None = None) -> jax.Array:
+    """Greedy (temperature<=0) or temperature sampling over one (V,) row.
+    ``vocab_size`` masks the padded vocab tail so pad ids are never
+    emitted."""
+    lf = logits.astype(jnp.float32)
+    if vocab_size is not None and vocab_size < lf.shape[-1]:
+        lf = jnp.where(jnp.arange(lf.shape[-1]) >= vocab_size, -1e30, lf)
+    if temperature <= 0.0:
+        return jnp.argmax(lf, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(key, lf / temperature, axis=-1
+                                  ).astype(jnp.int32)
+
+
+def init_loop_state(cache: Pytree, slots: int, vocab: int,
+                    base_key: jax.Array) -> dict:
+    """All-slots-free device state consumed by `make_decode_loop`."""
+    return {
+        "cache": cache,
+        "logits": jnp.zeros((slots, vocab), jnp.float32),
+        "pos": jnp.zeros((slots,), jnp.int32),
+        "req_id": jnp.full((slots,), -1, jnp.int32),
+        "active": jnp.zeros((slots,), bool),
+        "remaining": jnp.zeros((slots,), jnp.int32),
+        "key": base_key,
+    }
+
+
+def make_decode_loop(bundle, *, chunk: int, temperature: float = 0.0,
+                     eos_id: int | None = None):
+    """Build the jitted K-token decode step.
+
+    Returns ``run(params, state) -> (state', tokens (K, S) int32,
+    emitted (K, S) bool)``; ``state`` is donated (the cache slab is
+    updated in place, never copied per chunk)."""
+    decode = bundle.decode_fn
+    vocab_size = bundle.cfg.vocab_size
+
+    def body(params, state, _):
+        active, pos = state["active"], state["pos"]
+        keys = jax.vmap(sampling_key, in_axes=(None, 0, 0))(
+            state["key"], state["req_id"], pos)
+        toks = jax.vmap(
+            lambda k, l: sample_token(l, k, temperature, vocab_size)
+        )(keys, state["logits"])
+        emitted = active
+        remaining = state["remaining"] - active.astype(jnp.int32)
+        done = remaining <= 0
+        if eos_id is not None:
+            done |= toks == eos_id
+        out = decode(params, toks, state["cache"], pos)
+        state = dict(
+            state,
+            cache=out["cache"],
+            logits=jnp.where(active[:, None],
+                             out["logits"].astype(jnp.float32),
+                             state["logits"]),
+            pos=jnp.where(active, pos + 1, pos),
+            active=active & ~done,
+            remaining=jnp.where(active, remaining, state["remaining"]),
+        )
+        return state, (toks, emitted)
+
+    @functools.partial(jax.jit, donate_argnums=(1,))
+    def run(params, state):
+        state, (toks, emitted) = jax.lax.scan(
+            functools.partial(body, params), state, None, length=chunk)
+        return state, toks, emitted
+
+    return run
+
+
+def sequential_decode(bundle, params, batch: dict, req_id: int,
+                      max_new: int, *, temperature: float = 0.0,
+                      eos_id: int | None = None, base_key: jax.Array,
+                      max_seq_len: int | None = None,
+                      prefill=None, decode=None) -> list[int]:
+    """Per-request (B=1) host-loop reference: prefill the prompt, then
+    sample/decode one token per dispatch with the SAME (request, position)
+    sampling keys as the batched loop.  This is both the parity oracle for
+    the engine and the seed-style Python-loop baseline `bench_serve`
+    measures against.
+
+    ``max_seq_len`` re-pages the prompt-length prefill cache into a
+    1-slot slab of the engine's ring capacity (prefill alone gives a
+    C=prompt_len ring, which wraps earlier than the engine's C=max_seq_len
+    slab would); pass the engine's value when comparing against it."""
+    prefill = prefill or jax.jit(bundle.prefill_fn)
+    decode = decode or jax.jit(bundle.decode_fn)
+    out = prefill(params, batch)
+    logits, cache = out["logits"], out["cache"]
+    if max_seq_len is not None:
+        from .cache import make_layout, write_slot
+        layout = make_layout(bundle, 1, max_seq_len)
+        cache = write_slot(layout, layout.init(), cache, 0)
+    p = int(out["pos"])
+    toks: list[int] = []
+    for _ in range(max_new):
+        key = sampling_key(base_key, jnp.int32(req_id), jnp.int32(p))
+        tok = int(sample_token(logits[0], key, temperature,
+                               bundle.cfg.vocab_size))
+        toks.append(tok)
+        if eos_id is not None and tok == eos_id:
+            break
+        if len(toks) >= max_new:
+            break
+        out = decode(params, jnp.asarray([tok], jnp.int32), cache,
+                     jnp.asarray(p, jnp.int32))
+        logits, cache = out["logits"], out["cache"]
+        p += 1
+    return toks

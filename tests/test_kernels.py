@@ -156,3 +156,80 @@ def test_kernel_rng_replay_parity_tpu():
                                       block=(4, 256))
     replay = obfuscate_update(x, g, bits, 0.05, 0.0, -1.0, block=(4, 256))
     assert np.array_equal(np.asarray(out), np.asarray(replay))
+
+
+def test_mask_from_bits_math():
+    """The in-kernel mask math on synthetic bits: symmetric, zero diag,
+    gated by the base adjacency, and each kept edge corresponds to a
+    sub-threshold upper-triangle U[0,1) draw (the exact
+    `core.mixing.symmetric_edge_mask` formula on explicit bits)."""
+    from repro.kernels.gossip import _mask_from_bits
+    m = 8
+    bits = jnp.asarray(RNG.integers(0, 2**32, (m, m), dtype=np.uint32))
+    adj = jnp.asarray((RNG.random((m, m)) < 0.7).astype(np.float32))
+    adj = jnp.triu(adj, k=1) + jnp.triu(adj, k=1).T
+    mask = np.asarray(_mask_from_bits(bits, jnp.float32(0.5), adj))
+    assert np.array_equal(mask, mask.T)
+    assert np.all(np.diag(mask) == 0)
+    assert np.all(mask <= np.asarray(adj))
+    f = (np.asarray(bits) >> 9) | np.uint32(0x3F800000)
+    u01 = f.view(np.float32) - 1.0
+    keep = np.triu(u01 < 0.5, k=1).astype(np.float32)
+    assert np.array_equal(mask, (keep + keep.T) * np.asarray(adj))
+
+
+def test_fused_pdsgd_mask_seed_requires_keep_prob():
+    from repro.kernels import fused_pdsgd_tree
+    m = 2
+    x = {"a": _randn((m, 8), jnp.float32)}
+    g = {"a": _randn((m, 8), jnp.float32)}
+    bits = {"a": jnp.zeros((m, 8), jnp.uint32)}
+    W = jnp.eye(m)
+    with pytest.raises(ValueError, match="keep_prob"):
+        fused_pdsgd_tree(W, W, x, g, bits, 0.1,
+                         mask_seed=jnp.zeros((2,), jnp.uint32),
+                         interpret=True)
+
+
+@pytest.mark.skipif(jax.default_backend() == "tpu",
+                    reason="CPU-only gate: TPU has the lowering")
+def test_masked_gossip_krng_refuses_cpu_lowering():
+    """Same loud-failure contract as the obfuscate krng kernel: no Mosaic
+    PRNG rule off-TPU, so the in-kernel mask draw must raise rather than
+    realize a graph from some other stream."""
+    from repro.kernels import masked_gossip_update_krng
+    m = 4
+    adj = 1.0 - jnp.eye(m, dtype=jnp.float32)
+    X = _randn((m, 512), jnp.float32)
+    U = _randn((m, 512), jnp.float32)
+    B = jnp.eye(m) * 0.1
+    with pytest.raises(NotImplementedError):
+        jax.block_until_ready(masked_gossip_update_krng(
+            jnp.zeros((2,), jnp.uint32), 0.5, adj, B, X, U, interpret=True))
+
+
+@pytest.mark.skipif(jax.default_backend() != "tpu",
+                    reason="needs the Mosaic PRNG lowering")
+def test_masked_gossip_krng_replay_parity_tpu():
+    """The krng kernel exports the realized (m, m) mask; replaying it
+    through the HBM-mask kernel must reproduce the output bit-for-bit,
+    and every column tile must have drawn the identical mask (the kernel
+    re-seeds with the same words per tile)."""
+    from repro.kernels import masked_gossip_update, masked_gossip_update_krng
+    m, n = 8, 1024  # n > block so the grid has >1 tile
+    adj = 1.0 - jnp.eye(m, dtype=jnp.float32)
+    X = _randn((m, n), jnp.float32)
+    U = _randn((m, n), jnp.float32)
+    B = jnp.eye(m) * 0.1
+    seed = jnp.asarray([3, 9], jnp.uint32)
+    out, mask = masked_gossip_update_krng(seed, 0.6, adj, B, X, U,
+                                          block_n=512)
+    mask_np = np.asarray(mask)
+    assert np.array_equal(mask_np, mask_np.T)
+    assert np.all(np.diag(mask_np) == 0)
+    replay = masked_gossip_update(mask, B, X, U, block_n=512)
+    assert np.array_equal(np.asarray(out), np.asarray(replay))
+    # determinism: same seed, same realized graph
+    _, mask2 = masked_gossip_update_krng(seed, 0.6, adj, B, X, U,
+                                         block_n=512)
+    assert np.array_equal(mask_np, np.asarray(mask2))
