@@ -28,6 +28,11 @@ Prints ``name,us_per_call,derived`` CSV rows:
                        driven by launch.multihost as one process vs two
                        socket-coupled rank processes
                        (merged into BENCH_pdsgd.json)
+  * bench_overlap    : overlapped gossip — the fused ring kernel
+                       (obfuscate + staged shifts in one pallas_call) vs
+                       the eager and jitted staged-ring programs, and the
+                       pipelined socket transport vs the blocking one at
+                       world=2 (merged into BENCH_pdsgd.json)
   * bench_sharded_lm : sharded big-model PDSGD — a >=100M-param/agent LM
                        on an agents x fsdp mesh (4 fake devices) vs a
                        pure-data-parallel mean-grad baseline; reports the
@@ -988,6 +993,223 @@ def bench_multihost(steps=8, agents=4):
          f"socket_vs_inproc={overhead:.3f}x")
 
 
+_OVERLAP_RANK_SCRIPT = r'''
+"""One rank of the bench_overlap socket family (spawned twice)."""
+import hashlib, json, socket, sys, time
+import numpy as np
+sys.path.insert(0, sys.argv[1])
+from repro.dist import transport as T
+
+rank, mode, p0, p1, steps, agents, dim = (
+    int(sys.argv[2]), sys.argv[3], int(sys.argv[4]), int(sys.argv[5]),
+    int(sys.argv[6]), int(sys.argv[7]), int(sys.argv[8]))
+world = 2
+A = np.zeros((agents, agents), np.int64)
+for i in range(agents):
+    A[i, (i + 1) % agents] = A[(i + 1) % agents, i] = 1
+deg = A.sum(1)
+W = np.zeros((agents, agents), np.float32)
+for i in range(agents):
+    for j in range(agents):
+        if A[i, j]:
+            W[i, j] = 1.0 / (1 + max(deg[i], deg[j]))
+    W[i, i] = 1 - W[i].sum()
+rng = np.random.default_rng(0)
+Bm = (W * rng.uniform(0.5, 1.5, W.shape).astype(np.float32)
+      * A).astype(np.float32)
+np.fill_diagonal(Bm, 0.2)
+L = agents // world
+endpoints = {0: ("127.0.0.1", p0), 1: ("127.0.0.1", p1)}
+ls = socket.socket()
+ls.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+ls.bind(endpoints[rank])
+ls.listen(4)
+if rank == 0:  # wait until rank 1's listener is up (poll-connect probe)
+    for _ in range(200):
+        try:
+            socket.create_connection(endpoints[1], timeout=0.5).close()
+            break
+        except OSError:
+            time.sleep(0.2)
+secret = T.derive_wire_secret(0, 0)
+if mode == "blocking":
+    tr = T.SocketTransport(A, rank, world, endpoints, ls, timeout=60.0,
+                           secret=secret)
+else:
+    tr = T.PipelinedSocketTransport(A, rank, world, endpoints, ls,
+                                    timeout=60.0, secret=secret,
+                                    frames_ahead=1)
+x = rng.standard_normal((L, dim)).astype(np.float32) + rank
+t0 = time.monotonic()
+for s in range(steps):
+    u = x * 0.1  # trivial local "gradient": isolates the transport cost
+    x = tr.exchange(x, u, W, Bm, step=s)
+dt = time.monotonic() - t0
+print(json.dumps({"rank": rank, "us_per_step": dt / steps * 1e6,
+                  "sha": hashlib.sha256(x.tobytes()).hexdigest(),
+                  "drops": tr.drops, "tag_failures": tr.tag_failures,
+                  "comm_wait_s": round(tr.comm_wait_s, 4)}), flush=True)
+tr.close()
+'''
+
+
+def bench_overlap(steps=30, ring_cols=65536, sock_steps=40,
+                  sock_dim=262144, agents=8):
+    """Overlapped gossip: the two headline rows of the PR.
+
+    Ring family (in-process, m=8 torus): the Λ-draw + obfuscate + staged
+    ring shifts of Eq. (4) as (a) the eager per-direction jnp loop the
+    dense fallback runs, (b) the same program under ONE jit
+    (`ref.ring_obfuscate_gossip_ref` — the bit-parity oracle), and (c)
+    the fused `ring_obfuscate_gossip` pallas kernel that builds direction
+    d+1's v tiles in the double-buffered VMEM slot while direction d's
+    shift is consumed.  The fused kernel must match the jitted oracle
+    BITWISE (asserted inline, dropout tables too); on this CPU the
+    kernel runs in interpret mode, so (b) is the fastest row and the
+    fused-vs-staged headline compares (c) against the EAGER staging it
+    replaces — on TPU the kernel is the only row that overlaps the DMA.
+
+    Socket family (two subprocess ranks, ring m=8, D=262k): the same
+    multi-step exchange through the blocking `SocketTransport` vs the
+    `PipelinedSocketTransport` (async send thread, eager receive thread,
+    frames_ahead=1 runahead window).  Final params must agree EXACTLY
+    (sha256 asserted) with zero drops; the win on one shared CPU core is
+    eliminated serial framing work, so separate hosts see at least this.
+    """
+    import socket
+    import subprocess
+    import tempfile
+
+    import jax.random as jrandom
+
+    from repro.dist import collectives as C
+    from repro.kernels import ref as kref
+    from repro.kernels import ring_obfuscate_gossip
+
+    # --- ring family ------------------------------------------------------
+    n_data, n_pod, m = agents, 1, agents
+    b_tab = C.sample_b_draws(jrandom.key(0), m, n_data, n_pod)
+    ndirs = b_tab.shape[1] - 1
+    wts = C.torus_weights(n_data, n_pod)
+    w_tab = jnp.concatenate(
+        [jnp.full((m, 1), wts["w_self"], jnp.float32),
+         jnp.full((m, ndirs), wts["w_edge"], jnp.float32)], axis=1)
+    perms = C.perm_stack(n_data, n_pod)
+    rng = np.random.default_rng(1)
+    X = jnp.asarray(rng.standard_normal((m, ring_cols)).astype(np.float32))
+    G = jnp.asarray(rng.standard_normal((m, ring_cols)).astype(np.float32))
+    bits = jrandom.bits(jrandom.key(2), (m, ring_cols), dtype=jnp.uint32)
+    lam_bar = 0.05
+
+    def staged_eager():
+        lam = (2.0 * jnp.float32(lam_bar)) * kref.bits_to_uniform(bits)
+        u = lam * G
+        out = w_tab[:, 0:1] * X - b_tab[:, 0:1] * u
+        for d in range(ndirs):
+            v = w_tab[:, d + 1:d + 2] * X - b_tab[:, d + 1:d + 2] * u
+            out = out + perms[d] @ v
+        return out
+
+    _staged_jit = jax.jit(kref.ring_obfuscate_gossip_ref)
+    staged_jit = lambda: _staged_jit(w_tab, b_tab, perms, X, G, bits,
+                                     lam_bar)[0]
+    # one column tile per call: under CPU interpret the grid loop is pure
+    # dispatch overhead, and the double-buffered staging it drives only
+    # pays off on TPU where it overlaps a real DMA
+    fused = lambda: ring_obfuscate_gossip(w_tab, b_tab, perms, X, G, bits,
+                                          lam_bar, block_n=ring_cols)
+
+    # parity is part of the bench contract, not just the test suite
+    assert np.array_equal(np.asarray(fused()), np.asarray(staged_jit()))
+    np.testing.assert_allclose(np.asarray(staged_eager()),
+                               np.asarray(fused()), atol=2e-5, rtol=2e-5)
+    keep = jnp.ones((m, ndirs), jnp.float32).at[::2, 0].set(0.0)
+    b_m = C.mask_b_draws(b_tab, keep)
+    w_m = (w_tab.at[:, 0].add(w_tab[:, 1] * (1 - keep[:, 0])))\
+        .at[:, 1].set(w_tab[:, 1] * keep[:, 0])
+    drop_fused = ring_obfuscate_gossip(w_m, b_m, perms, X, G, bits, lam_bar,
+                                       block_n=ring_cols)
+    drop_ref = jax.jit(kref.ring_obfuscate_gossip_ref)(
+        w_m, b_m, perms, X, G, bits, lam_bar)[0]
+    np.testing.assert_allclose(np.asarray(drop_fused), np.asarray(drop_ref),
+                               atol=2e-6, rtol=2e-6)
+
+    results = {
+        "ring_staged_eager": _timeit(staged_eager, n=steps),
+        "ring_staged_jit": _timeit(staged_jit, n=steps),
+        "ring_fused": _timeit(fused, n=steps),
+    }
+
+    # --- socket family ----------------------------------------------------
+    def _free_port():
+        s = socket.socket()
+        s.bind(("127.0.0.1", 0))
+        port = s.getsockname()[1]
+        s.close()
+        return port
+
+    import socket
+    with tempfile.NamedTemporaryFile("w", suffix=".py", delete=False) as f:
+        f.write(_OVERLAP_RANK_SCRIPT)
+        script = f.name
+    src_dir = os.path.join(REPO_ROOT, "src")
+    sock_rows = {}
+    try:
+        for mode in ("blocking", "pipelined"):
+            p0, p1 = _free_port(), _free_port()
+            procs = []
+            for r in range(2):
+                procs.append(subprocess.Popen(
+                    [sys.executable, script, src_dir, str(r), mode, str(p0),
+                     str(p1), str(sock_steps), str(agents), str(sock_dim)],
+                    stdout=subprocess.PIPE, stderr=subprocess.PIPE,
+                    text=True))
+                time.sleep(0.3)
+            outs = []
+            for p in procs:
+                stdout, stderr = p.communicate(timeout=600)
+                if p.returncode != 0:
+                    raise RuntimeError(f"overlap rank ({mode}) failed:\n"
+                                       + stderr[-2000:])
+                outs.append(json.loads(stdout.strip().splitlines()[-1]))
+            assert all(o["drops"] == 0 and o["tag_failures"] == 0
+                       for o in outs), outs
+            sock_rows[mode] = outs
+    finally:
+        os.unlink(script)
+    assert all(sock_rows["blocking"][r]["sha"]
+               == sock_rows["pipelined"][r]["sha"] for r in range(2)), \
+        "pipelined transport diverged from the blocking trajectory"
+    results["socket_blocking_world2"] = max(
+        o["us_per_step"] for o in sock_rows["blocking"])
+    results["socket_pipelined_world2"] = max(
+        o["us_per_step"] for o in sock_rows["pipelined"])
+
+    fused_x = results["ring_staged_eager"] / results["ring_fused"]
+    pipe_x = (results["socket_blocking_world2"]
+              / results["socket_pipelined_world2"])
+    payload = {
+        "workload": (f"ring m={agents} cols={ring_cols} (kernel family) / "
+                     f"world=2 D={sock_dim} steps={sock_steps} "
+                     f"(socket family)"),
+        "paths": {
+            name: {"us_per_step": round(us, 2)}
+            for name, us in results.items()
+        },
+        "fused_vs_staged_eager": round(fused_x, 3),
+        "pipelined_vs_blocking": round(pipe_x, 3),
+        "comm_wait_s": {mode: [o["comm_wait_s"] for o in sock_rows[mode]]
+                        for mode in sock_rows},
+        "backend": jax.default_backend(),
+    }
+    _write_bench_json({"bench_overlap": payload})
+    for name, us in results.items():
+        emit(f"bench_overlap_{name}", us, "")
+    emit("bench_overlap_ratios", 0.0,
+         f"fused_vs_staged={fused_x:.3f}x;pipelined_vs_blocking="
+         f"{pipe_x:.3f}x")
+
+
 _SHARDED_LM_SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
@@ -1317,6 +1539,7 @@ BENCHES = {
     "bench_privacy_audit": bench_privacy_audit,
     "bench_fault_injection": bench_fault_injection,
     "bench_multihost": bench_multihost,
+    "bench_overlap": bench_overlap,
     "bench_sharded_lm": bench_sharded_lm,
     "bench_serve": bench_serve,
     "kernel_benches": kernel_benches,

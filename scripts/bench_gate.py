@@ -4,7 +4,10 @@
 Compares a fresh BENCH_pdsgd.json against the previous (committed) run and
 fails on a >30% us_per_step regression in ANY path (bench_step_path rows at
 the top level, bench_pipeline rows nested).  Paths present in only one file
-are skipped, so adding a new benchmark never trips the gate.
+are skipped, so adding a new benchmark never trips the gate.  Every
+dict node holding a ``us_per_step`` is collected by its JSON path, so the
+nested families (bench_pipeline through bench_overlap's fused-ring and
+pipelined-socket rows) are all gated uniformly.
 
   python scripts/bench_gate.py <old.json> <new.json>
 

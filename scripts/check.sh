@@ -48,6 +48,9 @@ python benchmarks/run.py --only bench_fault_injection
 echo "== multi-controller perf (bench_multihost) =="
 python benchmarks/run.py --only bench_multihost
 
+echo "== overlapped gossip perf (bench_overlap) =="
+python benchmarks/run.py --only bench_overlap
+
 echo "== sharded big-model perf (bench_sharded_lm) =="
 python benchmarks/run.py --only bench_sharded_lm
 
@@ -130,6 +133,33 @@ try:
          "generation_pass2": s2["generation"]}))
 finally:
     shutil.rmtree(root, ignore_errors=True)
+EOF
+
+echo "== pipelined-socket smoke (2 ranks, bit-match vs blocking) =="
+python - <<'EOF'
+import json, shutil, subprocess, sys, tempfile
+shas = {}
+for mode, extra in (("blocking", []),
+                    ("pipelined", ["--frames-ahead", "2"])):
+    root = tempfile.mkdtemp(prefix=f"check_pipe_{mode}_")
+    try:
+        out = subprocess.run(
+            [sys.executable, "-m", "repro.launch.multihost",
+             "--arch", "stablelm-3b-tiny", "--agents", "4", "--world", "2",
+             "--steps", "4", "--per-agent-batch", "2", "--seq-len", "16",
+             "--seed", "0", "--checkpoint-dir", root,
+             "--checkpoint-every", "4", "--timeout", "60"] + extra,
+            capture_output=True, text=True, check=True)
+        s = json.loads(out.stdout.strip().splitlines()[-1])
+        ranks = s["multihost_summary"]["ranks"]
+        assert s["multihost_summary"]["ok"], s
+        for r in ("0", "1"):
+            assert ranks[r]["comm"]["drops"] == 0, ranks
+        shas[mode] = {r: ranks[r]["x_sha256"] for r in ("0", "1")}
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+assert shas["blocking"] == shas["pipelined"], shas
+print("pipelined smoke ok: final params bit-match blocking", shas["blocking"])
 EOF
 
 echo "== fault-injection smoke (crash churn + raw NaN chaos, skip-and-hold) =="

@@ -142,6 +142,7 @@ def pdsgd_update(
     mesh=None,
     leaf_specs: Pytree | None = None,
     kernel_rng: bool | None = None,
+    torus_shape: tuple[int, int] | None = None,
 ) -> Pytree:
     """One iteration of Eq. (4): x^{k+1} = W_k x^k - B^k Lambda^k g^k.
 
@@ -174,6 +175,20 @@ def pdsgd_update(
     disappears and the kernel PRNG is seeded from the same per-step
     Lambda key.
 
+    ``kernel_layout="ring"`` is the communication-overlap layout: the
+    realized (W, B^k) are split into per-direction tables
+    (`dist.collectives.directional_weights` / `rows_from_dense` — the
+    coupling support must lie inside the ``torus_shape`` = (n_data,
+    n_pod) torus adjacency, default (m, 1) single ring) and the whole
+    Eq. (4) update runs through `kernels.ring_pdsgd_tree`: Lambda-draw,
+    obfuscate and the staged per-direction v_ij exchange fused in one
+    pallas_call with double-buffered VMEM staging.  ``mask`` is
+    subsumed — a dropped edge arrives here as a zero entry of the
+    realized W_k/B^k, so its table slot is zero and the kernel emits an
+    exactly-zero v for it.  ``observe=True`` records the KERNEL's own
+    staged wire stream (scattered to the dense v_ij layout), and
+    ``corrupt`` is refused (the guarded fault path stays dense).
+
     ``observe=True`` additionally returns the auditor-grade observation
     record of `privacy.observe.full_record` — the wire tensor v_ij plus
     the private quantities adversary views are restrictions of — as
@@ -198,8 +213,47 @@ def pdsgd_update(
     if use_pallas is None:
         from ..kernels import default_use_pallas
         use_pallas = default_use_pallas()
-    if kernel_layout not in ("concat", "leafwise"):
+    if kernel_layout not in ("concat", "leafwise", "ring"):
         raise ValueError(f"unknown kernel_layout {kernel_layout!r}")
+    if use_pallas and kernel_layout == "ring":
+        if corrupt is not None:
+            raise ValueError(
+                "kernel_layout='ring' does not carry corrupt-link "
+                "injection; the guarded fault path stays dense")
+        from ..dist import collectives as C
+        from ..kernels import ring_pdsgd_tree, runtime
+        m = jax.tree.leaves(params)[0].shape[0]
+        n_data, n_pod = torus_shape if torus_shape is not None else (m, 1)
+        if n_data * n_pod != m:
+            raise ValueError(
+                f"torus_shape {n_pod}x{n_data} does not hold m={m} agents")
+        tabs = C.directional_weights(W, n_data, n_pod)
+        w_tab = jnp.concatenate([tabs["w_self"][:, None], tabs["w_dir"]],
+                                axis=1)
+        b_rows = C.rows_from_dense(B, n_data, n_pod)
+        perms = C.perm_stack(n_data, n_pod)
+        bits = seed = None
+        if runtime.resolve_kernel_rng(kernel_rng):
+            seed = jax.random.bits(
+                agent_key(jax.random.fold_in(key, 1), step, 0), (2,),
+                jnp.uint32)
+        else:
+            bits = _per_agent_bits(jax.random.fold_in(key, 1), step, grads)
+        out = ring_pdsgd_tree(w_tab, b_rows, perms, params, grads, bits,
+                              lam_bar, interpret=interpret, observe=observe,
+                              kernel_rng=kernel_rng, seed=seed)
+        if not observe:
+            return out
+        new_params, flats = out
+        from ..privacy import observe as O
+        # Scatter the kernel's sender-major staged stream to the dense
+        # v_ij layout: V[i, j] = v[d, j] where perms[d][i, j] == 1.
+        V = sum(perms[di][:, :, None] * flats["v"][di][None, :, :]
+                for di in range(perms.shape[0]))
+        record = O.full_record(
+            v=V, support=support, x_flat=flats["x"], u_flat=flats["u"],
+            g_flat=O.flatten_agents(grads), W=W, B=B)
+        return new_params, record
     if use_pallas and kernel_layout == "leafwise":
         if observe:
             raise ValueError(

@@ -37,6 +37,7 @@ __all__ = [
     "directional_keep",
     "directional_weights",
     "mask_b_draws",
+    "perm_stack",
     "rows_from_dense",
 ]
 
@@ -98,6 +99,14 @@ def _perm_matrices(n_data: int, n_pod: int) -> list[np.ndarray]:
             Pm[i, j] = 1.0
         mats.append(Pm)
     return mats
+
+
+def perm_stack(n_data: int, n_pod: int) -> jax.Array:
+    """The `_perm_matrices` list stacked to one (ndirs, m, m) float32
+    array — the direction-shift operand `kernels.ring_gossip_update` /
+    `ring_obfuscate_gossip` consume (each 0/1 matmul reproduces the
+    corresponding `ppermute` bit-exactly for finite v)."""
+    return jnp.asarray(np.stack(_perm_matrices(n_data, n_pod)))
 
 
 def dense_coupling(b: jax.Array, n_data: int, n_pod: int,
@@ -187,7 +196,9 @@ def torus_gossip_pdsgd(mesh, params: Pytree, u: Pytree, b: jax.Array, *,
                        leaf_specs: Pytree | None = None,
                        W: jax.Array | None = None,
                        capture: bool = False,
-                       finite_guard: bool = False) -> Pytree:
+                       finite_guard: bool = False,
+                       schedule: str = "pipelined",
+                       fused: bool = False) -> Pytree:
     """x' = W x - B^k u via neighbor-only exchanges on the mesh torus.
 
     params/u: pytrees with leading agent axis (m, ...); b: (m, 1+ndirs)
@@ -237,7 +248,36 @@ def torus_gossip_pdsgd(mesh, params: Pytree, u: Pytree, b: jax.Array, *,
     semantics route through `faults.inject.guarded_gossip_mix` (clip
     disabled), whose explicit link-sum ordering is allclose- but not
     bit-comparable to the einsum.
+
+    ``schedule`` picks the shard_map loop order.  ``"staged"`` is the
+    historic compute-all-then-shift body: direction d's v is computed,
+    tapped, permuted and accumulated before direction d+1 starts.
+    ``"pipelined"`` (default) issues direction d's `ppermute` first and
+    computes direction d+1's v WHILE that collective's DMA is in flight,
+    accumulating d when the shift lands — a software pipeline over the
+    link.  The two schedules build the same dataflow graph (v_{d+1}
+    never depends on the shifted d), the per-direction accumulation
+    order is unchanged, and the tap still reads the exact staged buffer
+    before its collective, so results and captured wire streams are
+    bit-identical; tests pin this.
+
+    ``fused=True`` routes the SINGLE-HOST fallback through the Pallas
+    ring kernel (`kernels.ring_gossip_update`): per-direction tables +
+    0/1 `perm_stack` shifts with double-buffered VMEM v staging, instead
+    of the dense `gossip_mix` einsums.  Bit-identical to the jitted
+    staged-ring oracle (`kernels.ref.ring_gossip_ref`) and allclose to
+    the dense fallback (different contraction order); the capture tap
+    returns the kernel's own staged buffers scattered to the dense
+    layout.  Ignored on the shard_map path (the ppermute pipeline IS the
+    fused schedule there); refused with ``finite_guard`` — fault
+    scenarios keep the dense guarded path.
     """
+    if schedule not in ("staged", "pipelined"):
+        raise ValueError(f"unknown schedule {schedule!r}; "
+                         "expected 'staged' or 'pipelined'")
+    if fused and finite_guard:
+        raise ValueError("fused=True does not compose with finite_guard; "
+                         "fault scenarios use the dense guarded path")
     if capture and leaf_specs is not None:
         raise ValueError(
             "capture=True flattens each agent's leaves to (m, D) and so "
@@ -264,6 +304,46 @@ def torus_gossip_pdsgd(mesh, params: Pytree, u: Pytree, b: jax.Array, *,
     mesh_matches = (axes
                     and (mesh.shape.get("pod", 1) if "pod" in axes else 1) == n_pod
                     and (mesh.shape.get("data", 1) if "data" in axes else 1) == n_data)
+    if not mesh_matches and fused:
+        # Single-host fused fallback: the ring kernel applies the same
+        # per-direction tables the shard_map path shards, with v staged
+        # in VMEM instead of crossing a mesh link.
+        from ..kernels import ring_gossip_update
+        from ..kernels.ops import _flatten_concat, _pad_cols, _unflatten
+        if leaf_specs is not None:
+            raise ValueError("fused=True flattens each agent's leaves to "
+                             "(m, D) and needs replicated non-agent dims "
+                             "(leaf_specs=None)")
+        if W is None:
+            wts = torus_weights(n_data, n_pod)
+            w_tab = jnp.broadcast_to(
+                jnp.asarray([wts["w_self"]]
+                            + [wts["w_edge"]] * len(dirs),
+                            jnp.float32)[None],
+                (m, 1 + len(dirs)))
+        else:
+            tabs = directional_weights(W, n_data, n_pod)
+            w_tab = jnp.concatenate(
+                [tabs["w_self"][:, None], tabs["w_dir"]], axis=1)
+        perms = perm_stack(n_data, n_pod)
+        x_flat, sizes, leaves = _flatten_concat(params)
+        u_flat, _, _ = _flatten_concat(u)
+        x_flat, pad = _pad_cols(x_flat, 512)
+        u_flat, _ = _pad_cols(u_flat, 512)
+        res = ring_gossip_update(w_tab, b, perms, x_flat, u_flat,
+                                 capture=capture)
+        out_flat = res[0] if capture else res
+        if pad:
+            out_flat = out_flat[:, :-pad]
+        out = _unflatten(out_flat, sizes, leaves, params)
+        if not capture:
+            return out
+        v_dir = res[1]  # (ndirs, m, D_padded), sender-major staged stream
+        ncols = sum(sizes)
+        V = sum(perms[di][:, :, None] * v_dir[di][None, :, :ncols]
+                for di in range(len(dirs)))
+        return out, V
+
     if not mesh_matches:
         # Dense single-host fallback: same math, explicit matrices.
         from ..core.pdsgd import gossip_mix
@@ -326,20 +406,35 @@ def torus_gossip_pdsgd(mesh, params: Pytree, u: Pytree, b: jax.Array, *,
             lambda x, uu: link_message(coeff(w_loc, 0, x),
                                        coeff(b_loc, 0, x), x, uu),
             x_loc, u_loc)
-        taps = []
-        for di, (axis, size, shift) in enumerate(dirs):
-            perm = [(d, (d + shift) % size) for d in range(size)]
+
+        def mk_v(di):
             # The sender computes the mixed v_ij; only v crosses the link.
-            v = jax.tree.map(
+            return jax.tree.map(
                 lambda x, uu: link_message(coeff(w_loc, 1 + di, x),
                                            coeff(b_loc, 1 + di, x), x, uu),
                 x_loc, u_loc)
+
+        taps = []
+        if schedule == "pipelined":
+            v = mk_v(0)
+        for di, (axis, size, shift) in enumerate(dirs):
+            perm = [(d, (d + shift) % size) for d in range(size)]
+            if schedule == "staged":
+                v = mk_v(di)
             if capture:
                 # Tap at the SENDER, before the collective: this is the
-                # exact buffer the ppermute puts on the wire.
+                # exact buffer the ppermute puts on the wire — identical
+                # under both schedules.
                 taps.append(_flat_local(v))
             shifted = jax.tree.map(
                 lambda leaf: jax.lax.ppermute(leaf, axis, perm), v)
+            if schedule == "pipelined" and di + 1 < len(dirs):
+                # Software pipeline: stage direction d+1's v while
+                # direction d's ppermute DMA is in flight.  v_{d+1} does
+                # not depend on the shifted d, so the values (and the
+                # accumulation order below) are unchanged — only the
+                # program order exposes the overlap to the scheduler.
+                v = mk_v(di + 1)
             if finite_guard:
                 # Receive-side guard: a non-finite incoming contribution
                 # is dropped as if the link were down (exact zero).

@@ -21,6 +21,15 @@ boundary physically is:
                           only bytes on the wire are (step, sender,
                           receiver, len, v_ij payload).  This is the
                           multi-controller deployment channel.
+* `PipelinedSocketTransport` — the overlapped flavor of the same wire
+                          protocol: a bounded-outbox send thread and an
+                          eager receive thread pump frames while the
+                          caller computes, per-link lazy staging replaces
+                          the dense column materialization, and a
+                          ``frames_ahead`` window lets a rank start step
+                          k+1's sends before step k's stragglers land.
+                          Bit-identical trajectories to `SocketTransport`
+                          (same frames, same accumulation order).
 
 Canonical accumulation order
 ----------------------------
@@ -54,9 +63,12 @@ from __future__ import annotations
 import hashlib
 import hmac
 import os
+import queue
 import select
 import socket
 import struct
+import threading
+import time
 from typing import Any, Sequence
 
 import numpy as np
@@ -73,6 +85,7 @@ __all__ = [
     "InProcessTransport",
     "ShardMapTransport",
     "SocketTransport",
+    "PipelinedSocketTransport",
     "FRAME_HEADER",
     "WIRE_TAG_SIZE",
     "derive_wire_secret",
@@ -390,6 +403,15 @@ class SocketTransport(Transport):
     ``sent_frames`` so a test can prove the wire carries v bytes and
     nothing else.
 
+    Counters: ``drops`` is owned by `exchange` — it counts, at
+    accumulate time, every remote contribution a local agent needed this
+    step but did not get (so a dead peer's links add to it EVERY step
+    they stay down, whether the peer died mid-pump or steps ago);
+    ``tag_failures`` counts frames rejected by HMAC verification;
+    ``comm_wait_s`` accumulates wall time spent waiting on the wire
+    (the receive pump here; both the frames_ahead gate and the
+    needed-frames wait in the pipelined subclass).
+
     ``secret`` (a per-run shared key, typically `derive_wire_secret`)
     turns on frame authentication: each frame carries an HMAC-SHA256 tag
     over header+payload, and the pump rejects any frame whose tag is
@@ -418,7 +440,8 @@ class SocketTransport(Transport):
         self.tag_failures = 0  # frames rejected by HMAC verification
         self.sent_frames: list[bytes] = []
         self.dead_ranks: set[int] = set()
-        self.drops = 0  # contributions lost to peer death (all steps)
+        self.drops = 0  # needed contributions missing at accumulate time
+        self.comm_wait_s = 0.0  # wall time spent waiting on the wire
         self._listen = listen_sock
         self._socks: dict[int, socket.socket] = {}
         self._rbuf: dict[tuple[int, int, int], np.ndarray] = {}
@@ -479,18 +502,26 @@ class SocketTransport(Transport):
     def _pump(self, owed: dict[int, int]) -> None:
         """Drain frames from peers until nothing is owed (or owing peers
         die/time out).  Out-of-step frames (a peer running ahead) are
-        buffered for their step."""
+        buffered for their step.  Does NOT count drops — `exchange` owns
+        that counter and tallies what is actually missing at accumulate
+        time."""
         import time as _t
-        deadline = _t.monotonic() + self.timeout
+        t0 = _t.monotonic()
+        deadline = t0 + self.timeout
+        try:
+            self._pump_inner(owed, deadline)
+        finally:
+            self.comm_wait_s += _t.monotonic() - t0
+
+    def _pump_inner(self, owed: dict[int, int], deadline: float) -> None:
+        import time as _t
         while any(n > 0 for n in owed.values()):
             socks = {self._socks[r]: r for r, n in owed.items()
                      if n > 0 and r not in self.dead_ranks
                      and r in self._socks}
             if not socks:
                 for r, n in owed.items():
-                    if n > 0:
-                        self.drops += n
-                        owed[r] = 0
+                    owed[r] = 0
                 return
             wait = max(0.0, deadline - _t.monotonic())
             ready, _, _ = select.select(list(socks), [], [], min(wait, 1.0))
@@ -578,7 +609,11 @@ class SocketTransport(Transport):
                     if v is not None:
                         contribs[j] = v
                     else:
-                        self.drops += 0  # already counted in _pump
+                        # The one place drops are counted: a needed remote
+                        # contribution that never arrived, whatever the
+                        # reason (peer died mid-pump, or was dead before
+                        # the step started).
+                        self.drops += 1
             out[l] = accumulate(
                 i, link_message(W[i, i], B[i, i], x[l], u[l]), contribs)
         if not capture:
@@ -596,3 +631,242 @@ class SocketTransport(Transport):
             self._listen.close()
         except OSError:
             pass
+
+
+class PipelinedSocketTransport(SocketTransport):
+    """`SocketTransport` with the comm/compute overlap the blocking
+    exchange leaves on the table — same wire protocol (frame layout,
+    HMAC, handshake), bit-identical trajectories.
+
+    What changes and why it is faster:
+
+    * **Lazy per-link staging.**  The blocking exchange materializes the
+      dense `capture_columns` tensor — (m, L) rows including every
+      non-edge — and then RECOMPUTES each local link's message in the
+      accumulate loop.  Here each realized link's ``v`` row is computed
+      exactly once (`link_message`, eagerly — the bit-parity contract)
+      and reused for both the wire and the local accumulation.
+    * **Send thread + bounded outbox.**  Frames are enqueued as
+      (header, payload-memoryview, tag) scatter-gather triples — zero
+      user-space copies — and a daemon thread drains them with
+      ``sendmsg`` while the caller moves on to the accumulate loop (and,
+      with ``frames_ahead``, the next step's gradient/obfuscate
+      compute).  The outbox holds at most ``outbox_frames`` frames:
+      a slow or stalled peer exerts backpressure on `exchange` instead
+      of buffering unboundedly.
+    * **Eager receive thread.**  A select loop drains peer sockets into
+      ``_rbuf`` the moment frames arrive (``recv_into`` a preallocated
+      array, streaming HMAC), so a peer's step-k frames are typically
+      already buffered when our step-k accumulate asks for them.
+    * **``frames_ahead`` window.**  `exchange(step=k)` first waits until
+      ``k - (newest_step_sent_by_slowest_live_peer + 1) <= frames_ahead``
+      — with 0 every rank stays in lockstep with its slowest peer; with
+      f > 0 a rank may run up to f steps ahead (its sends buffer on the
+      peer side) before blocking, which is what absorbs stragglers.
+
+    Wait time on both gates accumulates into ``comm_wait_s``; ``drops``
+    keeps the `exchange`-owned accounting of the base class.
+
+    ``capture=True`` falls back to the dense `capture_columns` tensor
+    for the returned record (the audit path wants the full column block;
+    entry-for-entry the same math as the staged rows).
+    """
+
+    def __init__(self, *args, outbox_frames: int = 64,
+                 frames_ahead: int = 1, **kwargs):
+        if outbox_frames < 1:
+            raise ValueError(f"outbox_frames must be >= 1, got "
+                             f"{outbox_frames}")
+        if frames_ahead < 0:
+            raise ValueError(f"frames_ahead must be >= 0, got "
+                             f"{frames_ahead}")
+        self.frames_ahead = frames_ahead
+        self._outbox: queue.Queue = queue.Queue(outbox_frames)
+        self._cv = threading.Condition()
+        self._peer_step: dict[int, int] = {}
+        self._stopping = False
+        super().__init__(*args, **kwargs)
+        for s in self._socks.values():
+            s.setsockopt(socket.SOL_SOCKET, socket.SO_SNDBUF, 4 << 20)
+            s.setsockopt(socket.SOL_SOCKET, socket.SO_RCVBUF, 4 << 20)
+        self._tx = threading.Thread(target=self._send_loop, daemon=True)
+        self._rx = threading.Thread(target=self._recv_loop, daemon=True)
+        self._tx.start()
+        self._rx.start()
+
+    def _mark_dead_notify(self, rank: int) -> None:
+        with self._cv:
+            self.mark_dead(rank)
+            self._cv.notify_all()
+
+    def _send_loop(self) -> None:
+        while True:
+            try:
+                item = self._outbox.get(timeout=0.2)
+            except queue.Empty:
+                if self._stopping:
+                    return
+                continue
+            if item is None:
+                return
+            r, bufs = item
+            if r in self.dead_ranks:
+                continue
+            try:
+                s = self._socks[r]
+                mvs = [b if isinstance(b, memoryview)
+                       else memoryview(b) for b in bufs]
+                while mvs:
+                    sent = s.sendmsg(mvs)
+                    while mvs and sent >= len(mvs[0]):
+                        sent -= len(mvs[0])
+                        mvs.pop(0)
+                    if mvs and sent:
+                        mvs[0] = mvs[0][sent:]
+            except (KeyError, ConnectionError, OSError):
+                self._mark_dead_notify(r)
+
+    def _recv_loop(self) -> None:
+        while not self._stopping:
+            socks = {s: r for r, s in list(self._socks.items())
+                     if r not in self.dead_ranks}
+            if not socks:
+                time.sleep(0.01)
+                continue
+            try:
+                ready, _, _ = select.select(list(socks), [], [], 0.2)
+            except (OSError, ValueError):
+                continue  # a socket closed under us; re-snapshot
+            for s in ready:
+                r = socks[s]
+                hdr = _recv_exact(s, FRAME_HEADER.size)
+                if hdr is None:
+                    self._mark_dead_notify(r)
+                    continue
+                fstep, sender, receiver, nbytes = FRAME_HEADER.unpack(hdr)
+                vec = np.empty(nbytes // 4, dtype=np.float32)
+                mv = memoryview(vec).cast("B")
+                got, ok = 0, True
+                while got < nbytes:
+                    try:
+                        n = s.recv_into(mv[got:], nbytes - got)
+                    except (ConnectionError, OSError):
+                        n = 0
+                    if n == 0:
+                        ok = False
+                        break
+                    got += n
+                if not ok:
+                    self._mark_dead_notify(r)
+                    continue
+                if self.secret is not None:
+                    tag = _recv_exact(s, WIRE_TAG_SIZE)
+                    h = hmac.new(self.secret, hdr, hashlib.sha256)
+                    h.update(mv)
+                    if tag is None or not hmac.compare_digest(
+                            tag, h.digest()):
+                        self.tag_failures += 1
+                        self._mark_dead_notify(r)
+                        continue
+                with self._cv:
+                    self._rbuf[(fstep, sender, receiver)] = vec
+                    self._peer_step[r] = max(
+                        self._peer_step.get(r, -1), fstep)
+                    self._cv.notify_all()
+
+    def exchange(self, x_local, u_local, W, B, *, step: int = 0,
+                 capture: bool = False):
+        x = np.asarray(x_local, dtype=np.float32)
+        u = np.asarray(u_local, dtype=np.float32)
+        W = np.asarray(W, dtype=np.float32)
+        B = np.asarray(B, dtype=np.float32)
+        L, lo = self.block, self.local_lo
+        if x.shape[0] != L:
+            raise ValueError(f"rank {self.rank} owns {L} agents, got "
+                             f"{x.shape[0]} rows")
+        # frames_ahead gate: don't outrun the slowest live peer's observed
+        # sends by more than the window.
+        t0 = time.monotonic()
+        deadline = t0 + self.timeout
+        with self._cv:
+            while True:
+                live = [r for r in self.peers if r not in self.dead_ranks]
+                if not live:
+                    break
+                slowest = min(self._peer_step.get(r, -1) for r in live)
+                if step - (slowest + 1) <= self.frames_ahead:
+                    break
+                if time.monotonic() >= deadline:
+                    break  # a silently-stalled peer; the needed-frames
+                           # wait below owns the final timeout/drop call
+                self._cv.wait(0.1)
+        self.comm_wait_s += time.monotonic() - t0
+        # Lazy per-link staging: only realized links are computed, each
+        # row exactly once, reused by the accumulate loop below.  Eager
+        # numpy ops — same bit-parity contract as the blocking path.
+        staged: dict[tuple[int, int], np.ndarray] = {}
+        for l, j in enumerate(range(lo, lo + L)):
+            for i in self._nbrs[j]:
+                i = int(i)
+                row = link_message(W[i, j], B[i, j], x[l], u[l])
+                staged[(j, i)] = row
+                r = self.owner(i)
+                if r == self.rank:
+                    continue
+                hdr = FRAME_HEADER.pack(step, j, i, row.nbytes)
+                bufs: list = [hdr, memoryview(row).cast("B")]
+                if self.secret is not None:
+                    h = hmac.new(self.secret, hdr, hashlib.sha256)
+                    h.update(bufs[1])
+                    bufs.append(h.digest())
+                if self.audit_wire:
+                    self.sent_frames.append(b"".join(bytes(b)
+                                                     for b in bufs))
+                # Bounded: blocks (backpressure) when outbox_frames
+                # frames are already in flight.
+                self._outbox.put((r, bufs))
+        # Wait for everything a local agent needs this step.
+        needed = [(step, int(j), int(i))
+                  for i in self.local_agents for j in self._nbrs[i]
+                  if self.owner(int(j)) != self.rank]
+        t0 = time.monotonic()
+        deadline = t0 + self.timeout
+        with self._cv:
+            while True:
+                missing = [k for k in needed if k not in self._rbuf
+                           and self.owner(k[1]) not in self.dead_ranks]
+                if not missing or time.monotonic() >= deadline:
+                    break
+                self._cv.wait(0.2)
+        self.comm_wait_s += time.monotonic() - t0
+        # Canonical accumulation per local receiver, staged rows reused.
+        out = np.empty_like(x)
+        with self._cv:
+            for l, i in enumerate(range(lo, lo + L)):
+                contribs: dict[int, np.ndarray] = {}
+                for j in self._nbrs[i]:
+                    j = int(j)
+                    if self.owner(j) == self.rank:
+                        contribs[j] = staged[(j, i)]
+                    else:
+                        v = self._rbuf.pop((step, j, i), None)
+                        if v is not None:
+                            contribs[j] = v
+                        else:
+                            self.drops += 1
+                out[l] = accumulate(
+                    i, link_message(W[i, i], B[i, i], x[l], u[l]), contribs)
+        if not capture:
+            return out
+        return out, capture_columns(W, B, x, u, lo=lo)
+
+    def close(self) -> None:
+        self._stopping = True
+        try:
+            self._outbox.put_nowait(None)
+        except queue.Full:
+            pass
+        for t in (getattr(self, "_tx", None), getattr(self, "_rx", None)):
+            if t is not None and t.is_alive():
+                t.join(timeout=2.0)
+        super().close()

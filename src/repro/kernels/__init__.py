@@ -3,6 +3,8 @@ from .ops import (flash_attention, gossip_update, masked_gossip_update,
                   guarded_gossip_update, obfuscate_update,
                   ssd_intra_chunk, obfuscate_tree, gossip_tree,
                   fused_pdsgd_tree, sharded_pdsgd_tree,
+                  ring_gossip_update, ring_obfuscate_gossip,
+                  ring_obfuscate_gossip_krng, ring_pdsgd_tree,
                   default_interpret, default_use_pallas)
 from .obfuscate import obfuscate_update_krng
 from .runtime import default_kernel_rng, resolve_kernel_rng
@@ -12,5 +14,7 @@ __all__ = ["flash_attention", "gossip_update", "masked_gossip_update",
            "guarded_gossip_update", "obfuscate_update",
            "ssd_intra_chunk", "obfuscate_tree", "gossip_tree",
            "fused_pdsgd_tree", "sharded_pdsgd_tree",
+           "ring_gossip_update", "ring_obfuscate_gossip",
+           "ring_obfuscate_gossip_krng", "ring_pdsgd_tree",
            "obfuscate_update_krng", "default_kernel_rng",
            "resolve_kernel_rng", "default_interpret", "default_use_pallas"]

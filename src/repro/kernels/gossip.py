@@ -15,6 +15,26 @@ W_k @ X - B @ U inside one pallas_call.  W_k never exists in HBM — the
 (two tiny reductions + a divide on an (m, m) VMEM tile) is free next to
 the matmuls.  The formula mirrors `core.mixing.metropolis_from_mask`
 exactly; keep the two in sync.
+
+`ring_gossip_update` / `ring_obfuscate_gossip` are the RING-SCHEDULED
+variants of the same Eq. (4) update, organized the way the torus gossip
+actually moves data (`dist.collectives.torus_gossip_pdsgd`): per-agent
+direction tables (w_tab/b_tab columns: self, then one per torus
+direction) instead of dense (m, m) matrices, a per-direction staged
+v_d = w_d ∘ X − b_d ∘ U buffer, and a 0/1 permutation matmul standing in
+for the `ppermute` shift.  The staging buffer is double-buffered in VMEM
+scratch: direction d+1's v tiles are computed while direction d's shift
+is consumed — on TPU hardware the pattern the Mosaic scheduler overlaps
+with the inter-core DMA, in interpret mode simply one fused program
+instead of the seam's many eager dispatches.  The fused variant also
+folds the Λ-draw (`obfuscate._obfuscate_math`'s b·u math) into the same
+pass, so x, g and the raw bits are read once and only x' (plus optional
+capture buffers) is written.  Dropout/fault realizations arrive through
+the tables themselves (`collectives.directional_weights` /
+`mask_b_draws` zero the dropped directions), so a dropped link
+contributes an exactly-zero v_d — no separate mask input.  The pure-jnp
+oracles (`ref.ring_gossip_ref` / `ref.ring_obfuscate_gossip_ref`) are
+the bit-parity ground truth.
 """
 from __future__ import annotations
 
@@ -23,6 +43,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from .runtime import resolve_interpret
 
@@ -307,3 +328,289 @@ def _guarded_gossip_update(mask, B, X, U, XT, UT, clip, block_n, interpret):
         out_shape=jax.ShapeDtypeStruct((m, n), X.dtype),
         interpret=interpret,
     )(mask, B, X, U, XT, UT)
+
+
+# ---------------------------------------------------------------------------
+# Ring-scheduled fused gossip (the ppermute-pipeline counterpart)
+# ---------------------------------------------------------------------------
+
+def _ring_accumulate(w, b, perm, x, u, o_ref, v_ref, stage_ref, *, ndirs,
+                     capture):
+    """Shared ring body: self term, then per-direction staged v_d shifted
+    by the 0/1 permutation and accumulated IN DIRECTION ORDER (the
+    historic ring anchor — self first, then directions 0..ndirs-1).
+
+    ``stage_ref`` is the (2, m, bn) double-buffered VMEM staging:
+    direction d is consumed from slot d%2 while direction d+1 is computed
+    into the other slot — the structure a TPU schedule overlaps with the
+    shift's DMA.  With ``capture`` the exact staged buffer is also
+    written to ``v_ref[d]`` (the wiretap tap point)."""
+    acc = w[:, 0:1] * x - b[:, 0:1] * u
+    stage_ref[0] = w[:, 1:2] * x - b[:, 1:2] * u
+    for d in range(ndirs):
+        cur, nxt = d % 2, (d + 1) % 2
+        if d + 1 < ndirs:
+            # stage direction d+1 while direction d's shift is in flight
+            stage_ref[nxt] = (w[:, d + 2:d + 3] * x
+                             - b[:, d + 2:d + 3] * u)
+        v = stage_ref[cur]
+        if capture:
+            v_ref[d] = v
+        # 0/1 permutation matmul == the ppermute shift, bit-exact for
+        # finite v (each output row selects exactly one staged row)
+        acc = acc + jax.lax.dot_general(
+            perm[d], v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def _ring_gossip_kernel(w_ref, b_ref, perm_ref, x_ref, u_ref, o_ref,
+                        *refs, ndirs, capture):
+    v_ref = refs[0] if capture else None
+    stage_ref = refs[-1]
+    x = x_ref[...].astype(jnp.float32)
+    u = u_ref[...].astype(jnp.float32)
+    _ring_accumulate(w_ref[...], b_ref[...], perm_ref[...], x, u,
+                     o_ref, v_ref, stage_ref, ndirs=ndirs, capture=capture)
+
+
+def _ring_obfuscate_kernel(w_ref, b_ref, perm_ref, x_ref, g_ref, bits_ref,
+                           scal_ref, o_ref, *refs, ndirs, capture):
+    """Λ-draw fused in: u = (2 lam_bar U(bits)) ∘ g is realized in VMEM
+    (same mantissa math as `obfuscate._obfuscate_math`) and never touches
+    HBM unless captured for the audit record."""
+    stage_ref = refs[-1]
+    x = x_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)
+    f = (bits_ref[...] >> 9) | jnp.uint32(0x3F800000)
+    u01 = jax.lax.bitcast_convert_type(f, jnp.float32) - 1.0
+    lam = (2.0 * scal_ref[0]) * u01
+    u = lam * g
+    if capture:
+        v_ref, u_ref = refs[0], refs[1]
+        u_ref[...] = u
+    else:
+        v_ref = None
+    _ring_accumulate(w_ref[...], b_ref[...], perm_ref[...], x, u,
+                     o_ref, v_ref, stage_ref, ndirs=ndirs, capture=capture)
+
+
+def _ring_tables(w_tab, b_tab, perms):
+    w_tab = jnp.asarray(w_tab, jnp.float32)
+    b_tab = jnp.asarray(b_tab, jnp.float32)
+    perms = jnp.asarray(perms, jnp.float32)
+    ndirs = perms.shape[0]
+    if w_tab.shape != b_tab.shape or w_tab.shape[1] != 1 + ndirs:
+        raise ValueError(
+            f"direction tables must be (m, 1+ndirs): w {w_tab.shape}, "
+            f"b {b_tab.shape}, perms {perms.shape}")
+    return w_tab, b_tab, perms, ndirs
+
+
+def ring_gossip_update(w_tab: jax.Array, b_tab: jax.Array,
+                       perms: jax.Array, X: jax.Array, U: jax.Array,
+                       capture: bool = False,
+                       block_n: int = DEFAULT_BLOCK_N,
+                       interpret: bool | None = None):
+    """Ring-scheduled x' = W X - B U from direction tables.
+
+    ``w_tab``/``b_tab``: (m, 1+ndirs) per-agent coefficients (column 0 =
+    self, column 1+d = this agent's weight toward direction d's
+    neighbor), as produced by `dist.collectives.directional_weights` and
+    `sample_b_draws`/`mask_b_draws`; ``perms``: (ndirs, m, m) stacked 0/1
+    receiver<-sender permutations (`dist.collectives.perm_stack`).
+    Returns ``out`` or ``(out, v)`` with ``capture=True``, where
+    ``v[d]`` is direction d's staged wire buffer — sender-major, i.e.
+    ``v[d][j]`` is what agent j put on the wire for direction d, exactly
+    what `torus_gossip_pdsgd(capture=True)` taps."""
+    w_tab, b_tab, perms, _ = _ring_tables(w_tab, b_tab, perms)
+    return _ring_gossip_update(w_tab, b_tab, perms, X, U,
+                               capture=bool(capture), block_n=block_n,
+                               interpret=resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("capture", "block_n", "interpret"))
+def _ring_gossip_update(w_tab, b_tab, perms, X, U, capture, block_n,
+                        interpret):
+    m, n = X.shape
+    nd = perms.shape[0]
+    bn = min(block_n, n)
+    assert n % bn == 0, (n, bn)
+    tab_spec = pl.BlockSpec((m, 1 + nd), lambda i: (0, 0))
+    out_specs = [pl.BlockSpec((m, bn), lambda i: (0, i))]
+    out_shape = [jax.ShapeDtypeStruct((m, n), X.dtype)]
+    if capture:
+        out_specs.append(pl.BlockSpec((nd, m, bn), lambda i: (0, 0, i)))
+        out_shape.append(jax.ShapeDtypeStruct((nd, m, n), jnp.float32))
+    out = pl.pallas_call(
+        functools.partial(_ring_gossip_kernel, ndirs=nd, capture=capture),
+        grid=(n // bn,),
+        in_specs=[
+            tab_spec,
+            tab_spec,
+            pl.BlockSpec((nd, m, m), lambda i: (0, 0, 0)),
+            pl.BlockSpec((m, bn), lambda i: (0, i)),
+            pl.BlockSpec((m, bn), lambda i: (0, i)),
+        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=[pltpu.VMEM((2, m, bn), jnp.float32)],
+        interpret=interpret,
+    )(w_tab, b_tab, perms, X, U)
+    return tuple(out) if capture else out[0]
+
+
+def ring_obfuscate_gossip(w_tab: jax.Array, b_tab: jax.Array,
+                          perms: jax.Array, X: jax.Array, G: jax.Array,
+                          bits: jax.Array, lam_bar,
+                          capture: bool = False,
+                          block_n: int = DEFAULT_BLOCK_N,
+                          interpret: bool | None = None):
+    """The fully fused ring step: Λ-draw + obfuscate + staged ring gossip
+    in one pallas_call.
+
+    ``bits``: (m, n) uint32 counter draws (the same stream the eager and
+    fused-concat paths consume, so the realized Λ matches them);
+    ``lam_bar``: the step's Λ half-range.  Returns ``out`` or, with
+    ``capture=True``, ``(out, v, u)`` where ``v`` is the (ndirs, m, n)
+    staged wire stream and ``u`` the kernel's own obfuscated-gradient
+    buffer — emitted from the kernel (not re-derived) so the audit
+    records what this path actually realized.  Dropped links arrive as
+    zeroed table entries and produce exactly-zero v rows."""
+    w_tab, b_tab, perms, _ = _ring_tables(w_tab, b_tab, perms)
+    return _ring_obfuscate_gossip(w_tab, b_tab, perms, X, G, bits,
+                                  lam_bar, capture=bool(capture),
+                                  block_n=block_n,
+                                  interpret=resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("capture", "block_n", "interpret"))
+def _ring_obfuscate_gossip(w_tab, b_tab, perms, X, G, bits, lam_bar,
+                           capture, block_n, interpret):
+    m, n = X.shape
+    nd = perms.shape[0]
+    bn = min(block_n, n)
+    assert n % bn == 0, (n, bn)
+    scal = jnp.asarray(lam_bar, jnp.float32).reshape(1)
+    tab_spec = pl.BlockSpec((m, 1 + nd), lambda i: (0, 0))
+    data_spec = pl.BlockSpec((m, bn), lambda i: (0, i))
+    out_specs = [data_spec]
+    out_shape = [jax.ShapeDtypeStruct((m, n), X.dtype)]
+    if capture:
+        out_specs += [pl.BlockSpec((nd, m, bn), lambda i: (0, 0, i)),
+                      data_spec]
+        out_shape += [jax.ShapeDtypeStruct((nd, m, n), jnp.float32),
+                      jax.ShapeDtypeStruct((m, n), jnp.float32)]
+    out = pl.pallas_call(
+        functools.partial(_ring_obfuscate_kernel, ndirs=nd,
+                          capture=capture),
+        grid=(n // bn,),
+        in_specs=[
+            tab_spec,
+            tab_spec,
+            pl.BlockSpec((nd, m, m), lambda i: (0, 0, 0)),
+            data_spec,
+            data_spec,
+            data_spec,
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=[pltpu.VMEM((2, m, bn), jnp.float32)],
+        interpret=interpret,
+    )(w_tab, b_tab, perms, X, G, bits, scal)
+    return tuple(out) if capture else out[0]
+
+
+def _ring_obfuscate_krng_kernel(w_ref, b_ref, perm_ref, x_ref, g_ref,
+                                seed_ref, scal_ref, o_ref, bits_ref,
+                                *refs, ndirs, capture):
+    """`_ring_obfuscate_kernel` with the Λ bits drawn in-VMEM by the TPU
+    PRNG — re-seeded (seed0, seed1, tile) per column tile so the stream
+    is grid-order independent, exported via ``bits_ref`` for replay
+    parity through the HBM-bits kernel (the `obfuscate_update_krng`
+    contract)."""
+    stage_ref = refs[-1]
+    i = pl.program_id(0)
+    pltpu.prng_seed(seed_ref[0], seed_ref[1], i)
+    bits = pltpu.bitcast(pltpu.prng_random_bits(o_ref.shape), jnp.uint32)
+    bits_ref[...] = bits
+    x = x_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)
+    f = (bits >> 9) | jnp.uint32(0x3F800000)
+    u01 = jax.lax.bitcast_convert_type(f, jnp.float32) - 1.0
+    lam = (2.0 * scal_ref[0]) * u01
+    u = lam * g
+    if capture:
+        v_ref, u_ref = refs[0], refs[1]
+        u_ref[...] = u
+    else:
+        v_ref = None
+    _ring_accumulate(w_ref[...], b_ref[...], perm_ref[...], x, u,
+                     o_ref, v_ref, stage_ref, ndirs=ndirs, capture=capture)
+
+
+def ring_obfuscate_gossip_krng(w_tab: jax.Array, b_tab: jax.Array,
+                               perms: jax.Array, X: jax.Array,
+                               G: jax.Array, seed: jax.Array, lam_bar,
+                               capture: bool = False,
+                               block_n: int = DEFAULT_BLOCK_N,
+                               interpret: bool | None = None):
+    """TPU-only fused ring step with in-VMEM Λ randomness.
+
+    ``seed``: (2,) uint32/int32 PRNG words (derive from the step's Λ
+    key).  Returns ``(out, bits)`` — or ``(out, bits, v, u)`` with
+    ``capture=True`` — where ``bits`` is the uint32 draw the kernel
+    used; feed it back through `ring_obfuscate_gossip` to pin the two
+    randomness paths bit-for-bit.  Raises at lowering on non-TPU
+    backends (no Mosaic PRNG rule on CPU, even under ``interpret=True``)
+    — the `runtime.default_kernel_rng` knob keeps this path off
+    everywhere it cannot run."""
+    w_tab, b_tab, perms, _ = _ring_tables(w_tab, b_tab, perms)
+    return _ring_obfuscate_gossip_krng(
+        w_tab, b_tab, perms, X, G, seed, lam_bar, capture=bool(capture),
+        block_n=block_n, interpret=resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("capture", "block_n", "interpret"))
+def _ring_obfuscate_gossip_krng(w_tab, b_tab, perms, X, G, seed, lam_bar,
+                                capture, block_n, interpret):
+    m, n = X.shape
+    nd = perms.shape[0]
+    bn = min(block_n, n)
+    assert n % bn == 0, (n, bn)
+    seed = jnp.asarray(seed, jnp.int32)
+    assert seed.shape == (2,), seed.shape
+    scal = jnp.asarray(lam_bar, jnp.float32).reshape(1)
+    tab_spec = pl.BlockSpec((m, 1 + nd), lambda i: (0, 0))
+    data_spec = pl.BlockSpec((m, bn), lambda i: (0, i))
+    out_specs = [data_spec, data_spec]
+    out_shape = [jax.ShapeDtypeStruct((m, n), X.dtype),
+                 jax.ShapeDtypeStruct((m, n), jnp.uint32)]
+    if capture:
+        out_specs += [pl.BlockSpec((nd, m, bn), lambda i: (0, 0, i)),
+                      data_spec]
+        out_shape += [jax.ShapeDtypeStruct((nd, m, n), jnp.float32),
+                      jax.ShapeDtypeStruct((m, n), jnp.float32)]
+    out = pl.pallas_call(
+        functools.partial(_ring_obfuscate_krng_kernel, ndirs=nd,
+                          capture=capture),
+        grid=(n // bn,),
+        in_specs=[
+            tab_spec,
+            tab_spec,
+            pl.BlockSpec((nd, m, m), lambda i: (0, 0, 0)),
+            data_spec,
+            data_spec,
+            pl.BlockSpec((2,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=[pltpu.VMEM((2, m, bn), jnp.float32)],
+        interpret=interpret,
+    )(w_tab, b_tab, perms, X, G, seed, scal)
+    return tuple(out)

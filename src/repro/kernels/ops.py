@@ -13,7 +13,9 @@ import jax.numpy as jnp
 
 from .flash_attention import flash_attention
 from .gossip import (gossip_update, guarded_gossip_update,
-                     masked_gossip_update, masked_gossip_update_krng)
+                     masked_gossip_update, masked_gossip_update_krng,
+                     ring_gossip_update, ring_obfuscate_gossip,
+                     ring_obfuscate_gossip_krng)
 from .obfuscate import obfuscate_update, obfuscate_update_krng
 from .runtime import (default_interpret, default_kernel_rng,
                       default_use_pallas, resolve_kernel_rng)
@@ -26,6 +28,8 @@ __all__ = ["flash_attention", "gossip_update", "masked_gossip_update",
            "obfuscate_update",
            "obfuscate_update_krng", "ssd_intra_chunk", "obfuscate_tree",
            "gossip_tree", "fused_pdsgd_tree", "sharded_pdsgd_tree",
+           "ring_gossip_update", "ring_obfuscate_gossip",
+           "ring_obfuscate_gossip_krng", "ring_pdsgd_tree",
            "default_interpret", "default_use_pallas", "default_kernel_rng"]
 
 
@@ -211,6 +215,75 @@ def fused_pdsgd_tree(W: jax.Array, B: jax.Array, x_tree: Pytree,
     ncols = sum(sizes)
     flats = {"x": x_flat[:, :ncols].astype(jnp.float32),
              "u": u_flat[:, :ncols].astype(jnp.float32)}
+    return out_tree, flats
+
+
+def ring_pdsgd_tree(w_tab: jax.Array, b_tab: jax.Array, perms: jax.Array,
+                    x_tree: Pytree, g_tree: Pytree, bits_tree: Pytree,
+                    lam_bar,
+                    interpret: bool | None = None,
+                    observe: bool = False,
+                    kernel_rng: bool | None = None,
+                    seed: jax.Array | None = None) -> Pytree:
+    """Eq. (4) through the ring-scheduled fused kernel, one flattened pass.
+
+    The ring counterpart of `fused_pdsgd_tree`: instead of dense (m, m)
+    W/B matmuls, the update is driven by per-direction tables
+    (``w_tab``/``b_tab``: (m, 1+ndirs); ``perms``: (ndirs, m, m) 0/1
+    shifts from `dist.collectives.perm_stack`) and
+    `gossip.ring_obfuscate_gossip` computes Λ-draw + obfuscate + staged
+    ring in a single pallas_call — each direction's v tiles are built in
+    the double-buffered VMEM slot while the previous direction's shift is
+    consumed.  Link dropout arrives as zeroed table entries (see
+    `dist.collectives.mask_b_draws` / `directional_keep`), keeping this
+    the same traced program every step.
+
+    ``observe=True`` returns ``(out_tree, {"x", "u", "v"})`` where ``v``
+    is the kernel's (ndirs, m, D) staged wire stream — the exact buffers
+    a torus link would carry, so the privacy-audit tap records what this
+    path actually transmitted, not an eager re-derivation.
+
+    ``kernel_rng``/``seed`` mirror the `fused_pdsgd_tree` contract: an
+    explicit (2,) seed with the knob on switches the Λ-draw to the
+    in-VMEM TPU PRNG (`ring_obfuscate_gossip_krng`) and ``bits_tree`` is
+    ignored.
+    """
+    use_krng = resolve_kernel_rng(kernel_rng) and seed is not None
+    if kernel_rng and seed is None:
+        raise ValueError("kernel_rng=True needs a (2,) seed "
+                         "(derive from the step's Lambda key)")
+    x_flat, sizes, leaves = _flatten_concat(x_tree)
+    g_flat, _, _ = _flatten_concat(g_tree)
+    x_flat, pad = _pad_cols(x_flat, 512)
+    g_flat, _ = _pad_cols(g_flat, 512)
+    if use_krng:
+        res = ring_obfuscate_gossip_krng(w_tab, b_tab, perms, x_flat,
+                                         g_flat, seed, lam_bar,
+                                         capture=observe,
+                                         interpret=interpret)
+        out = res[0]
+        flats = {"v": res[2], "u": res[3]} if observe else None
+    else:
+        bits_flat, _, _ = _flatten_concat(bits_tree)
+        bits_flat, _ = _pad_cols(bits_flat, 512)
+        res = ring_obfuscate_gossip(w_tab, b_tab, perms, x_flat, g_flat,
+                                    bits_flat, lam_bar, capture=observe,
+                                    interpret=interpret)
+        if observe:
+            out, v, u = res
+            flats = {"v": v, "u": u}
+        else:
+            out = res
+            flats = None
+    if pad:
+        out = out[:, :-pad]
+    out_tree = _unflatten(out, sizes, leaves, x_tree)
+    if not observe:
+        return out_tree
+    ncols = sum(sizes)
+    flats = {"x": x_flat[:, :ncols].astype(jnp.float32),
+             "u": flats["u"][:, :ncols].astype(jnp.float32),
+             "v": flats["v"][:, :, :ncols].astype(jnp.float32)}
     return out_tree, flats
 
 

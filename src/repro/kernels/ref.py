@@ -33,6 +33,40 @@ def gossip_ref(W: jax.Array, B: jax.Array, X: jax.Array,
     return out.astype(X.dtype)
 
 
+def ring_gossip_ref(w_tab: jax.Array, b_tab: jax.Array, perms: jax.Array,
+                    X: jax.Array, U: jax.Array):
+    """Staged-ring oracle for `ring_gossip_update`: per-direction v_d
+    staging followed by 0/1-permutation shifts, accumulated self-first
+    then directions in order.  Written so that ``jax.jit(ring_gossip_ref)``
+    is bit-identical to the Pallas kernel (same op sequence, so XLA's FMA
+    contraction applies identically); the eager call matches to ~1 ulp.
+    Returns ``(out, v)`` with v the (ndirs, m, n) staged wire stream."""
+    x = X.astype(jnp.float32)
+    u = U.astype(jnp.float32)
+    w = w_tab.astype(jnp.float32)
+    b = b_tab.astype(jnp.float32)
+    perms = perms.astype(jnp.float32)
+    ndirs = perms.shape[0]
+    out = w[:, 0:1] * x - b[:, 0:1] * u
+    vs = [w[:, d + 1:d + 2] * x - b[:, d + 1:d + 2] * u
+          for d in range(ndirs)]
+    for d in range(ndirs):
+        out = out + jnp.einsum("ij,jn->in", perms[d], vs[d])
+    return out.astype(X.dtype), jnp.stack(vs)
+
+
+def ring_obfuscate_gossip_ref(w_tab: jax.Array, b_tab: jax.Array,
+                              perms: jax.Array, X: jax.Array, G: jax.Array,
+                              bits: jax.Array, lam_bar):
+    """Fused oracle for `ring_obfuscate_gossip`: Λ-draw from `bits` (same
+    mantissa math as `obfuscate_ref`), then the staged ring.  Returns
+    ``(out, v, u)``; jit it for bitwise kernel parity."""
+    lam = (2.0 * jnp.asarray(lam_bar, jnp.float32)) * bits_to_uniform(bits)
+    u = lam * G.astype(jnp.float32)
+    out, v = ring_gossip_ref(w_tab, b_tab, perms, X, u)
+    return out, v, u
+
+
 def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
                         causal: bool = True,
                         window: int | None = None) -> jax.Array:

@@ -175,6 +175,15 @@ def build_multihost_parser() -> argparse.ArgumentParser:
                    help="step at which --chaos-kill-rank dies")
     p.add_argument("--timeout", type=float, default=120.0,
                    help="socket/rendezvous timeout in seconds")
+    p.add_argument("--frames-ahead", type=int, default=0,
+                   help="0: blocking SocketTransport (lockstep exchange); "
+                        ">0: PipelinedSocketTransport that stages frames "
+                        "lazily, sends from a background thread, and lets "
+                        "this rank run up to N steps ahead of its slowest "
+                        "live peer")
+    p.add_argument("--outbox-frames", type=int, default=64,
+                   help="bounded send-queue depth for the pipelined "
+                        "transport (backpressure when full)")
     # internal (launcher -> rank):
     p.add_argument("--rank", type=int, default=None, help=argparse.SUPPRESS)
     p.add_argument("--coord", default=None, help=argparse.SUPPRESS)
@@ -373,11 +382,19 @@ def run_rank(args) -> dict:
         # Per-run frame auth: every rank derives the same key from
         # (seed, generation), so a frame from another run — or from a
         # stale pre-rollback generation — fails its tag at the pump.
-        from ..dist.transport import derive_wire_secret
-        transport = SocketTransport(adjacency, rank, world, endpoints,
-                                    listen, timeout=args.timeout,
-                                    secret=derive_wire_secret(args.seed,
-                                                              gen))
+        from ..dist.transport import PipelinedSocketTransport, \
+            derive_wire_secret
+        secret = derive_wire_secret(args.seed, gen)
+        if args.frames_ahead > 0:
+            transport = PipelinedSocketTransport(
+                adjacency, rank, world, endpoints, listen,
+                timeout=args.timeout, secret=secret,
+                outbox_frames=args.outbox_frames,
+                frames_ahead=args.frames_ahead)
+        else:
+            transport = SocketTransport(adjacency, rank, world, endpoints,
+                                        listen, timeout=args.timeout,
+                                        secret=secret)
     else:
         transport = InProcessTransport(adjacency)
 
@@ -449,6 +466,8 @@ def run_rank(args) -> dict:
     tap_steps: list[int] = []
     nonfinite = 0
     losses = np.zeros(L, np.float32)
+    compute_s = 0.0  # local fwd/grad/obfuscate wall time
+    comm_s = 0.0     # wall time inside transport.exchange
     t0 = time.monotonic()
     k = start
     try:
@@ -490,6 +509,7 @@ def run_rank(args) -> dict:
             u = np.empty_like(x)
             sk_lam = jax.random.fold_in(lam_root, k)
             kj = jnp.asarray(k, jnp.int32)
+            tc = time.monotonic()
             for l in range(L):
                 p_j = unflatten_one(x[l], template)
                 b_j = {name: leaf[l] for name, leaf in batch.items()}
@@ -498,8 +518,11 @@ def run_rank(args) -> dict:
                                    sk_lam)
                 losses[l] = float(loss)
                 u[l] = flatten_one(u_tree)
+            tx = time.monotonic()
+            compute_s += tx - tc
             out = transport.exchange(x, u, W, B, step=k,
                                      capture=args.wiretap)
+            comm_s += time.monotonic() - tx
             if args.wiretap:
                 out, cols = out
                 taps.append(cols)
@@ -534,15 +557,27 @@ def run_rank(args) -> dict:
     steps_run = max(0, args.steps - start)
     us_per_step = ((time.monotonic() - t0) / steps_run * 1e6
                    if steps_run else 0.0)
+    # Transport-level counters (zeros for InProcessTransport): how long
+    # this rank sat in/waiting on the wire vs. computing locally.
+    comm = {
+        "transport": type(transport).__name__,
+        "steps": steps_run,
+        "compute_s": round(compute_s, 4),
+        "comm_s": round(comm_s, 4),
+        "comm_wait_s": round(float(getattr(transport, "comm_wait_s",
+                                           0.0)), 4),
+        "drops": int(getattr(transport, "drops", 0)),
+        "tag_failures": int(getattr(transport, "tag_failures", 0)),
+    }
     if root:
         if args.wiretap and taps:
             np.savez(os.path.join(host_dir(root, rank), "wiretap.npz"),
                      v=np.stack(taps),
                      steps=np.asarray(tap_steps, np.int64))
-        if fault_log:
+        if fault_log or isinstance(transport, SocketTransport):
             ckpt_io._atomic_write_json(
                 os.path.join(host_dir(root, rank), "fault_log.json"),
-                {"events": fault_log})
+                {"events": fault_log, "comm": comm})
     summary = {
         "rank": rank, "final_step": int(max(start, args.steps)),
         "finite": bool(np.isfinite(x).all()),
@@ -552,6 +587,7 @@ def run_rank(args) -> dict:
         "dead_seen": sorted(dead_ranks),
         "generation": gen,
         "us_per_step": round(us_per_step, 1),
+        "comm": comm,
     }
     print(json.dumps({"rank_summary": summary}), flush=True)
     if coord is not None:

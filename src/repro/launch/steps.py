@@ -78,7 +78,9 @@ def make_train_step(bundle: ModelBundle, mesh,
                     mixing: MixingProcess | None = None,
                     observer=None,
                     faults=None,
-                    sharded: bool = False):
+                    sharded: bool = False,
+                    ring_schedule: str = "pipelined",
+                    ring_fused: bool = False):
     """Returns train_step(params, batch, key, step) -> (params, loss).
 
     lam_bar follows the paper's 1/k schedule from `lam_base`; the random
@@ -136,6 +138,14 @@ def make_train_step(bundle: ModelBundle, mesh,
     sees IS what crossed the links; capture therefore requires the
     replicated-leaf layout (``gossip="ring"`` with per-leaf sharding
     specs is refused).  pdsgd and dsgd only — the audited scenarios.
+
+    ``ring_schedule`` / ``ring_fused`` forward to
+    `collectives.torus_gossip_pdsgd`: the schedule picks the staged vs
+    software-pipelined ppermute loop (bit-identical results — "pipelined",
+    the default, overlaps direction d+1's v compute with direction d's
+    shift), and ``ring_fused=True`` routes the single-host fallback
+    through the Pallas ring kernel (`kernels.ring_gossip_update`; refused
+    with faults — the guarded path stays dense).
 
     ``faults`` (a `faults.FaultProcess`, pdsgd only) injects agent
     crashes into BOTH gossip schedules: the coupling composes through
@@ -329,7 +339,8 @@ def make_train_step(bundle: ModelBundle, mesh,
                     mesh, params, u, b, agent_axes=axes,
                     leaf_specs=ring_specs, W=W_k,
                     capture=observer is not None,
-                    finite_guard=faults is not None)
+                    finite_guard=faults is not None,
+                    schedule=ring_schedule, fused=ring_fused)
                 if observer is not None:
                     from ..privacy import observe as O
                     new_params, V = out

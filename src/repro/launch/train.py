@@ -98,6 +98,13 @@ def build_parser() -> argparse.ArgumentParser:
                         "union graph of the last N realized supports is "
                         "connected (default: 8 when the topology is "
                         "time-varying, off otherwise; 0 disables)")
+    p.add_argument("--kernel-layout", default="auto",
+                   choices=["auto", "concat", "leafwise", "ring"],
+                   help="fused-kernel buffer layout: auto picks leafwise "
+                        "when sharded else concat; 'ring' forces the "
+                        "overlapped ring kernel (Lambda-draw + obfuscate "
+                        "+ per-direction v staging fused in one "
+                        "pallas_call; requires --topology ring)")
     p.add_argument("--algorithm", default="pdsgd",
                    choices=["pdsgd", "dsgd", "dsgt", "dp_dsgd"])
     p.add_argument("--grad-clip-kappa", type=float, default=None,
@@ -302,16 +309,31 @@ def run_training(args, mesh=None) -> dict:
     mixing = build_mixing(args)
     faults = build_faults(args)
     sched = warmup_harmonic(args.lr, hold=args.warmup_hold)
+    kernel_layout = args.kernel_layout
+    use_pallas = None
+    if kernel_layout == "auto":
+        kernel_layout = "leafwise" if sharded else "concat"
+    elif kernel_layout == "ring":
+        # The ring tables need the coupling support inside the (m, 1)
+        # single-ring torus adjacency; other graphs keep the dense layouts.
+        if args.topology != "ring":
+            raise SystemExit("--kernel-layout ring requires "
+                             "--topology ring")
+        if sharded:
+            raise SystemExit("--kernel-layout ring flattens each agent's "
+                             "leaves; it does not compose with --mesh-fsdp"
+                             "/--mesh-tensor sharding")
+        use_pallas = True  # the ring layout only exists as a kernel path
     step = make_decentralized_step(bundle.loss_fn, mixing, sched,
                                    algorithm=args.algorithm,
                                    sigma_dp=args.sigma_dp,
                                    grad_clip=args.grad_clip_kappa,
                                    faults=faults,
                                    nan_policy=args.nan_policy,
+                                   use_pallas=use_pallas,
                                    spmd_axis_name="data" if sharded
                                    else None,
-                                   kernel_layout="leafwise" if sharded
-                                   else "concat",
+                                   kernel_layout=kernel_layout,
                                    mesh=mesh if sharded else None,
                                    leaf_specs=leaf_specs)
 

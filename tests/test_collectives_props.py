@@ -1,0 +1,134 @@
+"""Property tests for the ring-gossip table algebra
+(`repro.dist.collectives`).
+
+The ring path never materializes (W, B^k); these properties pin the
+table <-> dense correspondence it relies on: `dense_coupling` and
+`rows_from_dense` are exact inverses (entries copied, never recombined),
+`directional_weights` splits a realized W_k into tables that rebuild it
+bit-for-bit on the torus support, `mask_b_draws` renormalizes onto the
+realized neighbor set (dropped directions EXACTLY zero), and a dropped
+edge puts an exactly-zero v_ij on the wire — the invariant the paper's
+privacy argument needs from a time-varying topology.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from _hypothesis_compat import given, settings, st
+
+from repro.dist import collectives as C
+
+TORI = [(8, 1), (4, 2), (3, 1), (2, 2)]
+
+
+def _draws(seed, n_data, n_pod):
+    m = n_data * n_pod
+    return C.sample_b_draws(jax.random.key(seed), m, n_data, n_pod)
+
+
+@settings(max_examples=12, deadline=None)
+@given(ti=st.integers(0, len(TORI) - 1), seed=st.integers(0, 1000))
+def test_rows_from_dense_roundtrips_dense_coupling(ti, seed):
+    """rows -> dense B -> rows is the identity, exactly (each entry is a
+    copy), and the dense B is column stochastic on the torus support."""
+    n_data, n_pod = TORI[ti]
+    b = _draws(seed, n_data, n_pod)
+    _, B = C.dense_coupling(b, n_data, n_pod)
+    back = C.rows_from_dense(B, n_data, n_pod)
+    assert np.array_equal(np.asarray(back), np.asarray(b))
+    np.testing.assert_allclose(np.asarray(B).sum(axis=0),
+                               np.ones(B.shape[0]), atol=1e-6)
+
+
+@settings(max_examples=12, deadline=None)
+@given(ti=st.integers(0, len(TORI) - 1), seed=st.integers(0, 1000))
+def test_directional_weights_rebuild_dense_w(ti, seed):
+    """Splitting a torus-supported W_k into (w_self, w_dir) tables and
+    scattering them back through the permutation stack reproduces W_k
+    bit-for-bit — the ring path applies the same weights the dense path
+    multiplies with."""
+    n_data, n_pod = TORI[ti]
+    m = n_data * n_pod
+    b = _draws(seed, n_data, n_pod)
+    W, _ = C.dense_coupling(b, n_data, n_pod)
+    tabs = C.directional_weights(W, n_data, n_pod)
+    perms = np.asarray(C.perm_stack(n_data, n_pod))
+    rebuilt = np.eye(m, dtype=np.float32) * np.asarray(tabs["w_self"])
+    for d in range(perms.shape[0]):
+        rebuilt = rebuilt + perms[d] * np.asarray(tabs["w_dir"])[None, :, d]
+    assert np.array_equal(rebuilt, np.asarray(W))
+
+
+@settings(max_examples=12, deadline=None)
+@given(ti=st.integers(0, len(TORI) - 1), seed=st.integers(0, 1000),
+       drop=st.integers(0, 3))
+def test_mask_b_draws_renormalizes_exactly(ti, seed, drop):
+    """Dropped directions get weight EXACTLY zero, survivors keep their
+    relative proportions, and every row re-sums to one."""
+    n_data, n_pod = TORI[ti]
+    m = n_data * n_pod
+    b = _draws(seed, n_data, n_pod)
+    ndirs = b.shape[1] - 1
+    keep = np.ones((m, ndirs), np.float32)
+    keep[::2, drop % ndirs] = 0.0
+    bm = np.asarray(C.mask_b_draws(b, jnp.asarray(keep)))
+    assert np.all(bm[::2, 1 + drop % ndirs] == 0.0)
+    np.testing.assert_allclose(bm.sum(axis=1), np.ones(m), atol=1e-6)
+    # survivors: same proportions as the unmasked draw (renormalization
+    # is a single row scale)
+    bu = np.asarray(b)
+    for j in range(0, m, 2):
+        cols = [0] + [1 + d for d in range(ndirs) if d != drop % ndirs]
+        got = bm[j, cols]
+        ref = bu[j, cols] / bu[j, cols].sum()
+        np.testing.assert_allclose(got, ref, atol=1e-6)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 1000), drop=st.integers(0, 1))
+def test_dropped_edge_puts_exactly_zero_on_wire(seed, drop):
+    """A severed link's v_ij is EXACTLY zero, not merely small: both the
+    W_k and B^k factors vanish on the dropped edge, so nothing about
+    (x_j, u_j) leaves on it.  Checked against the dense wire-message
+    oracle AND the fused ring kernel's staged buffers."""
+    from repro.core.mixing import metropolis_from_mask
+    from repro.kernels import ring_gossip_update
+    from repro.privacy.observe import wire_messages
+    n_data, n_pod = 8, 1
+    m = n_data * n_pod
+    b = _draws(seed, n_data, n_pod)
+    ndirs = b.shape[1] - 1
+    perms = np.asarray(C.perm_stack(n_data, n_pod))
+    # sever direction `drop` out of every even-indexed agent — and, for
+    # symmetry of the realized support, the opposite direction into it
+    keep = np.ones((m, ndirs), np.float32)
+    for j in range(0, m, 2):
+        keep[j, drop] = 0.0
+        i = int(np.flatnonzero(perms[drop][:, j])[0])
+        keep[i, 1 - drop] = 0.0  # i's edge back toward j
+    support = np.eye(m, dtype=np.float32)
+    for d in range(ndirs):
+        support += perms[d] * keep[None, :, d]
+    W = np.asarray(
+        metropolis_from_mask(jnp.asarray(support
+                                         - np.eye(m, dtype=np.float32))),
+        np.float32)
+    bm = C.mask_b_draws(b, jnp.asarray(keep))
+    Wd, Bd = C.dense_coupling(bm, n_data, n_pod, W=jnp.asarray(W))
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((m, 512)).astype(np.float32))
+    u = jnp.asarray(rng.standard_normal((m, 512)).astype(np.float32))
+    V = np.asarray(wire_messages(Wd, Bd, x, u))
+    off = (1 - np.eye(m)) > 0
+    dead = (np.asarray(support) == 0) & off
+    assert np.all(V[dead] == 0.0)
+    alivev = (np.asarray(support) > 0) & off
+    assert np.any(V[alivev] != 0.0)
+    # the ring kernel's staged buffers agree: scatter v_dir to (m, m)
+    tabs = C.directional_weights(jnp.asarray(Wd), n_data, n_pod)
+    w_tab = jnp.concatenate([np.asarray(tabs["w_self"])[:, None],
+                             np.asarray(tabs["w_dir"])], axis=1)
+    _, v_dir = ring_gossip_update(w_tab, bm, jnp.asarray(perms), x, u,
+                                  capture=True)
+    Vk = sum(perms[d][:, :, None] * np.asarray(v_dir)[d][None]
+             for d in range(ndirs))
+    assert np.all(Vk[dead] == 0.0)

@@ -233,3 +233,162 @@ def test_masked_gossip_krng_replay_parity_tpu():
     _, mask2 = masked_gossip_update_krng(seed, 0.6, adj, B, X, U,
                                          block_n=512)
     assert np.array_equal(mask_np, np.asarray(mask2))
+
+
+# -- fused ring gossip (overlapped obfuscate + staged shifts) -------------
+
+
+def _ring_tables(n_data, n_pod, n, seed=0):
+    """(w_tab, b_tab, perms, X, U) on the regular torus — w_tab repeats
+    the Metropolis self/edge weights into the (m, 1+ndirs) table form."""
+    from repro.dist import collectives as C
+    m = n_data * n_pod
+    kb, kx, ku = jax.random.split(jax.random.key(seed), 3)
+    b = C.sample_b_draws(kb, m, n_data, n_pod)
+    ndirs = b.shape[1] - 1
+    wts = C.torus_weights(n_data, n_pod)
+    w_tab = jnp.concatenate(
+        [jnp.full((m, 1), wts["w_self"], jnp.float32),
+         jnp.full((m, ndirs), wts["w_edge"], jnp.float32)], axis=1)
+    perms = C.perm_stack(n_data, n_pod)
+    X = jax.random.normal(kx, (m, n), jnp.float32)
+    U = jax.random.normal(ku, (m, n), jnp.float32)
+    return w_tab, b, perms, X, U
+
+
+@pytest.mark.parametrize("n_data,n_pod,n", [(8, 1, 512), (4, 2, 1024),
+                                            (3, 1, 512)])
+def test_ring_gossip_bitwise_vs_jitted_oracle(n_data, n_pod, n):
+    """The fused ring kernel IS the jitted staged-ring jnp program, bit
+    for bit (XLA:CPU contracts w*x - b*u into an FMA identically in
+    both), and capture=True must not perturb the update output."""
+    from repro.kernels import ring_gossip_update
+    w_tab, b, perms, X, U = _ring_tables(n_data, n_pod, n)
+    out = ring_gossip_update(w_tab, b, perms, X, U)
+    out_c, v_c = ring_gossip_update(w_tab, b, perms, X, U, capture=True)
+    ref_out, ref_v = jax.jit(ref.ring_gossip_ref)(w_tab, b, perms, X, U)
+    assert np.array_equal(np.asarray(out), np.asarray(ref_out))
+    assert np.array_equal(np.asarray(out_c), np.asarray(ref_out))
+    assert np.array_equal(np.asarray(v_c), np.asarray(ref_v))
+
+
+@pytest.mark.parametrize("n_data,n_pod", [(8, 1), (4, 2)])
+def test_ring_gossip_matches_dense_coupling(n_data, n_pod):
+    """Ring tables and the dense (W, B) they materialize agree: the
+    kernel output is W X - B U up to FMA reassociation."""
+    from repro.dist import collectives as C
+    w_tab, b, perms, X, U = _ring_tables(n_data, n_pod, 512, seed=3)
+    out = np.asarray(jax.block_until_ready(
+        __import__("repro.kernels", fromlist=["ring_gossip_update"])
+        .ring_gossip_update(w_tab, b, perms, X, U)))
+    W, B = C.dense_coupling(b, n_data, n_pod)
+    expect = np.asarray(W) @ np.asarray(X) - np.asarray(B) @ np.asarray(U)
+    np.testing.assert_allclose(out, expect, atol=1e-5, rtol=1e-5)
+
+
+def test_ring_obfuscate_bitwise_and_lambda_range():
+    """ring_obfuscate_gossip == its jitted oracle bitwise on (out, v, u);
+    every realized Λ_j^k draw lies in [0, 2 lam_bar) (Sec. III)."""
+    from repro.kernels import ring_obfuscate_gossip
+    lam = 0.05
+    w_tab, b, perms, X, G = _ring_tables(8, 1, 512, seed=5)
+    m, n = X.shape
+    bits = jax.random.bits(jax.random.key(9), (m, n), dtype=jnp.uint32)
+    out = ring_obfuscate_gossip(w_tab, b, perms, X, G, bits, lam)
+    out_c, v, u = ring_obfuscate_gossip(w_tab, b, perms, X, G, bits, lam,
+                                        capture=True)
+    r_out, r_v, r_u = jax.jit(ref.ring_obfuscate_gossip_ref)(
+        w_tab, b, perms, X, G, bits, lam)
+    assert np.array_equal(np.asarray(out), np.asarray(r_out))
+    assert np.array_equal(np.asarray(out_c), np.asarray(r_out))
+    assert np.array_equal(np.asarray(v), np.asarray(r_v))
+    assert np.array_equal(np.asarray(u), np.asarray(r_u))
+    lam_real = np.asarray(u) / np.where(np.abs(np.asarray(G)) < 1e-6, 1e9,
+                                        np.asarray(G))
+    assert float(lam_real.max()) <= 2 * lam + 1e-6
+    assert float(lam_real.min()) >= -1e-6
+
+
+def test_ring_dropped_direction_v_exactly_zero():
+    """A dropped link arrives as zeroed table entries; the staged buffer
+    for that direction must be EXACTLY zero — a nonzero residue would be
+    information leaving on a link the realization severed."""
+    from repro.dist import collectives as C
+    from repro.kernels import ring_gossip_update
+    w_tab, b, perms, X, U = _ring_tables(8, 1, 512, seed=7)
+    m, ndirs = X.shape[0], b.shape[1] - 1
+    keep = jnp.ones((m, ndirs), jnp.float32).at[:, 0].set(0.0)
+    b_m = C.mask_b_draws(b, keep)
+    w_m = (w_tab.at[:, 0].add(w_tab[:, 1])).at[:, 1].set(0.0)
+    _, v = ring_gossip_update(w_m, b_m, perms, X, U, capture=True)
+    v = np.asarray(v)
+    assert np.all(v[0] == 0.0)
+    assert np.any(v[1] != 0.0)
+
+
+@pytest.mark.skipif(jax.default_backend() == "tpu",
+                    reason="CPU-only gate: TPU has the lowering")
+def test_ring_krng_refuses_cpu_lowering():
+    """Same loud-failure contract as the other krng kernels: no Mosaic
+    PRNG rule off-TPU, so the in-kernel ring Λ draw must raise rather
+    than realize a different noise stream than the run requested."""
+    from repro.kernels import ring_obfuscate_gossip_krng
+    w_tab, b, perms, X, G = _ring_tables(8, 1, 512, seed=11)
+    with pytest.raises(NotImplementedError):
+        jax.block_until_ready(ring_obfuscate_gossip_krng(
+            w_tab, b, perms, X, G, jnp.asarray([3, 9], jnp.int32), 0.1,
+            interpret=True))
+
+
+def test_ring_pdsgd_tree_matches_flat_kernel():
+    """Tree wrapper == flat kernel on the concatenated leaves, bitwise,
+    and observe=True taps the identical v/u stream without perturbing
+    the params output."""
+    from repro.kernels import ring_obfuscate_gossip, ring_pdsgd_tree
+    from repro.kernels.ops import _flatten_concat
+    w_tab, b, perms, _, _ = _ring_tables(8, 1, 512, seed=13)
+    m = 8
+    kx, kg = jax.random.split(jax.random.key(15))
+    x_tree = {"a": jax.random.normal(kx, (m, 20, 10)),
+              "c": jax.random.normal(kg, (m, 56))}
+    g_tree = jax.tree.map(lambda t: t * 0.1, x_tree)
+    bits_tree = jax.tree.map(
+        lambda t: jax.random.bits(jax.random.key(17), t.shape[:1]
+                                  + (int(np.prod(t.shape[1:])),),
+                                  dtype=jnp.uint32).reshape(t.shape), x_tree)
+    out_tree = ring_pdsgd_tree(w_tab, b, perms, x_tree, g_tree, bits_tree,
+                               0.1, interpret=True)
+    out_obs, flats = ring_pdsgd_tree(w_tab, b, perms, x_tree, g_tree,
+                                     bits_tree, 0.1, interpret=True,
+                                     observe=True)
+    x_flat, _, _ = _flatten_concat(x_tree)
+    g_flat, _, _ = _flatten_concat(g_tree)
+    bits_flat, _, _ = _flatten_concat(bits_tree)
+    ncols = x_flat.shape[1]
+    pad = (-ncols) % 512
+    xp = jnp.pad(x_flat, ((0, 0), (0, pad)))
+    gp = jnp.pad(g_flat, ((0, 0), (0, pad)))
+    bp = jnp.pad(bits_flat.view(jnp.uint32), ((0, 0), (0, pad)))
+    flat_out, flat_v, flat_u = ring_obfuscate_gossip(
+        w_tab, b, perms, xp, gp, bp, 0.1, capture=True, interpret=True)
+    for name in x_tree:
+        got = _flatten_concat({name: out_tree[name]})[0]
+        obs = _flatten_concat({name: out_obs[name]})[0]
+        assert np.array_equal(np.asarray(got), np.asarray(obs))
+    all_out = _flatten_concat(out_tree)[0]
+    assert np.array_equal(np.asarray(all_out),
+                          np.asarray(flat_out[:, :ncols]))
+    assert np.array_equal(np.asarray(flats["v"]),
+                          np.asarray(flat_v[:, :, :ncols]))
+    assert np.array_equal(np.asarray(flats["u"]),
+                          np.asarray(flat_u[:, :ncols]))
+
+
+def test_ring_pdsgd_tree_kernel_rng_requires_seed():
+    from repro.kernels import ring_pdsgd_tree
+    w_tab, b, perms, X, G = _ring_tables(8, 1, 512, seed=19)
+    x = {"a": X}
+    g = {"a": G}
+    with pytest.raises(ValueError, match="seed"):
+        ring_pdsgd_tree(w_tab, b, perms, x, g, None, 0.1, kernel_rng=True,
+                        interpret=True)

@@ -124,6 +124,34 @@ def test_kill_rank_then_resume_completes(tmp_path):
     assert np.isfinite(x).all()
 
 
+def test_pipelined_transport_bit_matches_blocking(tmp_path):
+    """--frames-ahead > 0 swaps in PipelinedSocketTransport; the final
+    shard digests must equal the blocking run's exactly (the paper's
+    recursion is synchronous — the pipeline only moves WORK off the
+    critical path, never reorders the math), and every rank exports the
+    comm counter block to its summary and fault_log.json."""
+    rb = str(tmp_path / "mh_blk")
+    rp = str(tmp_path / "mh_pipe")
+    ob = mh.launch(_args(["--world", "2"], rb))
+    op = mh.launch(_args(["--world", "2", "--frames-ahead", "2",
+                          "--outbox-frames", "8"], rp))
+    assert ob["ok"] and op["ok"]
+    for r in range(2):
+        sb, sp = ob["ranks"][str(r)], op["ranks"][str(r)]
+        assert sp["x_sha256"] == sb["x_sha256"]
+        assert sb["comm"]["transport"] == "SocketTransport"
+        assert sp["comm"]["transport"] == "PipelinedSocketTransport"
+        for s in (sb, sp):
+            assert s["comm"]["drops"] == 0
+            assert s["comm"]["tag_failures"] == 0
+            assert s["comm"]["comm_wait_s"] >= 0.0
+        log = json.load(open(os.path.join(mh.host_dir(rp, r),
+                                          "fault_log.json")))
+        assert log["events"] == []
+        assert log["comm"]["transport"] == "PipelinedSocketTransport"
+    assert np.array_equal(_load_x(rb, 2, 4), _load_x(rp, 2, 4))
+
+
 def test_quorum_step_intersects_shards(tmp_path):
     root = str(tmp_path)
     like = {"x": np.zeros((1, 3), np.float32)}

@@ -119,11 +119,12 @@ def test_neighbor_lists_rejects_asymmetric():
 
 
 def _socket_world(world, adjacency, fn, audit=False, timeout=30.0,
-                  secrets=None):
+                  secrets=None, cls=None, tkw=None):
     """Run `fn(transport, rank)` on one thread per rank over real TCP;
     returns per-rank results, re-raising the first worker error.
     ``secrets``: one shared key (bytes) or a per-rank dict — a dict with
-    disagreeing keys is the tamper scenario."""
+    disagreeing keys is the tamper scenario.  ``cls``/``tkw`` select the
+    transport class (default SocketTransport) and extra ctor kwargs."""
     socks, endpoints = [], {}
     for r in range(world):
         s = socket.socket()
@@ -132,13 +133,14 @@ def _socket_world(world, adjacency, fn, audit=False, timeout=30.0,
         socks.append(s)
         endpoints[r] = ("127.0.0.1", s.getsockname()[1])
     results, errs = [None] * world, []
+    cls = cls or T.SocketTransport
 
     def run(r):
         try:
             sec = (secrets.get(r) if isinstance(secrets, dict) else secrets)
-            tr = T.SocketTransport(adjacency, r, world, endpoints, socks[r],
-                                   timeout=timeout, audit_wire=audit,
-                                   secret=sec)
+            tr = cls(adjacency, r, world, endpoints, socks[r],
+                     timeout=timeout, audit_wire=audit,
+                     secret=sec, **(tkw or {}))
             try:
                 results[r] = fn(tr, r)
             finally:
@@ -506,3 +508,160 @@ def test_shard_map_transport_matches_inproc_multidevice():
     for name in ("ring", "torus"):
         assert res[name]["out_bit"] is True, res
         assert res[name]["cap_bit"] is True, res
+
+
+# -- pipelined socket transport -------------------------------------------
+
+
+def test_pipelined_ctor_validates_knobs():
+    A = _ring(4)
+    with pytest.raises(ValueError, match="outbox_frames"):
+        T.PipelinedSocketTransport(A, 0, 1, {}, None, outbox_frames=0)
+    with pytest.raises(ValueError, match="frames_ahead"):
+        T.PipelinedSocketTransport(A, 0, 1, {}, None, frames_ahead=-1)
+
+
+@pytest.mark.parametrize("dropout", [0.0, 0.3])
+@pytest.mark.parametrize("frames_ahead", [0, 2])
+def test_pipelined_matches_blocking_bitwise(dropout, frames_ahead):
+    """The pipelined transport walks the EXACT trajectory of the blocking
+    one — outputs and captures, static and dropout mixing — at lockstep
+    (frames_ahead=0, which must not deadlock at step 0) and with
+    runahead."""
+    m, D, steps = 4, 8, 4
+    top = make_topology("ring", m)
+    mixing = make_mixing(top, rate=dropout, seed=5)
+    A = (np.asarray(mixing.base_mask) > 0).astype(np.int64)
+    x_ref, caps_ref = _trajectory(lambda: T.InProcessTransport(A),
+                                  mixing, m, D, steps)
+
+    WBs = []
+    for k in range(steps):
+        W, support, _ = mixing.realize(jnp.asarray(k, jnp.int32))
+        B = sample_B(jax.random.fold_in(jax.random.key(3), k), support)
+        WBs.append((np.asarray(W, np.float32), np.asarray(B, np.float32)))
+    xs = np.random.default_rng(7).standard_normal((m, D)).astype(np.float32)
+
+    def u_at(k):
+        return np.stack([np.random.default_rng((11, k, a))
+                         .standard_normal(D).astype(np.float32)
+                         for a in range(m)])
+
+    def drive(tr, r):
+        lo = r * 2
+        xb = xs[lo:lo + 2].copy()
+        caps = []
+        for k in range(steps):
+            W, B = WBs[k]
+            xb, cap = tr.exchange(xb, u_at(k)[lo:lo + 2], W, B, step=k,
+                                  capture=True)
+            caps.append(cap)
+        return xb, caps, tr.drops, tr.comm_wait_s
+
+    results = _socket_world(2, A, drive, cls=T.PipelinedSocketTransport,
+                            tkw={"frames_ahead": frames_ahead})
+    x = np.concatenate([results[r][0] for r in range(2)])
+    assert np.array_equal(x, x_ref)
+    for k in range(steps):
+        merged = T.merge_captures([results[r][1][k] for r in range(2)])
+        assert np.array_equal(merged, caps_ref[k])
+    for _, _, drops, wait in results:
+        assert drops == 0
+        assert wait >= 0.0
+
+
+def test_pipelined_runahead_window():
+    """frames_ahead=3 lets a fast rank finish several steps while its
+    peer stalls — the slow peer's frames are buffered by step id and
+    consumed in order once it catches up (no drops, exact bits)."""
+    m, D, steps = 4, 8, 3
+    A = _ring(m)
+    rng = np.random.default_rng(21)
+    W, B = _coupling(rng, A)
+    x = rng.standard_normal((m, D)).astype(np.float32)
+    u = rng.standard_normal((m, D)).astype(np.float32)
+    ref_tr = T.InProcessTransport(A)
+    expect = x.copy()
+    for k in range(steps):
+        expect = ref_tr.exchange(expect, u, W, B, step=k)
+    import time as _time
+    done0 = threading.Event()
+
+    def drive(tr, r):
+        xb = x[r * 2:(r + 1) * 2].copy()
+        for k in range(steps):
+            if r == 1 and not done0.is_set():
+                # stall the peer: rank 0 must be able to run ahead and
+                # park its frames in rank 1's receive buffer
+                _time.sleep(0.3)
+            xb = tr.exchange(xb, u[r * 2:(r + 1) * 2], W, B, step=k)
+        if r == 0:
+            done0.set()
+        return xb, tr.drops
+
+    results = _socket_world(2, A, drive, cls=T.PipelinedSocketTransport,
+                            tkw={"frames_ahead": 3})
+    for r, (xb, drops) in enumerate(results):
+        assert drops == 0
+        assert np.array_equal(xb, expect[r * 2:(r + 1) * 2])
+
+
+@pytest.mark.parametrize("cls,tkw", [
+    (None, {}),
+    ("pipelined", {"frames_ahead": 2}),
+])
+def test_drop_accounting_dead_peer_exact(cls, tkw):
+    """Drop accounting regression (one counter, one owner): with the
+    peer rank dead, EVERY step's missing remote contributions are
+    counted — 2 cross-rank links on the 4-ring, 2 survivor steps, so
+    exactly 4 drops on both transport classes."""
+    m, D = 4, 5
+    A = _ring(m)
+    rng = np.random.default_rng(22)
+    W, B = _coupling(rng, A)
+    x = rng.standard_normal((m, D)).astype(np.float32)
+    u = rng.standard_normal((m, D)).astype(np.float32)
+    barrier = threading.Barrier(2, timeout=30)
+    cls = T.PipelinedSocketTransport if cls == "pipelined" else None
+
+    def drive(tr, r):
+        xb = x[r * 2:(r + 1) * 2].copy()
+        ub = u[r * 2:(r + 1) * 2]
+        xb = tr.exchange(xb, ub, W, B, step=0)
+        barrier.wait()
+        if r == 1:
+            return None  # transport closed on return -> peer sees EOF
+        for k in (1, 2):
+            xb = tr.exchange(xb, ub, W, B, step=k)
+            assert np.isfinite(xb).all()
+        assert 1 in tr.dead_ranks
+        return tr.drops
+
+    results = _socket_world(2, A, drive, timeout=5.0, cls=cls, tkw=tkw)
+    assert results[0] == 4
+
+
+def test_pipelined_backpressure_outbox_one():
+    """outbox_frames=1 (maximal backpressure) stays functional and
+    bit-exact — the send thread drains the queue one frame at a time."""
+    m, D, steps = 4, 8, 3
+    A = _chord(m)
+    rng = np.random.default_rng(23)
+    W, B = _coupling(rng, A)
+    x = rng.standard_normal((m, D)).astype(np.float32)
+    u = rng.standard_normal((m, D)).astype(np.float32)
+    ref_tr = T.InProcessTransport(A)
+    expect = x.copy()
+    for k in range(steps):
+        expect = ref_tr.exchange(expect, u, W, B, step=k)
+
+    def drive(tr, r):
+        xb = x[r * 2:(r + 1) * 2].copy()
+        for k in range(steps):
+            xb = tr.exchange(xb, u[r * 2:(r + 1) * 2], W, B, step=k)
+        return xb
+
+    results = _socket_world(2, A, drive, cls=T.PipelinedSocketTransport,
+                            tkw={"outbox_frames": 1})
+    for r, xb in enumerate(results):
+        assert np.array_equal(xb, expect[r * 2:(r + 1) * 2])
